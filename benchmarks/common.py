@@ -1,0 +1,62 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.protocol import (ASCIIConfig, fit, fit_ensemble_adaboost,
+                                 fit_single_agent_adaboost)
+from repro.core.transport import TransportLog, oracle_bits
+from repro.data.partition import train_test_split, vertical_split
+
+
+def split_dataset(ds, seed: int):
+    tr, te = train_test_split(seed, ds.X.shape[0])
+    Xs = vertical_split(ds.X, ds.splits)
+    return ([x[tr] for x in Xs], ds.classes[tr],
+            [x[te] for x in Xs], ds.classes[te])
+
+
+def acc(pred, classes) -> float:
+    return float(jnp.mean(pred == classes))
+
+
+def curve_vs_rounds(fitted, Xte, cte, max_rounds: int) -> list[float]:
+    """Test accuracy after each assistance round (Fig. 3/6 x-axis)."""
+    out = []
+    for t in range(max_rounds):
+        if t >= fitted.num_rounds:
+            out.append(out[-1] if out else float("nan"))
+            continue
+        out.append(acc(fitted.predict(Xte, max_round=t), cte))
+    return out
+
+
+def run_three_way(key, ds, learners, cfg: ASCIIConfig, seed: int,
+                  oracle_learner=None):
+    """ASCII vs Single (agent A only) vs Oracle (pulled data) — Fig. 3."""
+    Xtr, ctr, Xte, cte = split_dataset(ds, seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    ascii_fit = fit(k1, Xtr, ctr, learners, cfg)
+    single_fit = fit_single_agent_adaboost(k2, Xtr[0], ctr, learners[0], cfg)
+    oracle_learner = oracle_learner or learners[0]
+    oracle_fit = fit_single_agent_adaboost(
+        k3, jnp.concatenate(Xtr, 1), ctr, oracle_learner, cfg)
+    return {
+        "ascii": curve_vs_rounds(ascii_fit, Xte, cte, cfg.max_rounds),
+        "single": curve_vs_rounds(single_fit, [Xte[0]], cte, cfg.max_rounds),
+        "oracle": curve_vs_rounds(oracle_fit, [jnp.concatenate(Xte, 1)], cte,
+                                  cfg.max_rounds),
+    }
+
+
+def timed(fn, *args, reps: int = 1, **kw):
+    fn(*args, **kw)                      # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / reps * 1e6   # us

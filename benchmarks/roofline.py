@@ -1,0 +1,62 @@
+"""Roofline report: reads the dry-run artifacts (artifacts/dryrun/*.json)
+and prints the per-(arch x shape x mesh) three-term roofline table —
+compute / memory / collective seconds per step, dominant bottleneck, and
+the MODEL_FLOPS / HLO_FLOPS usefulness ratio.  EXPERIMENTS.md §Roofline is
+generated from this output."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                            "dryrun")
+
+
+def load(mesh_filter: str | None = None, tag: str = "") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, f"*{tag}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if "roofline" not in rec:
+            continue
+        if mesh_filter and rec.get("mesh") != mesh_filter:
+            continue
+        # variant tag = filename suffix beyond arch_shape_mesh (e.g. _ep_mb16)
+        stem = os.path.basename(path)[:-len(".json")]
+        base = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}"
+        rec["variant"] = stem[len(base):].lstrip("_") or "baseline"
+        rows.append(rec)
+    return rows
+
+
+def table(rows: list[dict]) -> list[str]:
+    out = ["arch,shape,mesh,variant,compute_s,memory_s,collective_s,"
+           "bottleneck,useful_ratio,temp_gb_adj"]
+    for r in rows:
+        rf = r["roofline"]
+        hlo_total = r["cost"].get("flops", 0.0) * r["n_chips"]
+        ratio = rf["model_flops"] / hlo_total if hlo_total else float("nan")
+        temp = r["memory"].get("temp_bytes_bf16_adj",
+                               r["memory"].get("temp_bytes", 0) // 2) / 1e9
+        out.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},"
+            f"{r.get('variant', 'baseline')},"
+            f"{rf['compute_s']:.3e},{rf['memory_s']:.3e},"
+            f"{rf['collective_s']:.3e},{rf['bottleneck'].replace('_s','')},"
+            f"{ratio:.2f},{temp:.2f}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    for line in table(load(args.mesh, args.tag)):
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark orchestrator — one section per paper table/figure plus the
+kernel and roofline reports.  Prints ``name,us_per_call,derived`` CSV lines
+per section.  Use --full for paper-scale replication counts."""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _section(name):
+    print(f"\n# === {name} ===", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes/replications (slow)")
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+
+    t0 = time.time()
+    _section("fig3_accuracy (ASCII vs Single vs Oracle)")
+    from benchmarks import fig3_accuracy
+    for r in fig3_accuracy.run(reps=5 if args.full else 2,
+                               rounds=10 if args.full else 6, quick=quick):
+        print(f"fig3_{r['dataset']}_{r['method']},"
+              f"{0:.0f},final_acc={r['final_acc']:.4f}")
+
+    _section("fig4_transmission (bits at 90%-oracle)")
+    from benchmarks import fig4_transmission
+    for r in fig4_transmission.run(quick=quick):
+        print(f"fig4_{r['dataset']},{0:.0f},cost_ratio={r['cost_ratio']:.1f}x"
+              f";ascii_bits={r['ascii_bits']};oracle_bits={r['oracle_bits']}")
+
+    _section("fig6_variants (ASCII vs Simple/Random/Ensemble/Async)")
+    from benchmarks import fig6_variants
+    for r in fig6_variants.run(reps=3 if args.full else 1,
+                               rounds=8 if args.full else 5, quick=quick):
+        print(f"fig6_{r['dataset']}_{r['method']},"
+              f"{0:.0f},final_acc={r['final_acc']:.4f}")
+
+    _section("kernels (Pallas interpret vs jnp oracle)")
+    from benchmarks import kernels_bench
+    for r in kernels_bench.run():
+        print(f"kernel_{r['kernel']},{r['us_pallas_interp']:.0f},"
+              f"max_err={r['max_err']:.2e}")
+
+    _section("roofline (from dry-run artifacts)")
+    from benchmarks import roofline
+    rows = roofline.load()
+    if not rows:
+        print("roofline,0,no artifacts (run repro.launch.dryrun first)")
+    else:
+        for line in roofline.table(rows):
+            print(line)
+
+    print(f"\n# total bench wall time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""End-to-end driver example: train the ~100M-parameter preset LM for a few
+hundred steps on synthetic token streams with the ignorance-weighted loss.
+
+Equivalent CLI:
+  PYTHONPATH=src python -m repro.launch.train --preset 100m --steps 300
+
+(On this CPU box a full 300-step run takes a while; pass --steps to trim.)
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if not any(a.startswith("--steps") for a in sys.argv[1:]):
+        sys.argv += ["--steps", "300"]
+    sys.argv += ["--preset", "100m"]
+    main()

@@ -1,0 +1,22 @@
+"""mamba2-130m [ssm] — SSD (state-space duality), attention-free.
+[arXiv:2405.21060]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-130m",
+    arch_type="ssm",
+    source="arXiv:2405.21060",
+    num_layers=24,
+    d_model=768,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,                   # attention-free, FFN folded into the SSD block
+    vocab_size=50280,
+    attention="none",
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_conv=4,
+    ssm_chunk=128,
+)

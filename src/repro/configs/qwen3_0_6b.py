@@ -1,0 +1,17 @@
+"""qwen3-0.6b [dense] — qk-norm, GQA. [hf:Qwen/Qwen3-8B]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-0.6b",
+    arch_type="dense",
+    source="hf:Qwen/Qwen3-8B",
+    num_layers=28,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=3072,
+    vocab_size=151936,
+    qk_norm=True,
+    act="silu",
+)

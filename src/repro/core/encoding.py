@@ -1,0 +1,40 @@
+"""Label encoding for multi-class exponential-loss boosting (paper eq. 1).
+
+A class label c_i in {0, ..., K-1} (we use 0-based indices internally; the
+paper uses 1-based) is re-coded into a length-K vector
+
+    y_ij = 1            if c_i == j
+         = -1/(K-1)     otherwise
+
+so that the exponential loss exp(-y^T f / K) behaves as the multi-class
+margin loss of SAMME (Hastie et al., 2009).  Key identities used throughout
+(see DESIGN.md and tests/test_core_scores.py):
+
+    y^T g / K =  1/(K-1)      if g encodes the same class as y
+              = -1/(K-1)^2    if g encodes a different class
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def encode_labels(classes: jnp.ndarray, num_classes: int) -> jnp.ndarray:
+    """Recode integer classes [n] -> coded label matrix [n, K] per eq. (1)."""
+    k = num_classes
+    onehot = jnp.equal(classes[..., None], jnp.arange(k)).astype(jnp.float32)
+    return onehot * (1.0 + 1.0 / (k - 1)) - 1.0 / (k - 1)
+
+
+def decode_labels(coded: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`encode_labels` (argmax over the coded axis)."""
+    return jnp.argmax(coded, axis=-1)
+
+
+def margin(coded_y: jnp.ndarray, scores: jnp.ndarray, num_classes: int) -> jnp.ndarray:
+    """The exponent y^T f / K of the exponential loss, elementwise over rows."""
+    return jnp.sum(coded_y * scores, axis=-1) / num_classes
+
+
+def exp_loss(coded_y: jnp.ndarray, scores: jnp.ndarray, num_classes: int) -> jnp.ndarray:
+    """Per-sample exponential loss exp(-y^T f / K)."""
+    return jnp.exp(-margin(coded_y, scores, num_classes))

@@ -1,0 +1,108 @@
+"""Ignorance-score and model-weight updates (paper eqs. 9-13, Props. 1-2).
+
+All functions are pure and jittable.  Shapes: rewards ``r`` and ignorance
+scores ``w`` are length-n vectors; ``r_i = I{g(x_i) == y_i}`` (Prop. 1).
+
+Derivation notes (verified in tests/test_core_scores.py):
+
+With the eq.-(1) coding, exp(-alpha * y^T g / K) equals
+``exp(-alpha/(K-1))`` on a correctly classified sample and
+``exp(+alpha/(K-1)^2)`` on a misclassified one.  Minimizing the staged
+exponential loss in alpha therefore gives
+
+    alpha = (K-1)^2/K * [ log(S_correct / S_wrong) + log(K-1) ]
+
+where S_correct/S_wrong weight each sample by its ignorance score times the
+*upstream factor* u_i (the exponential loss contributed by the agents that
+already acted this round — eq. 13).  The leading (K-1)^2/K constant is common
+to every agent and round, so the paper drops it (remark under eq. 13); we do
+the same by default and expose it via ``exact_scale`` for the tests.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+class AlphaResult(NamedTuple):
+    alpha: jnp.ndarray          # scalar model weight
+    weighted_acc: jnp.ndarray   # scalar, the r-bar of eq. (9) (u-adjusted)
+
+
+def upstream_factor_update(u: jnp.ndarray, alpha: jnp.ndarray, r: jnp.ndarray,
+                           num_classes: int) -> jnp.ndarray:
+    """Multiply the within-round upstream factor u_i by this agent's term.
+
+    u_i *= exp(-alpha y_i^T g(x_i) / K)
+        =  exp(-alpha/(K-1))      if r_i = 1
+           exp(+alpha/(K-1)^2)    if r_i = 0
+    """
+    k = num_classes
+    term = jnp.where(r > 0, jnp.exp(-alpha / (k - 1)), jnp.exp(alpha / (k - 1) ** 2))
+    return u * term
+
+
+def model_weight(w: jnp.ndarray, r: jnp.ndarray, num_classes: int,
+                 u: jnp.ndarray | None = None,
+                 alpha_cap: float = 20.0,
+                 exact_scale: bool = False) -> AlphaResult:
+    """Generalized model weight (eq. 13); eq. (9) when ``u is None`` (head
+    agent) and eq. (11) when ``u`` carries exactly one upstream agent.
+
+    ``alpha_cap`` guards the alpha -> +inf degeneracy the paper notes when
+    every sample is classified correctly.
+    """
+    k = num_classes
+    if u is None:
+        u = jnp.ones_like(w)
+    s_correct = jnp.sum(w * u * r)
+    s_wrong = jnp.sum(w * u * (1.0 - r))
+    rbar = s_correct / jnp.maximum(s_correct + s_wrong, _EPS)
+    alpha = jnp.log(jnp.maximum(s_correct, _EPS)) - jnp.log(jnp.maximum(s_wrong, _EPS)) \
+        + jnp.log(float(k - 1))
+    if exact_scale:
+        alpha = alpha * (k - 1) ** 2 / k
+    alpha = jnp.clip(alpha, -alpha_cap, alpha_cap)
+    return AlphaResult(alpha=alpha, weighted_acc=rbar)
+
+
+def ignorance_update(w: jnp.ndarray, r: jnp.ndarray, alpha: jnp.ndarray) -> jnp.ndarray:
+    """Interchange update (eqs. 10/12): up-weight misclassified samples by
+    e^alpha and renormalize to a probability vector (the 'ignorance' in
+    [0, 1])."""
+    w_new = w * jnp.exp(alpha * (1.0 - r))
+    return w_new / jnp.maximum(jnp.sum(w_new), _EPS)
+
+
+def ignorance_update_exact(w: jnp.ndarray, r: jnp.ndarray, alpha: jnp.ndarray,
+                           num_classes: int) -> jnp.ndarray:
+    """Beyond-paper variant: the *exact* exponential-loss reweighting
+    w_i *= exp(-alpha y^T g / K) rather than the SAMME-style surrogate of
+    eqs. (10)/(12).  Proportional to the surrogate up to a per-round constant
+    exp(-alpha/(K-1)) times exp(alpha K /((K-1)^2) (1-r)) -- after
+    normalization they differ only in the effective alpha scale."""
+    k = num_classes
+    mult = jnp.where(r > 0, jnp.exp(-alpha / (k - 1)), jnp.exp(alpha / (k - 1) ** 2))
+    w_new = w * mult
+    return w_new / jnp.maximum(jnp.sum(w_new), _EPS)
+
+
+def init_ignorance(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Line 1 of Algorithm 1: w_1 = [1, ..., 1] (we keep it normalized;
+    every downstream formula is invariant to the global scale of w)."""
+    return jnp.full((n,), 1.0 / n, dtype=dtype)
+
+
+def head_agent_alpha(w: jnp.ndarray, r: jnp.ndarray, num_classes: int,
+                     alpha_cap: float = 20.0) -> AlphaResult:
+    """Eq. (9): alpha^(A) = log(rbar/(1-rbar)) + log(K-1)."""
+    return model_weight(w, r, num_classes, u=None, alpha_cap=alpha_cap)
+
+
+def assistant_alpha(w: jnp.ndarray, r: jnp.ndarray, u: jnp.ndarray,
+                    num_classes: int, alpha_cap: float = 20.0) -> AlphaResult:
+    """Eq. (11)/(13): assistant's alpha given upstream factor u."""
+    return model_weight(w, r, num_classes, u=u, alpha_cap=alpha_cap)

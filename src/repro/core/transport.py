@@ -1,0 +1,45 @@
+"""Byte-accounted transport simulator.
+
+The paper's Fig. 4 measures transmission cost in bits.  ASCII transmits per
+hop: the length-n ignorance score plus one scalar model weight; once at
+setup: the numeric labels and sample IDs (collation).  The oracle baseline
+transmits agent B's raw feature matrix.  This module meters every logical
+message so benchmarks/fig4_transmission.py can reproduce the accounting.
+
+In the distributed runtime the same messages ride mesh collectives
+(core/collectives.py); this simulator is the faithful, metered counterpart.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class TransportLog:
+    entries: list = field(default_factory=list)
+
+    def send(self, src: str, dst: str, kind: str, num_elements: int,
+             bits_per_element: int = 32) -> None:
+        self.entries.append({"src": src, "dst": dst, "kind": kind,
+                             "bits": int(num_elements) * bits_per_element})
+
+    def send_array(self, src: str, dst: str, kind: str, arr) -> None:
+        arr = np.asarray(arr)
+        self.send(src, dst, kind, arr.size, arr.dtype.itemsize * 8)
+
+    @property
+    def total_bits(self) -> int:
+        return sum(e["bits"] for e in self.entries)
+
+    def bits_by_kind(self) -> dict:
+        out: dict = {}
+        for e in self.entries:
+            out[e["kind"]] = out.get(e["kind"], 0) + e["bits"]
+        return out
+
+
+def oracle_bits(n: int, p_remote: int, bits_per_element: int = 32) -> int:
+    """Cost of the oracle: shipping the remote agents' raw features."""
+    return n * p_remote * bits_per_element

@@ -1,0 +1,49 @@
+"""Vertical partitioning + sample-ID collation (Section II-A).
+
+Agents hold disjoint column blocks of a holistic matrix, aligned by sample
+ID.  `collate` implements the paper's convention that only the IDs present
+at *every* agent are used ('only the overlapping data are used').
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def vertical_split(X: jnp.ndarray, splits: Sequence[int]) -> list[jnp.ndarray]:
+    """Split columns into per-agent blocks of the given widths."""
+    assert sum(splits) == X.shape[-1], (sum(splits), X.shape)
+    out, ofs = [], 0
+    for p in splits:
+        out.append(X[:, ofs:ofs + p])
+        ofs += p
+    return out
+
+
+def collate(ids: Sequence[np.ndarray], Xs: Sequence[jnp.ndarray]
+            ) -> tuple[np.ndarray, list[jnp.ndarray]]:
+    """Align per-agent matrices on the intersection of their sample IDs.
+
+    Returns the common (sorted) IDs and each agent's rows re-ordered to that
+    common key — the paper's 'consensus on how to collate/align the data'.
+    """
+    common = ids[0]
+    for i in ids[1:]:
+        common = np.intersect1d(common, i)
+    out = []
+    for agent_ids, X in zip(ids, Xs):
+        order = {v: j for j, v in enumerate(np.asarray(agent_ids).tolist())}
+        rows = np.array([order[v] for v in common.tolist()], dtype=np.int32)
+        out.append(jnp.asarray(X)[rows])
+    return common, out
+
+
+def train_test_split(key_seed: int, n: int, train_frac: float = 0.7
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Paper Section VI: train on 70%, test on 30%, resampled per replicate."""
+    rng = np.random.default_rng(key_seed)
+    perm = rng.permutation(n)
+    cut = int(round(train_frac * n))
+    return perm[:cut], perm[cut:]

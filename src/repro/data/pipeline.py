@@ -1,0 +1,34 @@
+"""Host-side input pipeline: deterministic shuffled batching with epoch
+reshuffling, for both tabular (ASCII agents) and token-stream (LM) data."""
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def batched_indices(n: int, batch_size: int, seed: int,
+                    drop_remainder: bool = True) -> Iterator[np.ndarray]:
+    """Infinite shuffled index batches (reshuffled each epoch)."""
+    rng = np.random.default_rng(seed)
+    while True:
+        perm = rng.permutation(n)
+        end = (n // batch_size) * batch_size if drop_remainder else n
+        for i in range(0, end, batch_size):
+            yield perm[i:i + batch_size]
+
+
+def lm_batches(key, *, vocab_size: int, batch: int, seq_len: int
+               ) -> Iterator[dict]:
+    """Infinite synthetic LM batches (see data/synthetic.token_stream)."""
+    from repro.data.synthetic import token_stream
+    i = 0
+    while True:
+        sub = jax.random.fold_in(key, i)
+        tokens = token_stream(sub, vocab_size=vocab_size, batch=batch,
+                              seq_len=seq_len)
+        yield {"tokens": tokens,
+               "sample_weight": jnp.ones((batch,), jnp.float32)}
+        i += 1

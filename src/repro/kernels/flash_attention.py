@@ -1,0 +1,126 @@
+"""Blocked online-softmax (flash) attention with causal + sliding-window
+masking — Pallas TPU kernel.
+
+TPU adaptation of the FlashAttention idea: instead of warp-level tiling,
+blocks are sized to the MXU/VREG geometry — BQ x D and BK x D tiles staged
+in VMEM, scores computed as [BQ, BK] MXU matmuls, with the online max/sum
+recurrence in f32 VMEM scratch that persists across the (innermost,
+sequential) KV grid walk.  Sliding-window support makes this the
+sub-quadratic pathway for the long_500k shape on SWA archs: KV tiles wholly
+outside the window are predicated away with pl.when, so compute scales with
+S*W rather than S^2.
+
+Layouts: q [B, H, S, D]; k/v [B, KV, T, D] with H % KV == 0 (GQA: the KV
+head for query head h is h * KV // H).  Queries are right-aligned against
+the key axis (offset T - S), matching both prefill (T == S) and
+cached-suffix decode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 bq: int, bk: int, nk: int, s: int, t: int, causal: bool,
+                 window: int | None, scale: float):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qi = pl.program_id(1)
+    offset = t - s                         # right-aligned queries
+    q_lo = qi * bq + offset                # absolute pos of first query row
+    q_hi = q_lo + bq - 1
+    k_lo = ki * bk
+
+    # Tile-level predication: skip KV tiles fully above the diagonal or
+    # fully below the window.
+    live = True
+    if causal:
+        live = k_lo <= q_hi
+    if window is not None:
+        live = jnp.logical_and(live, k_lo + bk - 1 > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)            # [bk, d]
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ()))) * scale    # [bq, bk]
+        rows = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= cols > rows - window
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+        p = jnp.exp(scores - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                              "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int | None = None,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = False) -> jnp.ndarray:
+    b, h, s, d = q.shape
+    kv, t = k.shape[1], k.shape[2]
+    assert h % kv == 0
+    bq = min(bq, s)
+    bk = min(bk, t)
+    assert s % bq == 0 and t % bk == 0, (s, t, bq, bk)
+    nq, nk = s // bq, t // bk
+    group = h // kv
+
+    kernel = functools.partial(
+        _attn_kernel, bq=bq, bk=bk, nk=nk, s=s, t=t, causal=causal,
+        window=window, scale=1.0 / (d ** 0.5))
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d),
+                         lambda bh, qi, ki: (bh // h, bh % h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bh, qi, ki: (bh // h, (bh % h) // group, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bh, qi, ki: (bh // h, (bh % h) // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bh, qi, ki: (bh // h, bh % h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),        # running max
+            pltpu.VMEM((bq,), jnp.float32),        # running denominator
+            pltpu.VMEM((bq, d), jnp.float32),      # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

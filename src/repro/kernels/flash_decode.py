@@ -1,0 +1,119 @@
+"""Flash-decode — single-token attention against a long KV cache, with
+optional fused int8 dequantization (the kernel-level realization of the
+§Perf H3 it2 finding: the XLA path must materialize a dequantized f32 cache
+copy, this kernel never does — int8 tiles are dequantized in VMEM registers
+between the load and the MXU dot).
+
+One query row per (batch, head); the KV walk is the innermost sequential
+grid dimension with the online-softmax recurrence in VMEM scratch.  Tiles
+outside the valid range (pos, window) are predicated away, so ring-buffer
+SWA decode touches only ceil(W/BK) tiles.
+
+Layouts: q [B, H, D]; k/v [B, KV, S, D] (GQA; int8 when scales given);
+k_scale/v_scale [B, KV, S] f32.  Output [B, H, D].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BK = 256
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, bk: int, nk: int, window: int | None,
+            scale: float, quant: bool):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+    k_lo = ki * bk
+    live = k_lo <= pos
+    if window is not None:
+        live = jnp.logical_and(live, k_lo + bk - 1 > pos - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)[None, :]          # [1, D]
+        k = k_ref[0, 0].astype(jnp.float32)                   # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)                   # [bk, D]
+        if quant:
+            k = k * ks_ref[0, 0].astype(jnp.float32)[:, None]
+            v = v * vs_ref[0, 0].astype(jnp.float32)[:, None]
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ()))) * scale            # [1, bk]
+        cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        valid = cols <= pos
+        if window is not None:
+            valid &= cols > pos - window
+        scores = jnp.where(valid, scores, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+        p = jnp.exp(scores - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom)[0].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 pos: jnp.ndarray, *, k_scale: jnp.ndarray | None = None,
+                 v_scale: jnp.ndarray | None = None,
+                 window: int | None = None, bk: int = DEFAULT_BK,
+                 interpret: bool = False) -> jnp.ndarray:
+    b, h, d = q.shape
+    kv, s = k.shape[1], k.shape[2]
+    assert h % kv == 0
+    group = h // kv
+    bk = min(bk, s)
+    assert s % bk == 0, (s, bk)
+    nk = s // bk
+    quant = k_scale is not None
+    if not quant:           # dummy scale operands keep one kernel signature
+        k_scale = jnp.ones((b, kv, s), jnp.float32)
+        v_scale = jnp.ones((b, kv, s), jnp.float32)
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (1,))
+
+    kernel = functools.partial(_kernel, bk=bk, nk=nk, window=window,
+                               scale=1.0 / (d ** 0.5), quant=quant)
+    return pl.pallas_call(
+        kernel,
+        grid=(b * h, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bh, ki: (0,)),           # pos
+            pl.BlockSpec((1, 1, d), lambda bh, ki: (bh // h, bh % h, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bh, ki: (bh // h, (bh % h) // group, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bh, ki: (bh // h, (bh % h) // group, ki, 0)),
+            pl.BlockSpec((1, 1, bk),
+                         lambda bh, ki: (bh // h, (bh % h) // group, ki)),
+            pl.BlockSpec((1, 1, bk),
+                         lambda bh, ki: (bh // h, (bh % h) // group, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda bh, ki: (bh // h, bh % h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),         # running max
+            pltpu.VMEM((1,), jnp.float32),         # running denominator
+            pltpu.VMEM((1, d), jnp.float32),       # accumulator
+        ],
+        interpret=interpret,
+    )(pos_arr, q, k, v, k_scale, v_scale)

@@ -1,0 +1,56 @@
+"""Fused ignorance-score update (paper eqs. 10/12) — Pallas TPU kernel.
+
+The interchange hot-path op: w * exp(alpha * (1 - r)) fused with the
+partial-sum reduction for the renormalization, one VMEM pass over the
+length-n score vector instead of three HBM round-trips (mul, exp, sum).
+The final scalar divide happens in the jitted wrapper (ops.py) after the
+cross-device psum — the normalizer must be global across the data-sharded
+score anyway, so the kernel emits per-tile partial sums.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BN = 1024
+
+
+def _kernel(alpha_ref, w_ref, r_ref, out_ref, psum_ref):
+    alpha = alpha_ref[0]
+    w_new = w_ref[...] * jnp.exp(alpha * (1.0 - r_ref[...]))
+    out_ref[...] = w_new
+    psum_ref[0] = jnp.sum(w_new)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def ignorance_update_unnormalized(w: jnp.ndarray, r: jnp.ndarray,
+                                  alpha: jnp.ndarray, *,
+                                  bn: int = DEFAULT_BN,
+                                  interpret: bool = False):
+    """Returns (w * exp(alpha(1-r)) [n], per-tile partial sums [n/bn])."""
+    n = w.shape[0]
+    bn = min(bn, n)
+    assert n % bn == 0, (n, bn)
+    nt = n // bn
+    alpha_arr = jnp.broadcast_to(alpha.astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        _kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),       # alpha (replicated)
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((nt,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(alpha_arr, w.astype(jnp.float32), r.astype(jnp.float32))

@@ -1,0 +1,78 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU build box kernels run in interpret mode (the Pallas body
+executed in Python); on TPU pass interpret=False (default resolves by
+backend).  ``weighted_ce`` wires the forward/backward kernels into a
+custom_vjp so the fused loss is a drop-in for training.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import flash_decode as _fd
+from repro.kernels import ignorance as _ig
+from repro.kernels import weighted_ce as _wce
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ------------------------------------------------------------ weighted CE
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def weighted_ce(logits, labels, weights, interpret: bool | None = None):
+    """Per-token ignorance-weighted NLL [T] (fused Pallas kernel)."""
+    interp = _default_interpret() if interpret is None else interpret
+    loss, _ = _wce.weighted_ce_fwd(logits, labels, weights, interpret=interp)
+    return loss
+
+
+def _wce_fwd(logits, labels, weights, interpret):
+    interp = _default_interpret() if interpret is None else interpret
+    loss, lse = _wce.weighted_ce_fwd(logits, labels, weights, interpret=interp)
+    return loss, (logits, labels, weights, lse)
+
+
+def _wce_bwd(interpret, res, g):
+    logits, labels, weights, lse = res
+    interp = _default_interpret() if interpret is None else interpret
+    dlogits = _wce.weighted_ce_bwd(logits, labels, weights, lse, g,
+                                   interpret=interp)
+    return dlogits, None, None
+
+
+weighted_ce.defvjp(_wce_fwd, _wce_bwd)
+
+
+# --------------------------------------------------------- flash attention
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    interpret: bool | None = None):
+    interp = _default_interpret() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=interp)
+
+
+# --------------------------------------------------------- ignorance update
+def ignorance_update(w, r, alpha, *, axis_name: str | None = None,
+                     interpret: bool | None = None):
+    """Fused eqs. (10)/(12).  Under shard_map pass axis_name to make the
+    normalizer global across the data-sharded score vector."""
+    interp = _default_interpret() if interpret is None else interpret
+    w_new, psums = _ig.ignorance_update_unnormalized(w, r, alpha,
+                                                     interpret=interp)
+    total = jnp.sum(psums)
+    if axis_name is not None:
+        total = jax.lax.psum(total, axis_name)
+    return w_new / jnp.maximum(total, 1e-12)
+
+
+def flash_decode(q, k, v, pos, *, k_scale=None, v_scale=None, window=None,
+                 interpret: bool | None = None):
+    """Single-token flash attention vs a long (optionally int8) KV cache."""
+    interp = _default_interpret() if interpret is None else interpret
+    return _fd.flash_decode(q, k, v, pos, k_scale=k_scale, v_scale=v_scale,
+                            window=window, interpret=interp)

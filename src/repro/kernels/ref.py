@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_ce(logits: jnp.ndarray, labels: jnp.ndarray,
+                weights: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-token weighted NLL and the log-sum-exp (forward residual).
+
+    logits [T, V] (any float dtype; math in f32), labels [T], weights [T].
+    Returns (loss [T], lse [T]).
+    """
+    x = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(x, axis=-1)
+    gold = jnp.take_along_axis(x, labels[:, None], axis=-1)[:, 0]
+    return weights * (lse - gold), lse
+
+
+def weighted_ce_grad(logits: jnp.ndarray, labels: jnp.ndarray,
+                     weights: jnp.ndarray, lse: jnp.ndarray,
+                     g: jnp.ndarray) -> jnp.ndarray:
+    """dL/dlogits for loss_t = w_t * (lse_t - logit_t[label]), scaled by the
+    upstream cotangent g [T]."""
+    x = logits.astype(jnp.float32)
+    probs = jnp.exp(x - lse[:, None])
+    onehot = jax.nn.one_hot(labels, x.shape[-1], dtype=jnp.float32)
+    return ((weights * g)[:, None] * (probs - onehot)).astype(logits.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    *, causal: bool = True,
+                    window: int | None = None) -> jnp.ndarray:
+    """Reference attention.  q [B,H,S,D]; k/v [B,KV,T,D] (grouped-query:
+    H % KV == 0); returns [B,H,S,D]."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, s, d)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(d)
+    t = k.shape[2]
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= k_pos <= q_pos + (t - s)       # right-aligned queries
+    if window is not None:
+        mask &= k_pos > q_pos + (t - s) - window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, s, d).astype(q.dtype)
+
+
+def ignorance_update(w: jnp.ndarray, r: jnp.ndarray,
+                     alpha: jnp.ndarray) -> jnp.ndarray:
+    """Eqs. (10)/(12): w * exp(alpha (1 - r)), renormalized."""
+    w_new = w * jnp.exp(alpha * (1.0 - r))
+    return w_new / jnp.maximum(jnp.sum(w_new), 1e-12)
+
+
+def flash_decode(q, k, v, pos, *, k_scale=None, v_scale=None, window=None):
+    """Reference single-token attention vs a (possibly int8) cache.
+
+    q [B,H,D]; k/v [B,KV,S,D]; scales [B,KV,S]; returns [B,H,D]."""
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * k_scale[..., None]
+        v = v.astype(jnp.float32) * v_scale[..., None]
+    b, h, d = q.shape
+    kv, s = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bktd->bkgt", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(d)
+    idx = jnp.arange(s)
+    valid = idx <= pos
+    if window is not None:
+        valid &= idx > pos - window
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,bktd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

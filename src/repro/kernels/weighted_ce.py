@@ -1,0 +1,125 @@
+"""Fused ignorance-weighted softmax cross-entropy — Pallas TPU kernel.
+
+Motivation (DESIGN.md §2): for large-vocab archs (gemma-7b V=256k) the
+[T, V] logits tensor dominates loss-path HBM traffic.  The unfused XLA path
+materializes softmax intermediates and reads the logits twice (lse + gather);
+this kernel streams each logits row tile-by-tile through VMEM once,
+computing the online max/denominator and the gold-logit gather in the same
+pass, with the ASCII sample weight fused into the final scale.  The backward
+kernel recomputes probabilities from the saved LSE (flash-style residual)
+instead of storing them.
+
+Grid: (T/BT, V/BV), V innermost => the VMEM scratch (running max m, running
+sum l, gold accumulator) persists across the V walk of one row tile.
+Block shapes are (BT, BV) with BV a multiple of 128 (lane width) and BT a
+multiple of 8 (sublane), so loads hit the VREG tiling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BT = 128
+DEFAULT_BV = 512
+
+
+def _fwd_kernel(labels_ref, weights_ref, logits_ref, loss_ref, lse_ref,
+                m_ref, l_ref, gold_ref, *, bv: int, nv: int):
+    vi = pl.program_id(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        gold_ref[...] = jnp.zeros_like(gold_ref)
+
+    x = logits_ref[...].astype(jnp.float32)              # [bt, bv]
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(x, axis=-1))
+    # rescale the running denominator, add this tile's contribution
+    l_ref[...] = l_ref[...] * jnp.exp(m_prev - m_new) + jnp.sum(
+        jnp.exp(x - m_new[:, None]), axis=-1)
+    m_ref[...] = m_new
+    # gold logit: the label column may fall inside this tile
+    cols = vi * bv + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    hit = cols == labels_ref[...][:, None]
+    gold_ref[...] += jnp.sum(jnp.where(hit, x, 0.0), axis=-1)
+
+    @pl.when(vi == nv - 1)
+    def _finish():
+        lse = m_ref[...] + jnp.log(l_ref[...])
+        lse_ref[...] = lse
+        loss_ref[...] = weights_ref[...] * (lse - gold_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bv", "interpret"))
+def weighted_ce_fwd(logits: jnp.ndarray, labels: jnp.ndarray,
+                    weights: jnp.ndarray, *, bt: int = DEFAULT_BT,
+                    bv: int = DEFAULT_BV, interpret: bool = False):
+    t, v = logits.shape
+    bt = min(bt, t)
+    bv = min(bv, v)
+    assert t % bt == 0 and v % bv == 0, (t, v, bt, bv)
+    nt, nv = t // bt, v // bv
+    loss, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, bv=bv, nv=nv),
+        grid=(nt, nv),
+        in_specs=[
+            pl.BlockSpec((bt,), lambda i, j: (i,)),           # labels
+            pl.BlockSpec((bt,), lambda i, j: (i,)),           # weights
+            pl.BlockSpec((bt, bv), lambda i, j: (i, j)),      # logits
+        ],
+        out_specs=[
+            pl.BlockSpec((bt,), lambda i, j: (i,)),
+            pl.BlockSpec((bt,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t,), jnp.float32),          # loss
+            jax.ShapeDtypeStruct((t,), jnp.float32),          # lse
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bt,), jnp.float32),                   # running max
+            pltpu.VMEM((bt,), jnp.float32),                   # running sum
+            pltpu.VMEM((bt,), jnp.float32),                   # gold logit
+        ],
+        interpret=interpret,
+    )(labels, weights, logits)
+    return loss, lse
+
+
+def _bwd_kernel(labels_ref, wg_ref, lse_ref, logits_ref, dlogits_ref, *,
+                bv: int):
+    vi = pl.program_id(1)
+    x = logits_ref[...].astype(jnp.float32)
+    probs = jnp.exp(x - lse_ref[...][:, None])
+    cols = vi * bv + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    onehot = (cols == labels_ref[...][:, None]).astype(jnp.float32)
+    dlogits_ref[...] = (wg_ref[...][:, None] * (probs - onehot)
+                        ).astype(dlogits_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bv", "interpret"))
+def weighted_ce_bwd(logits, labels, weights, lse, g, *, bt: int = DEFAULT_BT,
+                    bv: int = DEFAULT_BV, interpret: bool = False):
+    t, v = logits.shape
+    bt = min(bt, t)
+    bv = min(bv, v)
+    nt, nv = t // bt, v // bv
+    wg = (weights * g).astype(jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, bv=bv),
+        grid=(nt, nv),
+        in_specs=[
+            pl.BlockSpec((bt,), lambda i, j: (i,)),
+            pl.BlockSpec((bt,), lambda i, j: (i,)),
+            pl.BlockSpec((bt,), lambda i, j: (i,)),
+            pl.BlockSpec((bt, bv), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bv), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, v), logits.dtype),
+        interpret=interpret,
+    )(labels, wg, lse, logits)

@@ -1,0 +1,393 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh, and extract the roofline terms from the compiled
+artifact.  This is how the distribution config is proven coherent without
+real hardware (DESIGN.md §5).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi_pod] [--quick]
+
+Artifacts: one JSON per (arch, shape, mesh) under artifacts/dryrun/.
+"""
+# The build box has ONE real CPU device; the dry-run needs 512 placeholder
+# devices.  Must run before ANY other import that initializes jax.
+import os  # noqa: E402
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import time       # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import ArchConfig, INPUT_SHAPES, InputShape  # noqa: E402
+from repro.configs.registry import (ARCHS, SKIPS,  # noqa: E402
+                                    long_context_overrides)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import api  # noqa: E402
+from repro.optim.optimizers import adamw  # noqa: E402
+from repro.sharding import rules  # noqa: E402
+from repro.sharding.context import mesh_context  # noqa: E402
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~per chip, 1 link eff.)
+
+# HLO result-typed collective instruction, e.g.
+#   %all-gather.21 = f32[16,4096,1,128]{2,1,0,3} all-gather(%fusion.1), ...
+# Post-optimization HLO prints operands by name only, so payload bytes are
+# derived from the RESULT type and converted to approximate bytes-on-wire
+# per device via _WIRE_FACTOR (all-reduce = reduce-scatter + all-gather of
+# the same payload ~= 2x; the rest move ~result once).
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|(\w+)\[([\d,]*)\])\S*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_TUPLE_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "s64": 8,
+          "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+_WIRE_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(dt: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _BYTES.get(dt, 2)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Approx. wire bytes per device for every collective in the HLO."""
+    out: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        tuple_body, dt, dims, kind = m.groups()
+        if tuple_body is not None:
+            total = sum(_shape_bytes(t, d)
+                        for t, d in _TUPLE_SHAPE_RE.findall(tuple_body))
+        else:
+            total = _shape_bytes(dt, dims)
+        out[kind] = out.get(kind, 0) + int(total * _WIRE_FACTOR[kind])
+    return out
+
+
+def effective_config(arch: str, shape: InputShape,
+                     remat: str | None = None) -> ArchConfig:
+    cfg = ARCHS[arch]
+    if shape.name == "long_500k":
+        cfg = long_context_overrides(cfg)
+    if shape.kind == "train":
+        # block remat is the production default for training: without it the
+        # stacked scan residuals of the larger archs exceed v5e HBM.
+        cfg = cfg.with_overrides(remat=remat or "block")
+    elif remat:
+        cfg = cfg.with_overrides(remat=remat)
+    return cfg
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32, f32 = jnp.int32, jnp.float32
+    if shape.kind in ("train", "prefill"):
+        text = s
+        batch = {}
+        if cfg.frontend == "vision":
+            text = s - cfg.num_frontend_tokens
+            batch["patch_emb"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.frontend == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        batch["tokens"] = jax.ShapeDtypeStruct((b, text), i32)
+        if shape.kind == "train":
+            batch["sample_weight"] = jax.ShapeDtypeStruct((b,), f32)
+        return batch
+    # decode: one new token against a seq_len cache
+    s_cache = s
+    caches = jax.eval_shape(lambda: api.init_cache(cfg, b, s_cache))
+    tokens = jax.ShapeDtypeStruct((b, 1), i32)
+    return {"caches": caches, "tokens": tokens}
+
+
+def _opt_specs(params_shape, cfg, mesh):
+    # adam m/v mirror the parameter tree; path suffixes still match rules
+    return {"m": rules.param_specs(params_shape, cfg, mesh),
+            "v": rules.param_specs(params_shape, cfg, mesh)}
+
+
+def model_flops(cfg: ArchConfig, shape: InputShape) -> float:
+    """6·N_active·D (train) / 2·N_active·D (inference) useful-FLOPs yardstick."""
+    params_shape = jax.eval_shape(
+        lambda: api.init_params(jax.random.key(0), cfg))
+    n_total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params_shape))
+    if cfg.is_moe:
+        # subtract inactive expert params
+        e, k = cfg.num_experts, cfg.top_k
+        expert_params = 3 * cfg.d_model * cfg.moe_d_ff
+        # count MoE sublayers precisely
+        if cfg.layer_pattern:
+            per_unit = sum(1 for i in range(len(cfg.layer_pattern))
+                           if cfg.moe_every <= 1 or i % cfg.moe_every == 1)
+            n_moe = per_unit * (cfg.num_layers // len(cfg.layer_pattern))
+        else:
+            n_moe = cfg.num_layers if cfg.moe_every <= 1 else cfg.num_layers // cfg.moe_every
+        n_active = n_total - n_moe * expert_params * (e - k)
+    else:
+        n_active = n_total
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def _scale_units(cfg: ArchConfig, u: int) -> ArchConfig:
+    """A u-unit, unrolled variant of cfg (same widths) for cost extraction."""
+    unit_len = len(cfg.layer_pattern) if cfg.layer_pattern else 1
+    kw = dict(scan_layers=False, num_layers=unit_len * u)
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = u
+    return cfg.with_overrides(**kw)
+
+
+def _num_units(cfg: ArchConfig) -> int:
+    unit_len = len(cfg.layer_pattern) if cfg.layer_pattern else 1
+    return cfg.num_layers // unit_len
+
+
+def _build_lowered(cfg: ArchConfig, shape: InputShape, mesh,
+                   cache_mode: str):
+    """Lower the step function for (cfg, shape) on mesh. Returns Lowered."""
+    params_shape = jax.eval_shape(
+        lambda: api.init_params(jax.random.key(0), cfg))
+    pspecs = rules.param_specs(params_shape, cfg, mesh)
+    repl = NamedSharding(mesh, P())
+    with mesh, mesh_context(mesh):
+        if shape.kind == "train":
+            opt = adamw(3e-4)
+            train_step = api.make_train_step(cfg, opt)
+            opt_shape = jax.eval_shape(opt.init, params_shape)
+            ospecs = {"m": pspecs, "v": pspecs}
+            bspecs = rules.batch_spec(cfg, shape, mesh)
+            batch_sds = input_specs(cfg, shape)
+            jitted = jax.jit(
+                train_step,
+                in_shardings=(rules.named(mesh, pspecs),
+                              rules.named(mesh, ospecs),
+                              rules.named(mesh, bspecs), repl),
+                out_shardings=(rules.named(mesh, pspecs),
+                               rules.named(mesh, ospecs), repl),
+                donate_argnums=(0, 1))
+            return jitted.lower(params_shape, opt_shape, batch_sds,
+                                jax.ShapeDtypeStruct((), jnp.int32))
+        if shape.kind == "prefill":
+            prefill = api.make_prefill_step(cfg)
+            bspecs = rules.batch_spec(cfg, shape, mesh)
+            batch_sds = input_specs(cfg, shape)
+            jitted = jax.jit(prefill,
+                             in_shardings=(rules.named(mesh, pspecs),
+                                           rules.named(mesh, bspecs)))
+            return jitted.lower(params_shape, batch_sds)
+        # decode
+        s_cache = (api.cache_length(cfg, shape.seq_len)
+                   if cache_mode == "ring" else shape.seq_len)
+        serve = api.make_serve_step(cfg, cache_mode)
+        ins = input_specs(cfg, shape)
+        caches_sds = jax.eval_shape(
+            lambda: api.init_cache(cfg, shape.global_batch, s_cache))
+        cspecs = rules.cache_spec_tree(caches_sds, cfg, mesh,
+                                       shape.global_batch, s_cache)
+        dp = rules.data_axes(mesh)
+        b_ax = dp if shape.global_batch % np.prod(
+            [mesh.shape[a] for a in dp]) == 0 else None
+        tok_sh = NamedSharding(mesh, P(b_ax, None))
+        jitted = jax.jit(serve,
+                         in_shardings=(rules.named(mesh, pspecs),
+                                       rules.named(mesh, cspecs),
+                                       tok_sh, repl),
+                         donate_argnums=(1,))
+        return jitted.lower(params_shape, caches_sds, ins["tokens"],
+                            jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def _extract_costs(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "collectives": collective_bytes(compiled.as_text())}
+
+
+def _corrected_costs(cfg: ArchConfig, shape: InputShape, mesh,
+                     cache_mode: str) -> dict:
+    """Trip-count-corrected per-chip costs.
+
+    XLA's cost analysis counts a while/scan body ONCE regardless of trip
+    count (verified empirically), so the scanned compile under-reports both
+    flops and collective bytes.  We compile unrolled 1-unit and 2-unit
+    variants at full width: body = c2 - c1, total = c1 + (U - 1) * body.
+
+    Grad-accumulation is handled by measuring ONE microbatch explicitly
+    (batch/m at microbatches=1) and scaling by m — XLA sometimes unrolls a
+    small accumulation loop (then the body is counted m times) and sometimes
+    keeps the while (counted once), so measuring the loop itself is
+    unreliable either way.
+    """
+    m = cfg.microbatches
+    if shape.kind == "train" and m > 1:
+        shape = InputShape(shape.name, shape.seq_len,
+                           shape.global_batch // m, shape.kind)
+        cfg = cfg.with_overrides(microbatches=1)
+        one = _corrected_costs(cfg, shape, mesh, cache_mode)
+        return {"flops": one["flops"] * m, "bytes": one["bytes"] * m,
+                "collectives": {k: v * m
+                                for k, v in one["collectives"].items()}}
+    u_total = _num_units(cfg)
+    c1 = _extract_costs(_build_lowered(_scale_units(cfg, 1), shape, mesh,
+                                       cache_mode).compile())
+    if u_total == 1:
+        return c1
+    c2 = _extract_costs(_build_lowered(_scale_units(cfg, 2), shape, mesh,
+                                       cache_mode).compile())
+
+    def lin(a, b):
+        return max(a, a + (u_total - 1) * (b - a))
+
+    kinds = set(c1["collectives"]) | set(c2["collectives"])
+    return {
+        "flops": lin(c1["flops"], c2["flops"]),
+        "bytes": lin(c1["bytes"], c2["bytes"]),
+        "collectives": {k: int(lin(c1["collectives"].get(k, 0),
+                                   c2["collectives"].get(k, 0)))
+                        for k in kinds},
+    }
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool = False,
+             cache_mode: str = "full", save: bool = True,
+             tag: str = "", remat: str | None = None,
+             overrides: dict | None = None) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    if (arch, shape_name) in SKIPS:
+        return {"arch": arch, "shape": shape_name,
+                "skipped": SKIPS[(arch, shape_name)]}
+    cfg = effective_config(arch, shape, remat=remat)
+    if overrides:
+        cfg = cfg.with_overrides(**overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "x".join(map(str, mesh.devices.shape)),
+                 "cache_mode": cache_mode}
+    t0 = time.time()
+    lowered = _build_lowered(cfg, shape, mesh, cache_mode)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            # The CPU backend has no native bf16 compute: every bf16 dot and
+            # most intermediates are upcast to f32, so temp_bytes over-counts
+            # the TPU bf16 working set by ~2x (verified against the buffer
+            # assignment dump).  This adjusted figure is what EXPERIMENTS.md
+            # compares against the 16 GB v5e HBM budget.
+            "temp_bytes_bf16_adj": int(getattr(mem, "temp_size_in_bytes", 0)
+                                       ) // 2,
+        }
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+
+    rec["cost_scanned"] = _extract_costs(compiled)
+    hlo = compiled.as_text()
+    rec["hlo_ops"] = {k: hlo.count(f" {k}(") for k in
+                      ("all-gather", "all-reduce", "reduce-scatter",
+                       "all-to-all", "collective-permute", "fusion")}
+    # trip-count-corrected costs (see _corrected_costs docstring)
+    corr = _corrected_costs(cfg, shape, mesh, cache_mode)
+    rec["cost"] = {"flops": corr["flops"], "bytes": corr["bytes"]}
+    rec["collectives"] = corr["collectives"]
+
+    # ---- roofline terms (per chip; SPMD program costs are per-partition)
+    n_chips = mesh.devices.size
+    flops = corr["flops"]
+    bytes_hbm = corr["bytes"]
+    coll = sum(corr["collectives"].values())
+    rec["roofline"] = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_hbm / HBM_BW,
+        "collective_s": coll / ICI_BW,
+        "model_flops": model_flops(cfg, shape),
+    }
+    terms = {k: rec["roofline"][k] for k in
+             ("compute_s", "memory_s", "collective_s")}
+    rec["roofline"]["bottleneck"] = max(terms, key=terms.get)
+    rec["n_chips"] = n_chips
+    params_shape = jax.eval_shape(
+        lambda: api.init_params(jax.random.key(0), cfg))
+    rec["params"] = int(sum(int(np.prod(x.shape))
+                            for x in jax.tree.leaves(params_shape)))
+
+    if save:
+        os.makedirs(ARTIFACT_DIR, exist_ok=True)
+        name = f"{arch}_{shape_name}_{rec['mesh']}{tag}.json"
+        with open(os.path.join(ARTIFACT_DIR, name), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi_pod", action="store_true")
+    ap.add_argument("--cache_mode", default="full", choices=["full", "ring"])
+    ap.add_argument("--remat", default=None, choices=[None, "none", "block"])
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        pairs = [(a, s) for a in ARCHS for s in INPUT_SHAPES]
+    else:
+        shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+        archs = [args.arch] if args.arch else list(ARCHS)
+        pairs = [(a, s) for a in archs for s in shapes]
+
+    for arch, shape in pairs:
+        try:
+            rec = run_pair(arch, shape, multi_pod=args.multi_pod,
+                           cache_mode=args.cache_mode, tag=args.tag,
+                           remat=args.remat)
+        except Exception as e:  # keep sweeping; failures are bugs to fix
+            print(f"FAIL  {arch:24s} {shape:12s} {type(e).__name__}: "
+                  f"{str(e)[:2000]}")
+            continue
+        if "skipped" in rec:
+            print(f"SKIP  {arch:24s} {shape:12s} {rec['skipped']}")
+            continue
+        r = rec["roofline"]
+        print(f"OK    {arch:24s} {shape:12s} mesh={rec['mesh']} "
+              f"lower={rec['lower_s']}s compile={rec['compile_s']}s "
+              f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+              f"coll={r['collective_s']:.3e}s -> {r['bottleneck']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Production meshes.
+
+Functions (not module constants) so importing never touches jax device
+state.  Single pod: (data=16, model=16) = 256 chips of TPU v5e; multi-pod:
+(pod=2, data=16, model=16) = 512 chips, the ``pod`` axis crossing DCN.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_devices: int | None = None):
+    """Small mesh over however many local devices exist (tests)."""
+    n = n_devices or len(jax.devices())
+    model = 2 if n % 2 == 0 else 1
+    return jax.make_mesh((n // model, model), ("data", "model"))

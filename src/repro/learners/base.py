@@ -1,0 +1,39 @@
+"""Learner interface: the model class F_0^(m) an agent brings to ASCII.
+
+Every learner implements weighted supervised training (Algorithm 2 / WST):
+``fit(key, X, classes, w) -> params`` minimizing the w-weighted training
+loss, plus ``predict(params, X) -> class indices``.  Learners are stateless
+objects; fitted parameters are plain pytrees so they jit/vmap/shard cleanly.
+
+Per Prop. 1, minimizing the weighted exponential loss over F_0 is equivalent
+to minimizing the w-weighted 0/1 classification error; trees do this
+directly, while differentiable learners (logistic / MLP / neural backbones)
+use the w-weighted cross-entropy as the standard smooth surrogate — the same
+choice as the paper's own neural-network experiments (Section VI-B).
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any
+
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Learner(abc.ABC):
+    """A private model class F_0 held by a single agent."""
+
+    @abc.abstractmethod
+    def fit(self, key, X: jnp.ndarray, classes: jnp.ndarray,
+            w: jnp.ndarray, num_classes: int) -> PyTree:
+        """Weighted supervised training (Algorithm 2, line 1)."""
+
+    @abc.abstractmethod
+    def predict(self, params: PyTree, X: jnp.ndarray) -> jnp.ndarray:
+        """Hard class predictions, shape [n]."""
+
+    def reward(self, params: PyTree, X: jnp.ndarray,
+               classes: jnp.ndarray) -> jnp.ndarray:
+        """Prop. 1 reward r_i = I{g(x_i) = y_i} (Algorithm 2, line 2)."""
+        return (self.predict(params, X) == classes).astype(jnp.float32)

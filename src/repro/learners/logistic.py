@@ -1,0 +1,49 @@
+"""Weighted multinomial logistic regression, fitted with full-batch AdamW.
+
+Small-data workhorse used by the paper's 20-agent Blob experiment
+(Section VI-C, Fig. 6a).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.learners.base import Learner
+from repro.optim.optimizers import adamw
+
+
+def _weighted_ce(params, X, onehot, w, l2):
+    logits = X @ params["w"] + params["b"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.sum(onehot * logits, axis=-1) - logz
+    reg = l2 * jnp.sum(jnp.square(params["w"]))
+    return -jnp.sum(w * ll) / jnp.maximum(jnp.sum(w), 1e-12) + reg
+
+
+@dataclass(frozen=True)
+class LogisticRegression(Learner):
+    steps: int = 300
+    lr: float = 0.1
+    l2: float = 1e-4
+
+    def fit(self, key, X, classes, w, num_classes):
+        p = X.shape[-1]
+        params = {"w": jnp.zeros((p, num_classes), jnp.float32),
+                  "b": jnp.zeros((num_classes,), jnp.float32)}
+        onehot = jax.nn.one_hot(classes, num_classes)
+        opt = adamw(self.lr)
+        opt_state = opt.init(params)
+        grad_fn = jax.grad(_weighted_ce)
+
+        def body(i, carry):
+            params, opt_state = carry
+            grads = grad_fn(params, X, onehot, w, self.l2)
+            return opt.update(grads, opt_state, params, i)
+
+        params, _ = jax.lax.fori_loop(0, self.steps, body, (params, opt_state))
+        return params
+
+    def predict(self, params, X):
+        return jnp.argmax(X @ params["w"] + params["b"], axis=-1)

@@ -1,0 +1,70 @@
+"""Weighted 3-layer neural network (the paper's Fashion-MNIST learner,
+Section VI-B) fitted with AdamW on the w-weighted cross-entropy."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.learners.base import Learner
+from repro.optim.optimizers import adamw
+
+
+def _init_mlp(key, dims):
+    params = []
+    for i, (d_in, d_out) in enumerate(zip(dims[:-1], dims[1:])):
+        key, sub = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / d_in)
+        params.append({"w": jax.random.normal(sub, (d_in, d_out)) * scale,
+                       "b": jnp.zeros((d_out,))})
+    return params
+
+
+def _forward(params, X):
+    h = X
+    for layer in params[:-1]:
+        h = jax.nn.relu(h @ layer["w"] + layer["b"])
+    last = params[-1]
+    return h @ last["w"] + last["b"]
+
+
+def _weighted_ce(params, X, onehot, w):
+    logits = _forward(params, X)
+    ll = jnp.sum(onehot * logits, axis=-1) - jax.nn.logsumexp(logits, axis=-1)
+    return -jnp.sum(w * ll) / jnp.maximum(jnp.sum(w), 1e-12)
+
+
+@dataclass(frozen=True)
+class MLP(Learner):
+    hidden: tuple[int, ...] = (128, 64)   # 3 layers total with the output
+    steps: int = 400
+    lr: float = 3e-3
+    batch_size: int | None = None         # None => full batch
+
+    def fit(self, key, X, classes, w, num_classes):
+        key, init_key = jax.random.split(key)
+        dims = (X.shape[-1],) + tuple(self.hidden) + (num_classes,)
+        params = _init_mlp(init_key, dims)
+        onehot = jax.nn.one_hot(classes, num_classes)
+        opt = adamw(self.lr)
+        opt_state = opt.init(params)
+        grad_fn = jax.grad(_weighted_ce)
+        n = X.shape[0]
+        bs = self.batch_size or n
+
+        def body(i, carry):
+            params, opt_state = carry
+            if bs < n:
+                idx = jax.random.randint(jax.random.fold_in(key, i), (bs,), 0, n)
+                xb, ob, wb = X[idx], onehot[idx], w[idx]
+            else:
+                xb, ob, wb = X, onehot, w
+            grads = grad_fn(params, xb, ob, wb)
+            return opt.update(grads, opt_state, params, i)
+
+        params, _ = jax.lax.fori_loop(0, self.steps, body, (params, opt_state))
+        return params
+
+    def predict(self, params, X):
+        return jnp.argmax(_forward(params, X), axis=-1)

@@ -1,0 +1,73 @@
+"""Neural-backbone ASCII agent: wraps any assigned architecture (via the
+classifier head) as a Learner, fitting it with the w-weighted cross-entropy
+per Algorithm 2.  Tabular features are linearly projected into d_model and
+treated as a length-1 'sequence'; token inputs pass straight through."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.learners.base import Learner
+from repro.models import classifier
+from repro.models.layers import he_init
+from repro.optim.optimizers import adamw
+
+
+def _logits(params, X, cfg):
+    # features -> a short pseudo-sequence of d_model embeddings
+    emb = jnp.einsum("np,pd->nd", X, params["proj"])[:, None, :]
+    batch = {"tokens": jnp.zeros((X.shape[0], 1), jnp.int32)}
+    x = emb + classifier.transformer.embed_inputs(params, batch, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(carry, unit_params):
+        h, aux = carry
+        h, _, aux_u = classifier.transformer._unit_forward(
+            unit_params, h, cfg, positions)
+        return (h, aux + aux_u), None
+
+    (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                             params["layers"])
+    x = classifier.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    pooled = jnp.mean(x, axis=1)
+    return jnp.einsum("bd,dk->bk", pooled.astype(jnp.float32),
+                      params["cls_head"]["w"].astype(jnp.float32))
+
+
+@dataclass(frozen=True)
+class NeuralBackbone(Learner):
+    cfg: ArchConfig = None
+    steps: int = 200
+    lr: float = 1e-3
+
+    def fit(self, key, X, classes, w, num_classes):
+        k1, k2, k3 = jax.random.split(key, 3)
+        params = classifier.init_params(k1, self.cfg, num_classes)
+        params["proj"] = he_init(k2, (X.shape[-1], self.cfg.d_model),
+                                 jnp.float32)
+        onehot = jax.nn.one_hot(classes, num_classes)
+        opt = adamw(self.lr)
+        opt_state = opt.init(params)
+
+        def loss_fn(p):
+            logits = _logits(p, X, self.cfg)
+            ll = jnp.sum(onehot * logits, -1) - jax.nn.logsumexp(logits, -1)
+            return -jnp.sum(w * ll) / jnp.maximum(jnp.sum(w), 1e-12)
+
+        @jax.jit
+        def step(carry, i):
+            p, s = carry
+            grads = jax.grad(loss_fn)(p)
+            p, s = opt.update(grads, s, p, i)
+            return (p, s), None
+
+        (params, _), _ = jax.lax.scan(step, (params, opt_state),
+                                      jnp.arange(self.steps))
+        return params
+
+    def predict(self, params, X):
+        return jnp.argmax(_logits(params, X, self.cfg), axis=-1)

@@ -1,0 +1,193 @@
+"""Unified model API over all 10 architectures, plus the ignorance-weighted
+loss that makes every backbone a WST-capable ASCII agent (Algorithm 2: the
+per-sample ignorance score enters the train step as ``batch['sample_weight']``).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, transformer
+
+PyTree = Any
+
+
+def is_encdec(cfg: ArchConfig) -> bool:
+    return cfg.cross_attention
+
+
+def init_params(key, cfg: ArchConfig) -> PyTree:
+    return (encdec if is_encdec(cfg) else transformer).init_params(key, cfg)
+
+
+def forward(params, batch, cfg: ArchConfig):
+    return (encdec if is_encdec(cfg) else transformer).forward(params, batch, cfg)
+
+
+def decode_step(params, caches, tokens, pos, cfg: ArchConfig,
+                cache_mode: str = "full"):
+    return (encdec if is_encdec(cfg) else transformer).decode_step(
+        params, caches, tokens, pos, cfg, cache_mode)
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_cache: int, dtype=None):
+    return (encdec if is_encdec(cfg) else transformer).init_cache(
+        cfg, batch, s_cache, dtype)
+
+
+def cache_length(cfg: ArchConfig, seq_len: int) -> int:
+    return transformer.cache_length(cfg, seq_len)
+
+
+def pad_prefill_cache(caches, cfg: ArchConfig, s_cache: int):
+    """Grow the prefill caches (length = prompt) to decode capacity.
+
+    KV caches are padded along the sequence axis (axis 2 in the scanned
+    [U, B, S, ...] layout); SSM recurrent states are O(1) and pass through.
+    The whisper cross K/V is encoder-length and also passes through.
+    """
+    from repro.models.attention import KVCache, QuantKVCache, quantize_kv
+    from repro.models.ssm import SSMState
+
+    def pad_axis2(a):
+        if a.shape[2] >= s_cache:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[2] = (0, s_cache - a.shape[2])
+        return jnp.pad(a, widths)
+
+    def walk(node, key=None):
+        if isinstance(node, QuantKVCache):
+            return QuantKVCache(*(pad_axis2(a) for a in node))
+        if isinstance(node, KVCache):
+            if key == "cross":
+                return node
+            return KVCache(pad_axis2(node.k), pad_axis2(node.v))
+        if isinstance(node, SSMState):
+            return node
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        raise TypeError(type(node))
+
+    return walk(caches)
+
+
+def count_params(params) -> int:
+    return transformer.count_params(params)
+
+
+# ------------------------------------------------------------------ loss
+def weighted_next_token_loss(logits: jnp.ndarray, batch: dict,
+                             cfg: ArchConfig) -> jnp.ndarray:
+    """Ignorance-weighted next-token cross-entropy.
+
+    ``batch['sample_weight']`` [B] is the ASCII ignorance score w_t for each
+    collated sample (sequence); defaults to uniform.  For VLM archs the
+    frontend positions are stripped before the shift; loss is on text only.
+    """
+    tokens = batch["tokens"]
+    if cfg.frontend == "vision" and "patch_emb" in batch:
+        logits = logits[:, batch["patch_emb"].shape[1]:, :]
+    pred = logits[:, :-1, :].astype(jnp.float32)   # upcast fuses into reductions
+    targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(pred, axis=-1)
+    # gold logit via one-hot contraction, not take_along_axis: a gather over
+    # a model-sharded vocab axis would force an all-gather of the logits;
+    # the contraction keeps the reduction local + one small all-reduce.
+    onehot = jax.nn.one_hot(targets, pred.shape[-1], dtype=pred.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", pred, onehot)
+    nll = logz - gold                                          # [B, S-1]
+    tok_mask = batch.get("loss_mask")
+    if tok_mask is None:
+        tok_mask = jnp.ones_like(nll)
+    else:
+        tok_mask = tok_mask[:, 1:].astype(nll.dtype)
+    w = batch.get("sample_weight")
+    if w is None:
+        w = jnp.ones((tokens.shape[0],), nll.dtype)
+    w = w[:, None] * tok_mask
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1e-9)
+
+
+# ------------------------------------------------------------ step builders
+def make_train_step(cfg: ArchConfig, optimizer) -> Callable:
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics)."""
+
+    def loss_fn(p, mb):
+        logits, _, aux = forward(p, mb, cfg)
+        loss = weighted_next_token_loss(logits, mb, cfg)
+        if cfg.is_moe:
+            loss = loss + cfg.router_aux_coef * aux
+        return loss, aux
+
+    def train_step(params, opt_state, batch, step):
+        m = cfg.microbatches
+        if m <= 1:
+            (loss, aux), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            # gradient accumulation: peak activation memory scales with
+            # B/m while the optimizer update stays per-global-batch.
+            mbs = jax.tree.map(
+                lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]),
+                batch)
+
+            def body(carry, mb):
+                gsum, lsum, asum = carry
+                (l, a), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l, asum + a), None
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (gsum, lsum, asum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros(()), jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / m, gsum)
+            loss, aux = lsum / m, asum / m
+        params, opt_state = optimizer.update(grads, opt_state, params, step)
+        return params, opt_state, {"loss": loss, "aux_loss": aux}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    def prefill_step(params, batch):
+        logits, caches, _ = forward(params, batch, cfg)
+        return logits[:, -1:, :], caches
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, cache_mode: str = "full") -> Callable:
+    """One decode step: greedy next token given the running cache."""
+
+    def serve_step(params, caches, tokens, pos):
+        logits, caches = decode_step(params, caches, tokens, pos, cfg,
+                                     cache_mode)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, caches
+
+    return serve_step
+
+
+def quantize_cache(caches, cfg: ArchConfig):
+    """Convert a prefill KVCache tree to int8 (kv_quant serving path)."""
+    from repro.models.attention import KVCache, QuantKVCache, quantize_kv
+    from repro.models.ssm import SSMState
+
+    def walk(node, key=None):
+        if isinstance(node, KVCache):
+            if key == "cross" or cfg.attention == "mla":
+                return node
+            kq, ks = quantize_kv(node.k)
+            vq, vs = quantize_kv(node.v)
+            return QuantKVCache(kq, vq, ks, vs)
+        if isinstance(node, SSMState):
+            return node
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        raise TypeError(type(node))
+
+    return walk(caches)

@@ -1,0 +1,181 @@
+"""Encoder-decoder backbone (whisper-tiny).
+
+The mel-spectrogram + conv feature extractor is the sanctioned frontend
+stub: ``batch["frames"]`` carries precomputed frame embeddings
+[B, encoder_seq, d] (input_specs provides them).  Encoder = bidirectional
+attention blocks; decoder = causal self-attention + cross-attention + MLP,
+scanned over layers.  Decode caches: per-layer self KV plus the encoder
+cross K/V projected once at prefill.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.layers import (embed, embedding_init, mlp_apply, mlp_init,
+                                 rmsnorm, rmsnorm_init, unembed)
+
+PyTree = Any
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _init_enc_layer(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": rmsnorm_init(cfg.d_model, dtype),
+            "attn": attn.gqa_init(k1, cfg, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _init_dec_layer(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": rmsnorm_init(cfg.d_model, dtype),
+            "self_attn": attn.gqa_init(k1, cfg, dtype),
+            "ln_x": rmsnorm_init(cfg.d_model, dtype),
+            "cross_attn": attn.cross_attn_init(k2, cfg, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def init_params(key, cfg: ArchConfig) -> PyTree:
+    dtype = _dtype(cfg)
+    ke, kd, kt = jax.random.split(key, 3)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    return {
+        "embed": embedding_init(kt, cfg.vocab_size, cfg.d_model, dtype),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(enc_keys),
+        "enc_norm": rmsnorm_init(cfg.d_model, dtype),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(dec_keys),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+
+
+def encode(params, frames: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    b, t, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+    x = frames.astype(_dtype(cfg))
+
+    def body(x, p):
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        q, k, v = attn._project_qkv(p["attn"], h, cfg, positions)
+        mask = jnp.ones((1, 1, 1, t, t), bool)                # bidirectional
+        out = attn._sdpa(q, k, v, mask)
+        x = x + jnp.einsum("bse,ed->bsd", out.reshape(b, t, -1), p["attn"]["wo"])
+        x = x + mlp_apply(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg.act)
+        return x, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    else:
+        for i in range(cfg.encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], params["enc_layers"]))
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def cross_kv(params, enc_out: jnp.ndarray, cfg: ArchConfig) -> attn.KVCache:
+    """Project encoder output to per-decoder-layer K/V (done once)."""
+    def body(_, p):
+        return None, attn.encode_kv(p["cross_attn"], enc_out, cfg)
+    if cfg.scan_layers:
+        _, kv = jax.lax.scan(body, None, params["dec_layers"])
+        return kv                                              # [L, B, T, kv, d]
+    kvs = [body(None, jax.tree.map(lambda a: a[i], params["dec_layers"]))[1]
+           for i in range(cfg.num_layers)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *kvs)
+
+
+def _dec_layer_forward(p, x, cfg, positions, enc_kv_l):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    out, cache = attn.gqa_forward(p["self_attn"], h, cfg, positions)
+    x = x + out
+    h = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+    x = x + attn.cross_attn(p["cross_attn"], h, enc_kv_l, cfg)
+    x = x + mlp_apply(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg.act)
+    return x, cache
+
+
+def forward(params, batch: dict, cfg: ArchConfig):
+    """Teacher-forced training / prefill.
+
+    batch: {"frames": [B,T,d], "tokens": [B,S]}.
+    Returns (logits, {"self": caches, "cross": enc_kv}, aux=0).
+    """
+    enc_out = encode(params, batch["frames"], cfg)
+    enc_kv = cross_kv(params, enc_out, cfg)
+    x = embed(params["embed"], batch["tokens"], cfg.embed_scale)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(x, inp):
+        p, kv_l = inp
+        x, cache = _dec_layer_forward(p, x, cfg, positions, kv_l)
+        return x, cache
+
+    if cfg.scan_layers:
+        x, caches = jax.lax.scan(body, x, (params["dec_layers"], enc_kv))
+    else:
+        cs = []
+        for i in range(cfg.num_layers):
+            x, c = body(x, (jax.tree.map(lambda a: a[i], params["dec_layers"]),
+                            jax.tree.map(lambda a: a[i], enc_kv)))
+            cs.append(c)
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs), *cs)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    return logits, {"self": caches, "cross": enc_kv}, jnp.zeros((), jnp.float32)
+
+
+def decode_step(params, caches, tokens: jnp.ndarray, pos, cfg: ArchConfig,
+                cache_mode: str = "full"):
+    """One decoder token; attends to the full self cache + encoder memory."""
+    x = embed(params["embed"], tokens, cfg.embed_scale)
+    b = x.shape[0]
+
+    def body(x, inp):
+        p, cache_l, kv_l = inp
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        out, new_cache = attn.gqa_decode(p["self_attn"], h, cache_l, pos, cfg,
+                                         cache_mode)
+        x = x + out
+        h = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        x = x + attn.cross_attn(p["cross_attn"], h, kv_l, cfg)
+        x = x + mlp_apply(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg.act)
+        return x, new_cache
+
+    if cfg.scan_layers:
+        x, new_self = jax.lax.scan(body, x,
+                                   (params["dec_layers"], caches["self"],
+                                    caches["cross"]))
+    else:
+        cs = []
+        for i in range(cfg.num_layers):
+            x, c = body(x, (jax.tree.map(lambda a: a[i], params["dec_layers"]),
+                            jax.tree.map(lambda a: a[i], caches["self"]),
+                            jax.tree.map(lambda a: a[i], caches["cross"])))
+            cs.append(c)
+        new_self = jax.tree.map(lambda *xs: jnp.stack(xs), *cs)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    return logits, {"self": new_self, "cross": caches["cross"]}
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_cache: int, dtype=None):
+    dtype = dtype or _dtype(cfg)
+    L, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    t = cfg.encoder_seq
+    return {
+        "self": attn.KVCache(
+            k=jnp.zeros((L, batch, s_cache, kv, hd), dtype),
+            v=jnp.zeros((L, batch, s_cache, kv, hd), dtype)),
+        "cross": attn.KVCache(
+            k=jnp.zeros((L, batch, t, kv, hd), dtype),
+            v=jnp.zeros((L, batch, t, kv, hd), dtype)),
+    }

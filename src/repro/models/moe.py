@@ -1,0 +1,101 @@
+"""Mixture-of-Experts: top-k router + expert FFNs.
+
+Implementations (cfg.moe_impl):
+  * ``dense`` — every expert computes every token, mask-combined.  Exact
+    oracle used by smoke tests and as the numerical reference; FLOPs are
+    E/k-fold inflated, so never used for roofline numbers.
+  * ``gmm``   — grouped matmul: tokens are sorted by expert and processed
+    with ``jax.lax.ragged_dot`` against stacked expert weights (the
+    megablocks/MaxText formulation; on TPU this lowers to the grouped MXU
+    matmul).  Default for training and the dry-run: HLO FLOPs reflect only
+    *activated* experts.
+  * ``ep_a2a`` — expert-parallel shard_map with fixed-capacity all_to_all
+    (see sharding/ep.py); a §Perf lever wired in by the launcher.
+
+Router: softmax over experts, top-k, renormalized among the chosen k
+(Qwen3/Mixtral convention), plus the standard load-balance auxiliary loss
+(Switch: E * sum_e f_e * P_e) surfaced to the trainer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import he_init
+
+
+def moe_init(key, cfg: ArchConfig, dtype) -> dict:
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "router": he_init(ks[0], (d, e), dtype),
+        "wi_gate": (jax.random.normal(ks[1], (e, d, f)) * (2.0 / d) ** 0.5).astype(dtype),
+        "wi_up": (jax.random.normal(ks[2], (e, d, f)) * (2.0 / d) ** 0.5).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (e, f, d)) * (2.0 / f) ** 0.5).astype(dtype),
+    }
+
+
+def router_topk(params, x_flat: jnp.ndarray, cfg: ArchConfig):
+    """x_flat [T, d] -> (probs [T, k], idx [T, k], aux_loss scalar)."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    probs, idx = jax.lax.top_k(probs_full, cfg.top_k)
+    probs = probs / jnp.maximum(jnp.sum(probs, -1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss.
+    e = cfg.num_experts
+    frac_tokens = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, e), axis=1), axis=0)       # f_e
+    frac_probs = jnp.mean(probs_full, axis=0)                  # P_e
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return probs.astype(x_flat.dtype), idx, aux
+
+
+def _expert_ffn_dense(params, x_flat, probs, idx, cfg: ArchConfig):
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    gate = jnp.einsum("td,edf->tef", x_flat, params["wi_gate"])
+    up = jnp.einsum("td,edf->tef", x_flat, params["wi_up"])
+    h = act(gate) * up
+    y_all = jnp.einsum("tef,efd->ted", h, params["wo"])        # [T, E, d]
+    combine = jnp.zeros((x_flat.shape[0], cfg.num_experts), x_flat.dtype)
+    combine = jax.vmap(lambda c, p, i: c.at[i].add(p))(combine, probs, idx)
+    return jnp.einsum("te,ted->td", combine, y_all)
+
+
+def _expert_ffn_gmm(params, x_flat, probs, idx, cfg: ArchConfig):
+    t, d = x_flat.shape
+    k, e = cfg.top_k, cfg.num_experts
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    flat_expert = idx.reshape(-1)                              # [T*k]
+    order = jnp.argsort(flat_expert)                           # stable
+    token_of = order // k
+    x_sorted = x_flat[token_of]                                # [T*k, d]
+    group_sizes = jnp.bincount(flat_expert, length=e).astype(jnp.int32)
+    gate = jax.lax.ragged_dot(x_sorted, params["wi_gate"], group_sizes)
+    up = jax.lax.ragged_dot(x_sorted, params["wi_up"], group_sizes)
+    h = act(gate) * up
+    y = jax.lax.ragged_dot(h, params["wo"], group_sizes)       # [T*k, d]
+    p_sorted = probs.reshape(-1)[order][:, None].astype(y.dtype)
+    out = jnp.zeros((t, d), y.dtype).at[token_of].add(y * p_sorted)
+    return out.astype(x_flat.dtype)
+
+
+def moe_apply(params, x: jnp.ndarray, cfg: ArchConfig,
+              impl: str | None = None):
+    """x [B, S, d] -> (y [B, S, d], aux_loss)."""
+    impl = impl or cfg.moe_impl
+    if impl == "ep_a2a":
+        # routing happens inside the shard_map block (per data shard)
+        from repro.sharding.ep import moe_apply_ep_a2a
+        return moe_apply_ep_a2a(params, x, cfg)
+    b, s, d = x.shape
+    x_flat = x.reshape(-1, d)
+    probs, idx, aux = router_topk(params, x_flat, cfg)
+    if impl == "dense":
+        y = _expert_ffn_dense(params, x_flat, probs, idx, cfg)
+    elif impl == "gmm":
+        y = _expert_ffn_gmm(params, x_flat, probs, idx, cfg)
+    else:
+        raise ValueError(f"unknown moe_impl {impl!r}")
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,199 @@
+"""Mamba2 SSD (state-space duality) block — arXiv:2405.21060.
+
+TPU adaptation: the selective scan is computed in the *chunked SSD* form —
+an intra-chunk quadratic (attention-like) matmul term plus an inter-chunk
+state recurrence — so nearly all FLOPs are MXU matmuls and the sequential
+dependency is only over S/chunk steps (lax.scan).  Jamba's Mamba-1 layers
+are also implemented with this SSD formulation (state kept at 16); see
+DESIGN.md §2 assumption log.
+
+Sharding note: unlike the reference implementation's fused ``in_proj``
+(one matrix emitting z|x|B|C|dt), projections here are split per stream so
+tensor parallelism can shard d_inner/heads cleanly without slicing a
+sharded dimension; the depthwise causal conv is channel-independent, so it
+splits with them at zero cost.
+
+Decode carries an O(1) recurrent state per layer:
+  conv_{x,B,C} [B, conv-1, *]  and  ssm_state [B, H, N, P].
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import he_init, rmsnorm, rmsnorm_init
+
+
+class SSMState(NamedTuple):
+    conv_x: jnp.ndarray       # [B, conv-1, d_inner]
+    conv_B: jnp.ndarray       # [B, conv-1, N]
+    conv_C: jnp.ndarray       # [B, conv-1, N]
+    ssm: jnp.ndarray          # [B, H, N, P]
+
+
+def ssm_init(key, cfg: ArchConfig, dtype) -> dict:
+    d, n, conv = cfg.d_model, cfg.ssm_state, cfg.ssm_conv
+    d_inner, h = cfg.d_inner, cfg.ssm_heads
+    ks = jax.random.split(key, 7)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba convention)
+    u = jax.random.uniform(ks[5], (h,), minval=jnp.log(1e-3),
+                           maxval=jnp.log(1e-1))
+    dt = jnp.exp(u)
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_z": he_init(ks[0], (d, d_inner), dtype),
+        "in_x": he_init(ks[1], (d, d_inner), dtype),
+        "in_B": he_init(ks[2], (d, n), dtype),
+        "in_C": he_init(ks[3], (d, n), dtype),
+        "in_dt": he_init(ks[4], (d, h), dtype),
+        "conv_x": (jax.random.normal(ks[6], (conv, d_inner)) / conv).astype(dtype),
+        "conv_x_bias": jnp.zeros((d_inner,), dtype),
+        "conv_B": (jax.random.normal(jax.random.fold_in(ks[6], 1), (conv, n))
+                   / conv).astype(dtype),
+        "conv_B_bias": jnp.zeros((n,), dtype),
+        "conv_C": (jax.random.normal(jax.random.fold_in(ks[6], 2), (conv, n))
+                   / conv).astype(dtype),
+        "conv_C_bias": jnp.zeros((n,), dtype),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": he_init(jax.random.fold_in(ks[6], 3), (d_inner, d), dtype,
+                            fan_in=d_inner),
+    }
+
+
+def _conv_full(w, b, x, conv: int):
+    """Depthwise causal conv along S, silu-activated. x [B,S,C]."""
+    pad = jnp.pad(x, ((0, 0), (conv - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(conv))
+    return jax.nn.silu(out + b)
+
+
+def _conv_step(w, b, state, x_new):
+    """One-token conv. state [B,conv-1,C], x_new [B,1,C] -> ([B,C], state)."""
+    window = jnp.concatenate([state, x_new], axis=1)          # [B,conv,C]
+    out = jnp.einsum("bcd,cd->bd", window, w) + b
+    return jax.nn.silu(out), window[:, 1:, :]
+
+
+def ssd_chunked(x, dt, A_log, B, C, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x [b,s,h,p] (inputs, *not* yet dt-scaled), dt [b,s,h] f32, A_log [h],
+    B/C [b,s,n] (single group).  Returns (y [b,s,h,p], H_final [b,h,n,p]).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    nc = s // chunk
+    assert nc * chunk == s, (s, chunk)
+    a = -jnp.exp(A_log.astype(jnp.float32))                  # [h], negative
+    dA = dt * a                                              # [b,s,h] <= 0
+    xdt = (x.astype(jnp.float32) * dt[..., None])            # dt-scaled input
+
+    xc = xdt.reshape(b, nc, chunk, h, p)
+    dAc = dA.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, n).astype(jnp.float32)
+    cum = jnp.cumsum(dAc, axis=2)                            # [b,c,L,h]
+
+    # --- intra-chunk (quadratic, attention-like) term
+    cb = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)               # [b,c,L,L]
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # [b,c,t,s,h]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask inside the exponent: for t < s the difference is positive and
+    # exp overflows to inf (inf * 0 = NaN) if masked after.
+    seg = jnp.where(mask[None, None, :, :, None], seg, -jnp.inf)
+    m = cb[..., None] * jnp.exp(seg)                          # [b,c,t,s,h]
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", m, xc)
+
+    # --- chunk boundary states
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)          # [b,c,L,h]
+    S = jnp.einsum("bcln,bclhp,bclh->bchnp", Bc, xc, decay_to_end)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # [b,c,h]
+
+    def step(H, inp):
+        S_k, dec = inp
+        H_new = H * dec[:, :, None, None] + S_k
+        return H_new, H                                       # emit pre-state
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    S_sw = jnp.moveaxis(S, 1, 0)                             # [c,b,h,n,p]
+    dec_sw = jnp.moveaxis(chunk_decay, 1, 0)                 # [c,b,h]
+    H_final, H_prev = jax.lax.scan(step, h0, (S_sw, dec_sw))
+    H_prev = jnp.moveaxis(H_prev, 0, 1)                      # [b,c,h,n,p]
+
+    # --- inter-chunk term
+    decay_from_start = jnp.exp(cum)                          # [b,c,L,h]
+    y_inter = jnp.einsum("bcln,bchnp,bclh->bclhp", Cc, H_prev,
+                         decay_from_start)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, H_final
+
+
+def ssm_forward(params, x: jnp.ndarray, cfg: ArchConfig
+                ) -> tuple[jnp.ndarray, SSMState]:
+    """Full-sequence SSD block. x [B,S,d] -> (y [B,S,d], final state)."""
+    b, s, _ = x.shape
+    d_inner, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    conv = cfg.ssm_conv
+    z = jnp.einsum("bsd,de->bse", x, params["in_z"])
+    xs_raw = jnp.einsum("bsd,de->bse", x, params["in_x"])
+    B_raw = jnp.einsum("bsd,dn->bsn", x, params["in_B"])
+    C_raw = jnp.einsum("bsd,dn->bsn", x, params["in_C"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, params["in_dt"]).astype(jnp.float32)
+        + params["dt_bias"])
+    state = SSMState(conv_x=xs_raw[:, -(conv - 1):, :],
+                     conv_B=B_raw[:, -(conv - 1):, :],
+                     conv_C=C_raw[:, -(conv - 1):, :],
+                     ssm=jnp.zeros((b, h, n, p), jnp.float32))
+    xs = _conv_full(params["conv_x"], params["conv_x_bias"], xs_raw, conv)
+    B = _conv_full(params["conv_B"], params["conv_B_bias"], B_raw, conv)
+    C = _conv_full(params["conv_C"], params["conv_C_bias"], C_raw, conv)
+    xs = xs.reshape(b, s, h, p)
+    chunk = min(cfg.ssm_chunk, s)
+    y, H = ssd_chunked(xs, dt, params["A_log"], B, C, chunk)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, state._replace(ssm=H.astype(jnp.float32))
+
+
+def ssm_decode(params, x: jnp.ndarray, state: SSMState, cfg: ArchConfig
+               ) -> tuple[jnp.ndarray, SSMState]:
+    """Single-token recurrent step. x [B,1,d]."""
+    b = x.shape[0]
+    d_inner, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z = jnp.einsum("bsd,de->bse", x, params["in_z"])
+    xs_raw = jnp.einsum("bsd,de->bse", x, params["in_x"])
+    B_raw = jnp.einsum("bsd,dn->bsn", x, params["in_B"])
+    C_raw = jnp.einsum("bsd,dn->bsn", x, params["in_C"])
+    dt1 = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, params["in_dt"]).astype(jnp.float32)
+        + params["dt_bias"])[:, 0]                            # [B,H]
+    xs1, cx = _conv_step(params["conv_x"], params["conv_x_bias"],
+                         state.conv_x, xs_raw)
+    B1, cB = _conv_step(params["conv_B"], params["conv_B_bias"],
+                        state.conv_B, B_raw)
+    C1, cC = _conv_step(params["conv_C"], params["conv_C_bias"],
+                        state.conv_C, C_raw)
+    xs1 = xs1.reshape(b, h, p).astype(jnp.float32)
+    B1 = B1.astype(jnp.float32)
+    C1 = C1.astype(jnp.float32)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dec = jnp.exp(dt1 * a)                                   # [B,H]
+    upd = jnp.einsum("bn,bhp,bh->bhnp", B1, xs1, dt1)
+    H = state.ssm * dec[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", C1, H)
+    y = y + params["D"][None, :, None] * xs1
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return out, SSMState(conv_x=cx, conv_B=cB, conv_C=cC, ssm=H)

@@ -1,0 +1,88 @@
+"""Minimal optimizer library (optax is not available offline).
+
+Optimizers follow the (init, update) pure-function convention so they
+compose with jit/scan and with sharded parameter pytrees.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jnp.ndarray], tuple[PyTree, PyTree]]
+    # update(grads, opt_state, params, step) -> (new_params, new_opt_state)
+
+
+def _tree_zeros(params: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+def sgd(lr: float | Callable[[jnp.ndarray], jnp.ndarray], momentum: float = 0.0,
+        nesterov: bool = False) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr))
+
+    def init(params):
+        return {"mu": _tree_zeros(params)} if momentum else {}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            step_dir = jax.tree.map(lambda m, g: momentum * m + g, mu, grads) if nesterov else mu
+            new_state = {"mu": mu}
+        else:
+            step_dir = grads
+            new_state = {}
+        new_params = jax.tree.map(lambda p, d: p - lr_t * d.astype(p.dtype), params, step_dir)
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float | Callable[[jnp.ndarray], jnp.ndarray], b1: float = 0.9,
+          b2: float = 0.999, eps: float = 1e-8, weight_decay: float = 0.0,
+          grad_clip_norm: float | None = None) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr))
+
+    def init(params):
+        return {"m": _tree_zeros(params), "v": _tree_zeros(params)}
+
+    def update(grads, state, params, step):
+        if grad_clip_norm is not None:
+            grads = clip_by_global_norm(grads, grad_clip_norm)
+        t = step.astype(jnp.float32) + 1.0
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(m_.dtype),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(v_.dtype)),
+                         state["v"], grads)
+        lr_t = lr_fn(step)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def leaf(p, m_, v_):
+            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(upd.dtype)
+            return (p.astype(jnp.float32) - lr_t * upd).astype(p.dtype)
+
+        new_params = jax.tree.map(leaf, params, m, v)
+        return new_params, {"m": m, "v": v}
+
+    return Optimizer(init, update)

@@ -1,0 +1,30 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine_with_warmup(peak: float, warmup_steps: int, total_steps: int,
+                       floor: float = 0.0):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def linear_decay(peak: float, warmup_steps: int, total_steps: int):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        return jnp.where(step < warmup_steps, warm, peak * (1.0 - prog))
+    return fn

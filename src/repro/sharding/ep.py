@@ -1,0 +1,120 @@
+"""Expert-parallel MoE with explicit all-to-all (moe_impl='ep_a2a').
+
+The §Perf fix for the collective-bound MoE baselines: under plain pjit the
+data-sharded expert banks force XLA to all-gather either every token or
+every expert bank per layer (O(T·d) or O(E·d·f) wire bytes).  The
+communication-optimal schedule is the classic two-hop all_to_all:
+
+  1. each data shard routes its T_loc·k (token, expert) picks to the shard
+     owning that expert — fixed-capacity buffers [D, C, d], one all_to_all;
+  2. the owner runs the grouped matmul (ragged_dot) over its E_loc experts
+     with the ff dim sharded over ``model`` (psum over model combines ff
+     partials);
+  3. a second all_to_all returns results; the source applies gate probs and
+     scatter-adds into the token order.
+
+Wire bytes per device per layer ~ 2·T_loc·k·d·bytes — independent of E —
+vs. the baseline's O(T·d) gather.  Tokens beyond capacity C =
+ceil(T_loc·k/D·capacity_factor) are dropped (standard Switch semantics);
+the router aux loss keeps loads balanced so drops are rare.
+
+Everything is differentiable (all_to_all/psum/gather transpose cleanly),
+so the same code serves train and serve paths.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.moe import router_topk
+from repro.sharding.context import current_mesh
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def moe_apply_ep_a2a(params, x: jnp.ndarray, cfg: ArchConfig):
+    """x [B, S, d] (batch sharded over the data axes) -> (y, aux)."""
+    mesh = current_mesh()
+    if mesh is None or "data" not in mesh.axis_names:
+        from repro.models import moe as moe_lib          # single-host fallback
+        return moe_lib.moe_apply(params, x, cfg, impl="gmm")
+
+    data_ax = "data"
+    model_ax = "model" if "model" in mesh.axis_names else None
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    D = mesh.shape[data_ax]
+    E, k = cfg.num_experts, cfg.top_k
+    assert E % D == 0, (E, D)
+    e_loc = E // D
+    b, s, d = x.shape
+    b_loc = b // int(np.prod([mesh.shape[a] for a in dp]))
+    t_loc = b_loc * s
+    cap = _round_up(int(t_loc * k / D * cfg.capacity_factor) + 1, 128)
+
+    ff_ax = model_ax if (model_ax and cfg.moe_d_ff % mesh.shape[model_ax] == 0
+                         ) else None
+    w_spec = P(data_ax, None, ff_ax)
+    wo_spec = P(data_ax, ff_ax, None)
+
+    def inner(x_loc, router_w, wg, wu, wo):
+        tl = x_loc.reshape(-1, d)                         # [T_loc, d]
+        probs, idx, aux = router_topk({"router": router_w}, tl, cfg)
+        flat_e = idx.reshape(-1)                          # [T_loc*k]
+        p_flat = probs.reshape(-1)
+        dest = flat_e // e_loc
+        order = jnp.argsort(dest)                         # stable
+        dest_s = dest[order]
+        counts = jnp.bincount(dest, length=D)
+        starts = jnp.cumsum(counts) - counts
+        rank = jnp.arange(dest.shape[0]) - starts[dest_s]
+        keep = rank < cap
+        slot = jnp.where(keep, dest_s * cap + rank, D * cap)  # overflow slot
+        tok_s = order // k
+
+        def scatter(vals, fill=0.0):
+            buf = jnp.full((D * cap + 1,) + vals.shape[1:], fill, vals.dtype)
+            return buf.at[slot].set(vals)[:-1]
+
+        send_x = scatter(tl[tok_s])
+        send_e = scatter((flat_e[order] % e_loc).astype(jnp.int32), e_loc)
+        # ---- hop 1: tokens to their expert's shard
+        recv_x = jax.lax.all_to_all(send_x.reshape(D, cap, d), data_ax,
+                                    0, 0, tiled=True).reshape(D * cap, d)
+        recv_e = jax.lax.all_to_all(send_e.reshape(D, cap), data_ax,
+                                    0, 0, tiled=True).reshape(D * cap)
+        # invalid/padded entries: route to expert 0 with zeroed input
+        valid = recv_e < e_loc
+        re0 = jnp.where(valid, recv_e, 0)
+        rx = jnp.where(valid[:, None], recv_x, 0.0)
+        order2 = jnp.argsort(re0)
+        gs = jnp.bincount(re0, length=e_loc).astype(jnp.int32)
+        rs = rx[order2]
+        act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+        h = act(jax.lax.ragged_dot(rs, wg, gs)) * jax.lax.ragged_dot(rs, wu, gs)
+        y = jax.lax.ragged_dot(h, wo, gs)                 # [D*cap, d]
+        y = jnp.zeros_like(y).at[order2].set(y)
+        if ff_ax is not None:
+            y = jax.lax.psum(y, model_ax)                 # combine ff shards
+        # ---- hop 2: results back to their source shard
+        back = jax.lax.all_to_all(y.reshape(D, cap, d), data_ax,
+                                  0, 0, tiled=True).reshape(D * cap, d)
+        gathered = back[jnp.where(keep, slot, 0)]
+        vals = gathered * (p_flat[order] * keep)[:, None].astype(gathered.dtype)
+        out = jnp.zeros((t_loc, d), gathered.dtype).at[tok_s].add(vals)
+        aux = jax.lax.pmean(aux, data_ax)
+        return out.reshape(b_loc, s, d).astype(x_loc.dtype), aux
+
+    mapped = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(dp, None, None), P(None, None), w_spec, w_spec, wo_spec),
+        out_specs=(P(dp, None, None), P()),
+        check_vma=False)
+    return mapped(x, params["router"], params["wi_gate"], params["wi_up"],
+                  params["wo"])

@@ -1,0 +1,240 @@
+"""Sharding rules: parameter-path patterns -> PartitionSpec, plus
+shape-aware batch/cache specs.
+
+Strategy (DESIGN.md §5):
+  * params: Megatron-style tensor parallelism on the ``model`` axis (heads,
+    d_ff, vocab); MoE expert banks sharded expert-dim over ``data`` and
+    ff-dim over ``model`` (FSDP-like, brings qwen3-moe's 454 GB expert bank
+    to ~1.8 GB/chip); SSM streams sharded on d_inner/heads.
+  * batch: data parallel over ("pod", "data").
+  * every rule is divisibility-guarded: a dimension that does not divide by
+    the axis size falls back to replication instead of mis-lowering.  Tiny
+    backbones (d_model < 1024: whisper-tiny, mamba2-130m) skip TP entirely —
+    sharding a 384-wide projection 16 ways buys nothing and forces padding.
+
+The rule table is keyed on parameter *names* (leaf path suffixes), so it
+covers every model family without the model code knowing about meshes.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+
+PyTree = Any
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    axes = (axes,) if isinstance(axes, str) else axes
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _maybe(mesh: Mesh, axes, dim: int):
+    """axes if dim divides evenly, else None (replicate)."""
+    return axes if dim % _axsize(mesh, axes) == 0 else None
+
+
+def use_tp(cfg: ArchConfig) -> bool:
+    return cfg.d_model >= 1024
+
+
+# Rule table: (regex on 'a/b/c' path, fn(cfg, mesh, shape) -> trailing spec).
+# The spec is right-aligned: leading (scan/stack) dims are replicated.
+def _rules(cfg: ArchConfig, mesh: Mesh):
+    tp = "model" if use_tp(cfg) else None
+
+    def last_dim(path, shape):       # shard the output features
+        return (None,) * (len(shape) - 1) + (_maybe(mesh, tp, shape[-1]),)
+
+    def attn_q(path, shape):         # shard on whole q-head boundaries
+        ax = tp if cfg.num_heads % _axsize(mesh, tp) == 0 else None
+        return (None,) * (len(shape) - 1) + (_maybe(mesh, ax, shape[-1]),)
+
+    def attn_kv(path, shape):        # kv heads < tp: replicate (GQA-TP rule)
+        ax = tp if cfg.num_kv_heads % _axsize(mesh, tp) == 0 else None
+        return (None,) * (len(shape) - 1) + (_maybe(mesh, ax, shape[-1]),)
+
+    def attn_o(path, shape):         # wo input dim follows the q sharding
+        ax = tp if cfg.num_heads % _axsize(mesh, tp) == 0 else None
+        if cfg.attention == "mla" and cfg.mla_rank_shard:
+            # MLA: the wo input (H*dv) is a pure contraction dim — sharding
+            # it never crosses a *data* head boundary (partial sums +
+            # all-reduce), so head count need not divide the axis.
+            ax = tp
+        return (None,) * (len(shape) - 2) + (_maybe(mesh, ax, shape[-2]), None)
+
+    def mla_b(path, shape):
+        # [r_lora, H*dims]: prefer whole-head output sharding; when the head
+        # count does not divide the axis (minicpm3: 40 heads, 16-way model)
+        # and mla_rank_shard is set, shard the *input rank* instead —
+        # weights/optimizer state shard 16x at the cost of one all-reduce
+        # per projection (capacity-for-bandwidth; see EXPERIMENTS §Perf).
+        if cfg.num_heads % _axsize(mesh, tp) == 0:
+            return (None,) * (len(shape) - 1) + (_maybe(mesh, tp, shape[-1]),)
+        if cfg.mla_rank_shard:
+            return (None,) * (len(shape) - 2) + (_maybe(mesh, tp, shape[-2]),
+                                                 None)
+        return (None,) * len(shape)
+
+    def first_of_two(path, shape):   # shard the input features (2nd-last)
+        return (None,) * (len(shape) - 2) + (_maybe(mesh, tp, shape[-2]), None)
+
+    def expert_bank(path, shape):    # [E, d, f] or [E, f, d]
+        e_want = cfg.moe_expert_axis if cfg.moe_expert_axis in mesh.axis_names \
+            else None
+        f_want = cfg.moe_ff_axis if cfg.moe_ff_axis in mesh.axis_names else None
+        e_ax = _maybe(mesh, e_want, shape[-3])
+        f_dim = shape[-2] if path.endswith("wo") else shape[-1]
+        f_ax = _maybe(mesh, f_want, f_dim)
+        if f_ax == e_ax:
+            f_ax = None                  # never reuse a mesh axis in one spec
+        if path.endswith("wo"):
+            return (None,) * (len(shape) - 3) + (e_ax, f_ax, None)
+        return (None,) * (len(shape) - 3) + (e_ax, None, f_ax)
+
+    def vocab_first(path, shape):    # embedding [V, d]
+        return (None,) * (len(shape) - 2) + (_maybe(mesh, tp, shape[-2]), None)
+
+    def replicate(path, shape):
+        return (None,) * len(shape)
+
+    return [
+        (r"embed/embedding$", vocab_first),
+        (r"lm_head/unembedding$", last_dim),
+        (r"(attn|self_attn|cross_attn)/wq$", attn_q),
+        (r"(attn|self_attn|cross_attn)/(wk|wv)$", attn_kv),
+        (r"(attn|self_attn|cross_attn)/wo$", attn_o),
+        (r"attn/(wq_b|wk_b|wv_b)$", mla_b),    # MLA latent projections
+        (r"attn/(wq_a|wkv_a)$", replicate),
+        (r"mlp/wi_(gate|up)$", last_dim),
+        (r"mlp/wo$", first_of_two),
+        (r"moe/router$", replicate),
+        (r"moe/(wi_gate|wi_up|wo)$", expert_bank),
+        (r"ssm/in_(z|x)$", last_dim),
+        (r"ssm/in_dt$", last_dim),
+        (r"ssm/in_(B|C)$", replicate),
+        (r"ssm/conv_x(_bias)?$", last_dim),
+        (r"ssm/(conv_[BC](_bias)?|A_log|D|dt_bias)$", replicate),
+        (r"ssm/out_proj$", first_of_two),
+        (r"ssm/norm/scale$", last_dim),
+        (r".*", replicate),           # norms, biases, heads, projections
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "name",
+                                                   getattr(p, "idx", p)))))
+    return "/".join(parts)
+
+
+def param_specs(params_shape: PyTree, cfg: ArchConfig, mesh: Mesh) -> PyTree:
+    """PartitionSpec pytree for a parameter (or optimizer-state) tree."""
+    rules = _rules(cfg, mesh)
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        for pat, fn in rules:
+            if re.search(pat, ps):
+                return P(*fn(ps, leaf.shape))
+        raise AssertionError(ps)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    return jax.tree_util.tree_unflatten(treedef,
+                                        [spec_for(p, l) for p, l in flat])
+
+
+# ------------------------------------------------------------- activations
+def batch_spec(cfg: ArchConfig, shape: InputShape, mesh: Mesh) -> PyTree:
+    """Specs for the input batch dict (shape-aware)."""
+    dp = data_axes(mesh)
+    b_ax = _maybe(mesh, dp, shape.global_batch)
+    specs = {"tokens": P(b_ax, None)}
+    if shape.kind == "train":
+        specs["sample_weight"] = P(b_ax)
+    if cfg.frontend == "vision":
+        specs["patch_emb"] = P(b_ax, None, None)
+    if cfg.frontend == "audio":
+        specs["frames"] = P(b_ax, None, None)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, batch: int,
+                s_cache: int) -> PyTree:
+    """Specs for the decode cache pytree (scanned [U, B, S, ...] layout).
+
+    KV heads shard over ``model`` when divisible; otherwise the cache
+    *length* shards over ``model`` (long_500k batch=1 also pushes the
+    length onto the data axes)."""
+    from repro.models.attention import KVCache, QuantKVCache
+    from repro.models.ssm import SSMState
+
+    dp = data_axes(mesh)
+    tp = "model" if use_tp(cfg) else None
+    b_ax = _maybe(mesh, dp, batch)
+    if batch == 1:
+        # batch unshardable: spread the cache length over every axis that
+        # divides it (data + model)
+        cand = dp + ((tp,) if tp else ())
+        seq_long = tuple(a for a in cand if s_cache % mesh.shape[a] == 0)
+        seq_long = seq_long or None
+
+    def kv_spec(leaf_ndim: int, kv_heads: int):
+        # [U, B, S, KV, D] (gqa) or [U, B, S, R] (mla latents)
+        if batch == 1:
+            seq_ax = seq_long
+        elif leaf_ndim == 5 and tp and _maybe(mesh, tp, kv_heads):
+            return P(None, b_ax, None, tp, None)   # heads shard cleanly
+        else:
+            seq_ax = _maybe(mesh, tp, s_cache)     # fall back: shard length
+        if leaf_ndim == 5:
+            return P(None, b_ax, seq_ax, None, None)
+        return P(None, b_ax, seq_ax, None)
+
+    def walk(node, key=None):
+        if isinstance(node, QuantKVCache):
+            base = kv_spec(5, cfg.num_kv_heads)
+            scale = P(*base[:-1])          # scales drop the head_dim axis
+            return QuantKVCache(base, base, scale, scale)
+        if isinstance(node, KVCache):
+            if key == "cross":       # encoder memory: short, replicate S
+                return KVCache(P(None, b_ax, None, None, None),
+                               P(None, b_ax, None, None, None))
+            if cfg.attention == "mla":
+                return KVCache(kv_spec(4, 0), kv_spec(4, 0))
+            return KVCache(kv_spec(5, cfg.num_kv_heads),
+                           kv_spec(5, cfg.num_kv_heads))
+        if isinstance(node, SSMState):
+            h_ax = _maybe(mesh, tp, cfg.ssm_heads)
+            di_ax = _maybe(mesh, tp, cfg.d_inner)
+            return SSMState(conv_x=P(None, b_ax, None, di_ax),
+                            conv_B=P(None, b_ax, None, None),
+                            conv_C=P(None, b_ax, None, None),
+                            ssm=P(None, b_ax, h_ax, None, None))
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        raise TypeError(type(node))
+
+    return walk
+
+
+def cache_spec_tree(caches_shape: PyTree, cfg: ArchConfig, mesh: Mesh,
+                    batch: int, s_cache: int) -> PyTree:
+    return cache_specs(cfg, mesh, batch, s_cache)(caches_shape)
+
+
+def named(mesh: Mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

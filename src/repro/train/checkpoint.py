@@ -1,0 +1,54 @@
+"""Checkpointing: pytree -> sharded .npz + structure manifest (orbax is not
+available offline).  Handles any nested dict/NamedTuple/list of arrays via
+jax.tree flattening with key paths."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(directory: str, step: int, tree: PyTree, max_keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+    with open(os.path.join(directory, "latest.json"), "w") as f:
+        json.dump({"step": step, "path": path}, f)
+    # retention
+    ckpts = sorted(p for p in os.listdir(directory) if p.startswith("ckpt_"))
+    for old in ckpts[:-max_keep]:
+        os.remove(os.path.join(directory, old))
+    return path
+
+
+def restore(directory: str, template: PyTree, step: int | None = None) -> tuple[PyTree, int]:
+    with open(os.path.join(directory, "latest.json")) as f:
+        meta = json.load(f)
+    if step is not None:
+        meta = {"step": step,
+                "path": os.path.join(directory, f"ckpt_{step:08d}.npz")}
+    data = np.load(meta["path"])
+    flat = _flatten(template)
+    assert set(flat) == set(data.files), (
+        f"checkpoint/template mismatch: {set(flat) ^ set(data.files)}")
+    restored_flat = [data[k] for k in flat]
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    # tree_flatten_with_path and tree_flatten use the same leaf order
+    restored = jax.tree_util.tree_unflatten(treedef, [
+        jax.numpy.asarray(v).astype(l.dtype) for v, l in zip(restored_flat, leaves)])
+    return restored, meta["step"]

@@ -1,0 +1,60 @@
+"""Training loop driver: jitted weighted train step (the WST engine for
+neural ASCII agents and the standalone LM trainer), metrics, periodic
+checkpointing, optional mesh shardings."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+from repro.optim.optimizers import Optimizer
+from repro.train import checkpoint as ckpt_lib
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 0                 # 0 = disabled
+    ckpt_dir: str = "/tmp/repro_ckpt"
+
+
+@dataclass
+class Trainer:
+    cfg: ArchConfig
+    optimizer: Optimizer
+    tcfg: TrainerConfig = field(default_factory=TrainerConfig)
+    in_shardings: Any = None
+    mesh: Any = None
+
+    def init(self, key):
+        params = api.init_params(key, self.cfg)
+        return params, self.optimizer.init(params)
+
+    def run(self, key, data: Iterator[dict],
+            params=None, opt_state=None,
+            on_metrics: Callable[[int, dict], None] | None = None):
+        if params is None:
+            params, opt_state = self.init(key)
+        step_fn = jax.jit(api.make_train_step(self.cfg, self.optimizer))
+        history = []
+        t0 = time.time()
+        for step in range(self.tcfg.steps):
+            batch = next(data)
+            params, opt_state, metrics = step_fn(
+                params, opt_state, batch, jnp.asarray(step, jnp.int32))
+            if step % self.tcfg.log_every == 0 or step == self.tcfg.steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m.update(step=step, wall=time.time() - t0)
+                history.append(m)
+                if on_metrics:
+                    on_metrics(step, m)
+            if self.tcfg.ckpt_every and step and step % self.tcfg.ckpt_every == 0:
+                ckpt_lib.save(self.tcfg.ckpt_dir, step,
+                              {"params": params, "opt": opt_state})
+        return params, opt_state, history

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device; only launch/dryrun.py forces 512.
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.key(0)

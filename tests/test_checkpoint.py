@@ -1,0 +1,39 @@
+"""Checkpoint save/restore roundtrip over realistic param pytrees."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCHS
+from repro.models import api
+from repro.optim.optimizers import adamw
+from repro.train import checkpoint
+
+
+def test_roundtrip(tmp_path, key):
+    cfg = ARCHS["mamba2-130m"].reduced()
+    params = api.init_params(key, cfg)
+    opt = adamw(1e-3)
+    state = {"params": params, "opt": opt.init(params)}
+    checkpoint.save(str(tmp_path), 7, state)
+    restored, step = checkpoint.restore(str(tmp_path), state)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_retention(tmp_path, key):
+    tree = {"x": jnp.zeros((3,))}
+    for step in range(5):
+        checkpoint.save(str(tmp_path), step, tree, max_keep=2)
+    import os
+    ckpts = [p for p in os.listdir(tmp_path) if p.startswith("ckpt_")]
+    assert len(ckpts) == 2
+
+
+def test_restore_specific_step(tmp_path):
+    for step in (1, 2):
+        checkpoint.save(str(tmp_path), step,
+                        {"x": jnp.full((2,), float(step))}, max_keep=5)
+    restored, step = checkpoint.restore(str(tmp_path),
+                                        {"x": jnp.zeros((2,))}, step=1)
+    assert step == 1 and float(restored["x"][0]) == 1.0

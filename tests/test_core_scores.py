@@ -1,0 +1,151 @@
+"""Unit + property tests for the ASCII score math (paper eqs. 1, 9-13)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scores
+from repro.core.encoding import encode_labels, decode_labels, margin
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestEncoding:
+    def test_eq1_values(self):
+        y = encode_labels(jnp.array([0, 2]), 4)
+        np.testing.assert_allclose(y[0], [1, -1/3, -1/3, -1/3], rtol=1e-6)
+        np.testing.assert_allclose(y[1], [-1/3, -1/3, 1, -1/3], rtol=1e-6)
+
+    def test_rows_sum_to_zero(self):
+        # the identifiability constraint f_1 + ... + f_K = 0 holds on codes
+        y = encode_labels(jnp.arange(7) % 5, 5)
+        np.testing.assert_allclose(jnp.sum(y, -1), 0.0, atol=1e-6)
+
+    @given(st.integers(2, 12), st.integers(1, 50))
+    @settings(max_examples=25, deadline=None)
+    def test_roundtrip(self, k, n):
+        c = jnp.arange(n) % k
+        assert (decode_labels(encode_labels(c, k)) == c).all()
+
+    @given(st.integers(2, 10))
+    @settings(max_examples=20, deadline=None)
+    def test_margin_identities(self, k):
+        """y^T g / K = 1/(K-1) if same class, -1/(K-1)^2 otherwise."""
+        y = encode_labels(jnp.array([0]), k)
+        g_same = encode_labels(jnp.array([0]), k)
+        g_diff = encode_labels(jnp.array([1]), k)
+        np.testing.assert_allclose(margin(y, g_same, k), 1.0 / (k - 1), rtol=1e-5)
+        np.testing.assert_allclose(margin(y, g_diff, k), -1.0 / (k - 1) ** 2,
+                                   rtol=1e-5)
+
+
+class TestModelWeight:
+    def test_eq9_head_agent(self):
+        """alpha = log(rbar/(1-rbar)) + log(K-1) for uniform weights."""
+        r = jnp.array([1., 1., 1., 0.])
+        w = jnp.full((4,), 0.25)
+        a, rbar = scores.head_agent_alpha(w, r, num_classes=3)
+        np.testing.assert_allclose(rbar, 0.75, rtol=1e-6)
+        np.testing.assert_allclose(a, np.log(3.) + np.log(2.), rtol=1e-5)
+
+    def test_alpha_zero_at_random_guessing(self):
+        """Stop criterion: rbar = 1/K <=> alpha = 0."""
+        k = 5
+        n = 100
+        r = jnp.concatenate([jnp.ones(n // k), jnp.zeros(n - n // k)])
+        w = jnp.full((n,), 1.0 / n)
+        a, _ = scores.head_agent_alpha(w, r, num_classes=k)
+        np.testing.assert_allclose(a, 0.0, atol=1e-5)
+
+    def test_eq11_matches_numeric_minimizer(self):
+        """The closed-form assistant alpha (eq. 11) minimizes the staged
+        exponential loss (eq. 8), up to the paper's dropped constant
+        (K-1)^2/K."""
+        rng = np.random.default_rng(0)
+        n, k = 64, 4
+        w = jnp.asarray(rng.dirichlet(np.ones(n)), jnp.float32)
+        rA = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+        rB = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+        alphaA, _ = scores.head_agent_alpha(w, rA, k)
+        wB = scores.ignorance_update(w, rA, alphaA)
+        u = scores.upstream_factor_update(jnp.ones(n), alphaA * (k - 1) ** 2 / k,
+                                          rA, k)
+        # exact-scale alpha for the numeric check
+        aB, _ = scores.model_weight(wB, rB, k, u=u, exact_scale=True)
+
+        def staged_loss(alpha_b):
+            termA = np.where(rA > 0, np.exp(-(alphaA * (k-1)**2/k) / (k - 1)),
+                             np.exp((alphaA * (k-1)**2/k) / (k - 1) ** 2))
+            termB = np.where(rB > 0, np.exp(-alpha_b / (k - 1)),
+                             np.exp(alpha_b / (k - 1) ** 2))
+            return float(jnp.sum(wB * termA * termB))
+
+        grid = np.linspace(float(aB) - 2, float(aB) + 2, 2001)
+        losses = [staged_loss(a) for a in grid]
+        best = grid[int(np.argmin(losses))]
+        np.testing.assert_allclose(float(aB), best, atol=2e-3)
+
+    @given(st.integers(2, 8), st.integers(4, 64))
+    @settings(max_examples=30, deadline=None)
+    def test_alpha_monotone_in_accuracy(self, k, n):
+        """More correct samples (under uniform w) => larger alpha."""
+        w = jnp.full((n,), 1.0 / n)
+        alphas = []
+        for ncorr in range(1, n):
+            r = jnp.concatenate([jnp.ones(ncorr), jnp.zeros(n - ncorr)])
+            a, _ = scores.model_weight(w, r, k)
+            alphas.append(float(a))
+        assert all(a2 >= a1 - 1e-6 for a1, a2 in zip(alphas, alphas[1:]))
+
+
+class TestIgnoranceUpdate:
+    @given(st.integers(4, 128), st.floats(0.01, 5.0))
+    @settings(max_examples=30, deadline=None)
+    def test_normalized_and_in_unit_interval(self, n, alpha):
+        """The interchange value is an 'ignorance' in [0, 1] summing to 1."""
+        rng = np.random.default_rng(n)
+        w = jnp.asarray(rng.dirichlet(np.ones(n)), jnp.float32)
+        r = jnp.asarray(rng.integers(0, 2, n), jnp.float32)
+        w2 = scores.ignorance_update(w, r, jnp.asarray(alpha))
+        assert np.isclose(float(jnp.sum(w2)), 1.0, atol=1e-5)
+        assert float(jnp.min(w2)) >= 0.0 and float(jnp.max(w2)) <= 1.0
+
+    def test_misclassified_gain_weight(self):
+        w = jnp.full((4,), 0.25)
+        r = jnp.array([1., 0., 1., 0.])
+        w2 = scores.ignorance_update(w, r, jnp.asarray(1.0))
+        assert float(w2[1]) > float(w2[0])
+        np.testing.assert_allclose(w2[1] / w2[0], np.e, rtol=1e-5)
+
+    def test_scale_invariance(self):
+        """Downstream formulas are invariant to the global scale of w
+        (paper initializes w = 1-vector; we keep it normalized)."""
+        rng = np.random.default_rng(1)
+        w = jnp.asarray(rng.random(16), jnp.float32)
+        r = jnp.asarray(rng.integers(0, 2, 16), jnp.float32)
+        a1, _ = scores.model_weight(w, r, 3)
+        a2, _ = scores.model_weight(10.0 * w, r, 3)
+        np.testing.assert_allclose(float(a1), float(a2), rtol=1e-5)
+        np.testing.assert_allclose(scores.ignorance_update(w, r, a1),
+                                   scores.ignorance_update(10 * w, r, a1),
+                                   rtol=1e-4)
+
+    def test_zero_alpha_is_noop_up_to_normalization(self):
+        w = jnp.asarray([0.1, 0.2, 0.3, 0.4])
+        r = jnp.asarray([1., 0., 1., 0.])
+        np.testing.assert_allclose(scores.ignorance_update(w, r, jnp.asarray(0.0)),
+                                   w, rtol=1e-6)
+
+
+class TestUpstreamFactor:
+    @given(st.integers(2, 9))
+    @settings(max_examples=20, deadline=None)
+    def test_matches_exponential_loss(self, k):
+        """u-update equals exp(-alpha y^T g / K) via the margin identities."""
+        alpha = 0.7
+        u = jnp.ones((2,))
+        r = jnp.array([1., 0.])
+        u2 = scores.upstream_factor_update(u, jnp.asarray(alpha), r, k)
+        np.testing.assert_allclose(u2[0], np.exp(-alpha / (k - 1)), rtol=1e-5)
+        np.testing.assert_allclose(u2[1], np.exp(alpha / (k - 1) ** 2), rtol=1e-5)

@@ -1,0 +1,145 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+class TestWeightedCE:
+    @pytest.mark.parametrize("t,v", [(128, 512), (256, 1024), (64, 2048)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_forward(self, t, v, dtype, key):
+        logits = (jax.random.normal(key, (t, v)) * 4).astype(dtype)
+        labels = jax.random.randint(key, (t,), 0, v)
+        w = jax.random.uniform(key, (t,))
+        loss = ops.weighted_ce(logits, labels, w)
+        loss_ref, _ = ref.weighted_ce(logits, labels, w)
+        tol = 1e-5 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(np.asarray(loss), np.asarray(loss_ref),
+                                   rtol=tol, atol=tol)
+
+    def test_backward(self, key):
+        t, v = 128, 512
+        logits = jax.random.normal(key, (t, v)) * 3
+        labels = jax.random.randint(key, (t,), 0, v)
+        w = jax.random.uniform(key, (t,))
+        g = jax.grad(lambda l: jnp.sum(ops.weighted_ce(l, labels, w) * 2.0)
+                     )(logits)
+        g_ref = jax.grad(lambda l: jnp.sum(ref.weighted_ce(l, labels, w)[0]
+                                           * 2.0))(logits)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_zero_weight_zero_loss_and_grad(self, key):
+        t, v = 128, 512
+        logits = jax.random.normal(key, (t, v))
+        labels = jax.random.randint(key, (t,), 0, v)
+        w = jnp.zeros((t,))
+        assert float(jnp.max(jnp.abs(ops.weighted_ce(logits, labels, w)))) == 0
+        g = jax.grad(lambda l: ops.weighted_ce(l, labels, w).sum())(logits)
+        assert float(jnp.max(jnp.abs(g))) == 0
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("h,kv", [(4, 4), (4, 2), (8, 1)])
+    @pytest.mark.parametrize("window", [None, 64])
+    def test_vs_ref(self, h, kv, window, key):
+        b, s, d = 2, 256, 32
+        q = jax.random.normal(key, (b, h, s, d))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, kv, s, d))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, kv, s, d))
+        out = ops.flash_attention(q, k, v, causal=True, window=window)
+        out_ref = ref.flash_attention(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    @given(st.sampled_from([128, 256]), st.sampled_from([32, 64]),
+           st.sampled_from([None, 128]))
+    @settings(max_examples=6, deadline=None)
+    def test_property_sweep(self, s, d, window):
+        key = jax.random.key(s + d)
+        q = jax.random.normal(key, (1, 2, s, d))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, s, d))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, s, d))
+        out = ops.flash_attention(q, k, v, window=window)
+        out_ref = ref.flash_attention(q, k, v, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                                   rtol=3e-5, atol=3e-5)
+
+    def test_bf16(self, key):
+        b, h, s, d = 1, 2, 128, 64
+        q = jax.random.normal(key, (b, h, s, d)).astype(jnp.bfloat16)
+        k = jax.random.normal(jax.random.fold_in(key, 1),
+                              (b, h, s, d)).astype(jnp.bfloat16)
+        v = jax.random.normal(jax.random.fold_in(key, 2),
+                              (b, h, s, d)).astype(jnp.bfloat16)
+        out = ops.flash_attention(q, k, v)
+        out_ref = ref.flash_attention(q, k, v)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(out_ref, np.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+
+class TestIgnorance:
+    @given(st.sampled_from([1024, 4096]), st.floats(0.0, 4.0))
+    @settings(max_examples=10, deadline=None)
+    def test_vs_ref(self, n, alpha):
+        key = jax.random.key(n)
+        w = jax.random.dirichlet(key, jnp.ones(n))
+        r = (jax.random.uniform(jax.random.fold_in(key, 1), (n,)) > 0.3
+             ).astype(jnp.float32)
+        out = ops.ignorance_update(w, r, jnp.asarray(alpha))
+        out_ref = ref.ignorance_update(w, r, jnp.asarray(alpha))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                                   rtol=1e-5, atol=1e-7)
+        assert abs(float(jnp.sum(out)) - 1.0) < 1e-5
+
+
+class TestFlashDecode:
+    @pytest.mark.parametrize("window", [None, 128])
+    @pytest.mark.parametrize("h,kv", [(4, 4), (8, 2)])
+    def test_fp_vs_ref(self, h, kv, window, key):
+        b, s, d = 2, 512, 64
+        q = jax.random.normal(key, (b, h, d))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, kv, s, d))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, kv, s, d))
+        pos = jnp.asarray(300, jnp.int32)
+        out = ops.flash_decode(q, k, v, pos, window=window)
+        out_ref = ref.flash_decode(q, k, v, pos, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_int8_fused_dequant(self, key):
+        from repro.models.attention import quantize_kv
+        b, h, kv, s, d = 1, 4, 2, 256, 32
+        q = jax.random.normal(key, (b, h, d))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, kv, s, d))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, kv, s, d))
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        pos = jnp.asarray(200, jnp.int32)
+        out = ops.flash_decode(q, kq, vq, pos, k_scale=ks, v_scale=vs)
+        out_ref = ref.flash_decode(q, kq, vq, pos, k_scale=ks, v_scale=vs)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                                   rtol=2e-5, atol=2e-5)
+        # int8 path close to the fp oracle
+        fp = ref.flash_decode(q, k, v, pos)
+        rel = float(jnp.max(jnp.abs(out - fp)) / (jnp.max(jnp.abs(fp)) + 1e-9))
+        assert rel < 0.05
+
+    @given(st.integers(0, 255), st.sampled_from([None, 64]))
+    @settings(max_examples=6, deadline=None)
+    def test_position_sweep(self, pos, window):
+        key = jax.random.key(pos)
+        b, h, s, d = 1, 2, 256, 32
+        q = jax.random.normal(key, (b, h, d))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, h, s, d))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, h, s, d))
+        p = jnp.asarray(pos, jnp.int32)
+        out = ops.flash_decode(q, k, v, p, window=window)
+        out_ref = ref.flash_decode(q, k, v, p, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                                   rtol=3e-5, atol=3e-5)

@@ -1,0 +1,74 @@
+"""Learner zoo: weighted fits respect ignorance weights (Prop. 1 semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.learners.forest import RandomForest
+from repro.learners.logistic import LogisticRegression
+from repro.learners.mlp import MLP
+from repro.learners.tree import DecisionTree
+
+
+def _separable(key, n=200, k=3, p=4):
+    centers = jax.random.normal(key, (k, p)) * 6
+    c = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, k)
+    X = centers[c] + jax.random.normal(jax.random.fold_in(key, 2), (n, p))
+    return X, c.astype(jnp.int32)
+
+
+LEARNERS = {
+    "tree": DecisionTree(depth=3, num_thresholds=8),
+    "forest": RandomForest(num_trees=4, depth=3, num_thresholds=8),
+    "logistic": LogisticRegression(steps=150),
+    "mlp": MLP(hidden=(32, 16), steps=150),
+}
+
+
+@pytest.mark.parametrize("name", list(LEARNERS))
+def test_fit_separable(name, key):
+    X, c = _separable(key)
+    learner = LEARNERS[name]
+    params = learner.fit(key, X, c, jnp.full((len(c),), 1.0 / len(c)), 3)
+    acc = float(jnp.mean(learner.predict(params, X) == c))
+    assert acc > 0.9, (name, acc)
+
+
+@pytest.mark.parametrize("name", ["tree", "logistic", "mlp"])
+def test_weights_steer_fit(name, key):
+    """Concentrating ignorance on a subset makes the learner fit it."""
+    # two interleaved groups that a depth-1 split can't both satisfy
+    n = 100
+    X = jnp.concatenate([jnp.linspace(-1, 0, n)[:, None],
+                         jnp.linspace(0, 1, n)[:, None]])
+    c = jnp.concatenate([jnp.zeros(n), jnp.ones(n)]).astype(jnp.int32)
+    c = c.at[:10].set(1)     # conflicting head segment
+    learner = LEARNERS[name]
+    w_uniform = jnp.full((2 * n,), 1.0 / (2 * n))
+    w_head = jnp.zeros((2 * n,)).at[:10].set(0.1)
+    p_u = learner.fit(key, X, c, w_uniform, 2)
+    p_h = learner.fit(key, X, c, w_head, 2)
+    r = learner.reward(p_h, X, c)
+    r_u = learner.reward(p_u, X, c)
+    # weighted accuracy on the emphasized head must improve
+    assert float(jnp.mean(r[:10])) >= float(jnp.mean(r_u[:10]))
+
+
+def test_tree_reward_is_binary(key):
+    X, c = _separable(key)
+    t = LEARNERS["tree"]
+    params = t.fit(key, X, c, jnp.full((len(c),), 1.0 / len(c)), 3)
+    r = t.reward(params, X, c)
+    assert set(np.unique(np.asarray(r))).issubset({0.0, 1.0})
+
+
+@given(st.integers(2, 5), st.integers(2, 6))
+@settings(max_examples=6, deadline=None)
+def test_tree_predictions_in_range(depth, k):
+    key = jax.random.key(depth * 10 + k)
+    X, c = _separable(key, n=80, k=k)
+    t = DecisionTree(depth=depth, num_thresholds=4)
+    params = t.fit(key, X, c, jnp.full((80,), 1 / 80), k)
+    pred = np.asarray(t.predict(params, X))
+    assert pred.min() >= 0 and pred.max() < k

@@ -1,0 +1,117 @@
+"""Protocol-level behaviour: Algorithm 1 end-to-end on small data."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.protocol import (ASCIIConfig, fit, fit_ensemble_adaboost,
+                                 fit_single_agent_adaboost)
+from repro.core.transport import TransportLog
+from repro.data.partition import train_test_split, vertical_split
+from repro.data.synthetic import blob_fig3, gaussian_blobs
+from repro.learners.logistic import LogisticRegression
+from repro.learners.tree import DecisionTree
+
+
+@pytest.fixture(scope="module")
+def blob():
+    key = jax.random.key(0)
+    ds = blob_fig3(key, n=400)
+    tr, te = train_test_split(0, 400)
+    Xs = vertical_split(ds.X, ds.splits)
+    return ([x[tr] for x in Xs], ds.classes[tr],
+            [x[te] for x in Xs], ds.classes[te], ds.num_classes)
+
+
+def _acc(pred, c):
+    return float(jnp.mean(pred == c))
+
+
+def test_ascii_beats_single_and_near_oracle(blob):
+    Xtr, ctr, Xte, cte, k = blob
+    cfg = ASCIIConfig(num_classes=k, max_rounds=6)
+    learners = [DecisionTree(depth=3, num_thresholds=8) for _ in Xtr]
+    fitted = fit(jax.random.key(1), Xtr, ctr, learners, cfg)
+    acc_ascii = _acc(fitted.predict(Xte), cte)
+    single = fit_single_agent_adaboost(jax.random.key(2), Xtr[0], ctr,
+                                       learners[0], cfg)
+    acc_single = _acc(single.predict([Xte[0]]), cte)
+    oracle = fit_single_agent_adaboost(jax.random.key(3),
+                                       jnp.concatenate(Xtr, 1), ctr,
+                                       DecisionTree(depth=3), cfg)
+    acc_oracle = _acc(oracle.predict([jnp.concatenate(Xte, 1)]), cte)
+    # the paper's core claims (Fig. 3)
+    assert acc_ascii > acc_single + 0.1
+    assert acc_ascii > acc_oracle - 0.05
+
+
+def test_accuracy_improves_with_rounds(blob):
+    Xtr, ctr, Xte, cte, k = blob
+    cfg = ASCIIConfig(num_classes=k, max_rounds=6)
+    learners = [DecisionTree(depth=3, num_thresholds=8) for _ in Xtr]
+    fitted = fit(jax.random.key(1), Xtr, ctr, learners, cfg)
+    first = _acc(fitted.predict(Xte, max_round=0), cte)
+    last = _acc(fitted.predict(Xte), cte)
+    assert last >= first
+
+
+def test_variants_run_and_stop(blob):
+    Xtr, ctr, Xte, cte, k = blob
+    learners = [DecisionTree(depth=3, num_thresholds=8) for _ in Xtr]
+    for variant in ("ascii", "simple", "random", "async"):
+        cfg = ASCIIConfig(num_classes=k, max_rounds=3, variant=variant)
+        fitted = fit(jax.random.key(4), Xtr, ctr, learners, cfg)
+        assert len(fitted.components) > 0
+        assert _acc(fitted.predict(Xte), cte) > 1.0 / k  # beats chance
+
+
+def test_ensemble_adaboost_baseline(blob):
+    Xtr, ctr, Xte, cte, k = blob
+    learners = [DecisionTree(depth=3, num_thresholds=8) for _ in Xtr]
+    cfg = ASCIIConfig(num_classes=k, max_rounds=3)
+    ens = fit_ensemble_adaboost(jax.random.key(5), Xtr, ctr, learners, cfg)
+    assert _acc(ens.predict(Xte), cte) > 1.0 / k
+
+
+def test_transport_accounting(blob):
+    Xtr, ctr, Xte, cte, k = blob
+    learners = [DecisionTree(depth=3, num_thresholds=8) for _ in Xtr]
+    cfg = ASCIIConfig(num_classes=k, max_rounds=2,
+                      stop_on_negative_alpha=False)
+    log = TransportLog()
+    fit(jax.random.key(6), Xtr, ctr, learners, cfg, transport=log)
+    n = Xtr[0].shape[0]
+    m = len(Xtr)
+    # setup: labels + ids to M-1 agents; per round: M hops x (n floats + 1)
+    expected = (m - 1) * 2 * n * 32 + 2 * m * ((n + 1) * 32)
+    assert log.total_bits == expected
+    kinds = log.bits_by_kind()
+    assert kinds["ignorance"] == 2 * m * n * 32
+
+
+def test_stop_on_unlearnable_labels():
+    """Random labels: weighted acc ~ 1/K <= threshold => early stop."""
+    key = jax.random.key(7)
+    X = jax.random.normal(key, (200, 2))
+    c = jax.random.randint(key, (200,), 0, 8)
+    cfg = ASCIIConfig(num_classes=8, max_rounds=10)
+    learner = LogisticRegression(steps=50)
+    fitted = fit(jax.random.key(8), [X, X], c, [learner, learner], cfg)
+    assert fitted.num_rounds < 10  # stopped early (alpha <= 0)
+
+
+def test_single_agent_is_samme(blob):
+    """M=1 ASCII reduces to multi-class AdaBoost: alphas follow eq. (9) and
+    components all belong to agent 0."""
+    Xtr, ctr, _, _, k = blob
+    cfg = ASCIIConfig(num_classes=k, max_rounds=3,
+                      stop_on_negative_alpha=False)
+    fitted = fit_single_agent_adaboost(jax.random.key(9),
+                                       jnp.concatenate(Xtr, 1), ctr,
+                                       DecisionTree(depth=3), cfg)
+    assert all(c.agent == 0 for c in fitted.components)
+    for rec in fitted.history:
+        rbar = rec["accs"][0]
+        expected = np.log(rbar / (1 - rbar)) + np.log(k - 1)
+        np.testing.assert_allclose(rec["alphas"][0],
+                                   np.clip(expected, -20, 20), rtol=1e-3)

@@ -1,0 +1,102 @@
+"""Serving path: prefill->decode equals full forward; ring-buffer (SWA)
+cache equals full cache within the window."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.models import api
+
+B, S = 2, 24
+
+
+def _setup(arch, key, window=None):
+    cfg = ARCHS[arch].reduced()
+    if window is not None:
+        cfg = cfg.with_overrides(window=window)
+    params = api.init_params(key, cfg)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens}
+    off = 0
+    if cfg.frontend == "vision":
+        batch["patch_emb"] = jax.random.normal(
+            key, (B, cfg.num_frontend_tokens, cfg.d_model))
+        off = cfg.num_frontend_tokens
+    if cfg.frontend == "audio":
+        batch["frames"] = jax.random.normal(key, (B, cfg.encoder_seq,
+                                                  cfg.d_model))
+    return cfg, params, batch, tokens, off
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "mamba2-130m",
+                                  "jamba-v0.1-52b", "minicpm3-4b",
+                                  "whisper-tiny", "internvl2-2b",
+                                  "granite-moe-1b-a400m"])
+def test_decode_matches_forward(arch, key):
+    cfg, params, batch, tokens, off = _setup(arch, key)
+    logits_full, _, _ = api.forward(params, batch, cfg)
+    pre = {**batch, "tokens": tokens[:, :-1]}
+    _, caches, _ = api.forward(params, pre, cfg)
+    caches = api.pad_prefill_cache(caches, cfg, off + S + 4)
+    logits_dec, _ = api.decode_step(params, caches, tokens[:, -1:],
+                                    jnp.asarray(off + S - 1, jnp.int32), cfg)
+    a = np.asarray(logits_full[:, -1, :], np.float32)
+    b = np.asarray(logits_dec[:, -1, :], np.float32)
+    err = np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-9)
+    assert err < 5e-3, err
+
+
+def test_ring_cache_matches_full_for_swa(key):
+    """With window W, decoding via a ring buffer of length W must equal
+    decoding with the unbounded cache (h2o-danube SWA pathway)."""
+    W = 8
+    cfg, params, batch, tokens, off = _setup("h2o-danube-3-4b", key, window=W)
+    # prefill W tokens, then decode several more both ways
+    n_dec = 6
+    pre = {**batch, "tokens": tokens[:, :S - n_dec]}
+    _, caches, _ = api.forward(params, pre, cfg)
+    full = api.pad_prefill_cache(caches, cfg, S + 4)
+    # build the ring cache from the last W prefill positions
+    from repro.models.attention import KVCache
+    start = S - n_dec
+
+    def ring_leaf(a):
+        sl = a[:, :, start - W:start]
+        # ring layout: slot = pos % W
+        idx = (jnp.arange(start - W, start)) % W
+        out = jnp.zeros((a.shape[0], a.shape[1], W) + a.shape[3:], a.dtype)
+        return out.at[:, :, idx].set(sl)
+
+    ring = jax.tree.map(ring_leaf, caches,
+                        is_leaf=lambda x: False) if False else \
+        {k: KVCache(ring_leaf(v.k), ring_leaf(v.v))
+         for k, v in caches.items()}
+
+    tok = tokens[:, start:start + 1]
+    tok_r = tok
+    for i in range(n_dec):
+        pos = jnp.asarray(start + i, jnp.int32)
+        logits_f, full = api.decode_step(params, full, tok, pos, cfg, "full")
+        logits_r, ring = api.decode_step(params, ring, tok_r, pos, cfg, "ring")
+        a = np.asarray(logits_f[:, -1], np.float32)
+        b = np.asarray(logits_r[:, -1], np.float32)
+        err = np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-9)
+        assert err < 5e-3, (i, err)
+        tok = jnp.argmax(logits_f[:, -1:], -1).astype(jnp.int32)
+        tok_r = jnp.argmax(logits_r[:, -1:], -1).astype(jnp.int32)
+
+
+def test_greedy_generation_deterministic(key):
+    cfg, params, batch, tokens, off = _setup("qwen3-0.6b", key)
+    prefill = api.make_prefill_step(cfg)
+    serve = api.make_serve_step(cfg)
+    logits, caches = prefill(params, batch)
+    caches = api.pad_prefill_cache(caches, cfg, off + S + 8)
+    tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
+    outs = []
+    for i in range(4):
+        tok, _, caches = serve(params, caches, tok,
+                               jnp.asarray(off + S + i, jnp.int32))
+        outs.append(tok)
+    assert jnp.concatenate(outs, 1).shape == (B, 4)

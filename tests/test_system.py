@@ -1,0 +1,79 @@
+"""End-to-end behaviour tests for the ASCII system: the paper's claims on
+small data, the LM training driver, and the benchmark harness."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.protocol import ASCIIConfig, fit, fit_single_agent_adaboost
+from repro.core.transport import TransportLog, oracle_bits
+from repro.data.partition import train_test_split, vertical_split
+from repro.data.synthetic import blob_fig4
+from repro.learners.forest import RandomForest
+
+
+def test_transmission_cost_advantage(key):
+    """Fig. 4a claim: with wide redundant features, ASCII reaches
+    near-oracle accuracy at a fraction of the raw-transfer bits."""
+    ds = blob_fig4(key, n=400)
+    tr, te = train_test_split(0, 400)
+    Xs = vertical_split(ds.X, ds.splits)
+    Xtr, Xte = [x[tr] for x in Xs], [x[te] for x in Xs]
+    ctr, cte = ds.classes[tr], ds.classes[te]
+    learners = [RandomForest(num_trees=4, depth=4, num_thresholds=8)
+                for _ in Xs]
+    cfg = ASCIIConfig(num_classes=10, max_rounds=3)
+    log = TransportLog()
+    fitted = fit(jax.random.key(1), Xtr, ctr, learners, cfg, transport=log)
+    acc = float(jnp.mean(fitted.predict(Xte) == cte))
+    assert acc > 0.5                          # far above 10-class chance
+    raw = oracle_bits(len(tr), Xs[1].shape[1])
+    assert raw / log.total_bits > 3.0         # paper reports ~10x here
+
+
+def test_lm_driver_loss_decreases(key):
+    """The end-to-end WST/LM trainer actually learns (few steps, tiny)."""
+    from repro.configs.base import ArchConfig
+    from repro.data.pipeline import lm_batches
+    from repro.optim.optimizers import adamw
+    from repro.train.trainer import Trainer, TrainerConfig
+    cfg = ArchConfig(name="tiny", arch_type="dense", num_layers=2,
+                     d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+                     d_ff=128, vocab_size=128, dtype="float32")
+    trainer = Trainer(cfg, adamw(3e-3), TrainerConfig(steps=12, log_every=4))
+    data = lm_batches(key, vocab_size=128, batch=4, seq_len=32)
+    _, _, history = trainer.run(key, data)
+    assert history[-1]["loss"] < history[0]["loss"]
+
+
+def test_checkpointed_training_resumes(tmp_path, key):
+    from repro.configs.base import ArchConfig
+    from repro.models import api
+    from repro.optim.optimizers import adamw
+    from repro.train import checkpoint
+    cfg = ArchConfig(name="tiny", arch_type="dense", num_layers=1,
+                     d_model=32, num_heads=2, num_kv_heads=1, head_dim=16,
+                     d_ff=64, vocab_size=64, dtype="float32")
+    params = api.init_params(key, cfg)
+    opt = adamw(1e-3)
+    checkpoint.save(str(tmp_path), 3, {"params": params,
+                                       "opt": opt.init(params)})
+    restored, step = checkpoint.restore(str(tmp_path),
+                                        {"params": params,
+                                         "opt": opt.init(params)})
+    assert step == 3
+    step_fn = jax.jit(api.make_train_step(cfg, opt))
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, 64),
+             "sample_weight": jnp.ones((2,))}
+    _, _, m = step_fn(restored["params"], restored["opt"], batch,
+                      jnp.asarray(step, jnp.int32))
+    assert bool(jnp.isfinite(m["loss"]))
+
+
+@pytest.mark.slow
+def test_benchmark_harness_runs():
+    from benchmarks import fig3_accuracy, fig6_variants
+    rows = fig3_accuracy.run(reps=1, rounds=3, quick=True)
+    assert {r["method"] for r in rows} == {"ascii", "single", "oracle"}
+    rows6 = fig6_variants.run(reps=1, rounds=3, quick=True)
+    methods = {r["method"] for r in rows6}
+    assert "ascii" in methods and "ensemble_ada" in methods
