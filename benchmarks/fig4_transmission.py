@@ -12,8 +12,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import acc, split_dataset
-from repro.core.protocol import ASCIIConfig, fit, fit_single_agent_adaboost
-from repro.core.transport import TransportLog, oracle_bits
+from repro.core.engine import (MeteredTransport, Protocol, SessionConfig,
+                               endpoints_for)
+from repro.core.protocol import ASCIIConfig, fit_single_agent_adaboost
+from repro.core.transport import oracle_bits
 from repro.data import synthetic
 from repro.learners.forest import RandomForest
 from repro.learners.mlp import MLP
@@ -34,9 +36,16 @@ def run(quick: bool = True) -> list[dict]:
     for name, (ds, mk, rounds) in cases.items():
         Xtr, ctr, Xte, cte = split_dataset(ds, 0)
         cfg = ASCIIConfig(num_classes=ds.num_classes, max_rounds=rounds)
-        log = TransportLog()
-        fitted = fit(jax.random.fold_in(key, 2), Xtr, ctr,
-                     [mk() for _ in ds.splits], cfg, transport=log)
+        # engine API: sequential chain through the byte-metered transport
+        transport = MeteredTransport()
+        session = Protocol(
+            SessionConfig(num_classes=ds.num_classes, max_rounds=rounds),
+            transport=transport).start(
+            jax.random.fold_in(key, 2),
+            endpoints_for([mk() for _ in ds.splits], Xtr), ctr)
+        session.run()
+        fitted = session.fitted()
+        log = transport.log
         oracle = fit_single_agent_adaboost(
             jax.random.fold_in(key, 3), jnp.concatenate(Xtr, 1), ctr, mk(),
             cfg)

@@ -12,7 +12,9 @@ import jax
 import numpy as np
 
 from benchmarks.common import acc, curve_vs_rounds, split_dataset
-from repro.core.protocol import ASCIIConfig, fit, fit_ensemble_adaboost
+from repro.core.engine import (Protocol, SessionConfig, endpoints_for,
+                               variant_setup)
+from repro.core.protocol import ASCIIConfig, fit_ensemble_adaboost
 from repro.data import synthetic
 from repro.learners.logistic import LogisticRegression
 from repro.learners.tree import DecisionTree
@@ -46,9 +48,13 @@ def run(reps: int = 2, rounds: int = 6, quick: bool = True) -> list[dict]:
                     curves.append([acc(fitted.predict(Xte, max_round=t), cte)
                                    for t in range(rounds)])
                 else:
-                    cfg = ASCIIConfig(num_classes=ds.num_classes,
-                                      max_rounds=rounds, variant=variant)
-                    fitted = fit(k, Xtr, ctr, learners, cfg)
+                    # engine API: the variant string is just a scheduler +
+                    # alpha-policy pair
+                    scheduler, upstream = variant_setup(variant)
+                    cfg6 = SessionConfig(num_classes=ds.num_classes,
+                                         max_rounds=rounds, upstream=upstream)
+                    fitted = Protocol(cfg6, scheduler=scheduler).fit(
+                        k, endpoints_for(learners, Xtr), ctr)
                     finals.append(acc(fitted.predict(Xte), cte))
                     curves.append(curve_vs_rounds(fitted, Xte, cte, rounds))
             arr = np.asarray(curves, np.float64)

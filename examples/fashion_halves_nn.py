@@ -1,14 +1,19 @@
 """Fig. 4b/5 scenario: two agents each hold HALF of every image (left/right)
 and assist each other with 3-layer neural networks — the paper's
-privacy-motivated Fashion-MNIST setup, on the offline surrogate.
+privacy-motivated Fashion-MNIST setup, on the offline surrogate, driven by
+the engine with a byte-metered transport and a mid-run checkpoint.
 
 Run:  PYTHONPATH=src python examples/fashion_halves_nn.py
 """
+import tempfile
+
 import jax
 import jax.numpy as jnp
 
-from repro.core.protocol import ASCIIConfig, fit, fit_single_agent_adaboost
-from repro.core.transport import TransportLog, oracle_bits
+from repro.core.engine import (MeteredTransport, Protocol, SessionConfig,
+                               endpoints_for)
+from repro.core.protocol import ASCIIConfig, fit_single_agent_adaboost
+from repro.core.transport import oracle_bits
 from repro.data.partition import train_test_split, vertical_split
 from repro.data.synthetic import fashion_surrogate
 from repro.learners.mlp import MLP
@@ -22,13 +27,25 @@ def main():
     Xtr, Xte = [x[tr] for x in Xs], [x[te] for x in Xs]
     ctr, cte = ds.classes[tr], ds.classes[te]
 
-    learners = [MLP(hidden=(128, 64), steps=200), MLP(hidden=(128, 64),
-                                                      steps=200)]
-    cfg = ASCIIConfig(num_classes=10, max_rounds=4)
-    log = TransportLog()
-    fitted = fit(jax.random.key(1), Xtr, ctr, learners, cfg, transport=log)
+    learners = [MLP(hidden=(128, 64), steps=200),
+                MLP(hidden=(128, 64), steps=200)]
+    transport = MeteredTransport()
+    engine = Protocol(SessionConfig(num_classes=10, max_rounds=4),
+                      transport=transport)
+    session = engine.start(jax.random.key(1), endpoints_for(learners, Xtr),
+                           ctr)
+    session.run(max_rounds=2)
+    with tempfile.TemporaryDirectory() as ckpt:
+        session.checkpoint(ckpt)        # mid-run SessionState to disk ...
+        session = engine.resume(        # ... picked up by a fresh session,
+            ckpt, endpoints_for(learners, Xtr), ctr)  # as after a crash
+        session.run()
+        print(f"checkpointed at round 2, resumed, finished at round "
+              f"{session.state.round}")
+    fitted = session.fitted()
     acc = float(jnp.mean(fitted.predict(Xte) == cte))
 
+    cfg = ASCIIConfig(num_classes=10, max_rounds=4)
     single = fit_single_agent_adaboost(jax.random.key(2), Xtr[0], ctr,
                                        learners[0], cfg)
     acc_single = float(jnp.mean(single.predict([Xte[0]]) == cte))
@@ -41,7 +58,7 @@ def main():
     print(f"ASCII (half-image A + B assist): {acc:.3f}")
     print(f"Single (left half only)        : {acc_single:.3f}")
     print(f"Oracle (whole images pulled)   : {acc_oracle:.3f}")
-    ratio = oracle_bits(n, Xs[1].shape[1]) / max(log.total_bits, 1)
+    ratio = oracle_bits(n, Xs[1].shape[1]) / max(transport.total_bits, 1)
     print(f"transmission reduction vs shipping B's pixels: {ratio:.0f}x")
 
 

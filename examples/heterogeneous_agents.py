@@ -1,14 +1,17 @@
 """The paper's model-free claim (Section I contribution 2): agents keep
 *private, heterogeneous* model classes — here a decision tree, a logistic
-regression, and a 3-layer NN cooperate in one ASCII chain; only ignorance
-scores and model weights ever cross agent boundaries.
+regression, and a 3-layer NN cooperate in one engine session; only
+ignorance scores and model weights ever cross endpoint boundaries.  Uses
+the paper's CV stop criterion via an explicit validation holdout.
 
 Run:  PYTHONPATH=src python examples/heterogeneous_agents.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core.protocol import ASCIIConfig, fit, fit_single_agent_adaboost
+from repro.core.engine import (Protocol, SessionConfig, endpoints_for,
+                               holdout_split)
+from repro.core.protocol import ASCIIConfig, fit_single_agent_adaboost
 from repro.data.partition import train_test_split, vertical_split
 from repro.data.synthetic import blob_fig3
 from repro.learners.logistic import LogisticRegression
@@ -27,11 +30,18 @@ def main():
     learners = [DecisionTree(depth=4),              # agent A: trees
                 LogisticRegression(steps=200),      # agent B: linear model
                 MLP(hidden=(64, 32), steps=200)]    # agent C: neural net
-    cfg = ASCIIConfig(num_classes=10, max_rounds=8,
-                      cv_fraction=0.2, cv_patience=2)   # paper's CV stop
-    fitted = fit(jax.random.key(1), Xtr, ctr, learners, cfg)
+    # the paper's CV stop (Section III-C): hold out trailing rows
+    Xfit, cfit, Xval, cval = holdout_split(Xtr, ctr, 0.2)
+    engine = Protocol(SessionConfig(num_classes=10, max_rounds=8,
+                                    cv_patience=2))
+    session = engine.start(jax.random.key(1), endpoints_for(learners, Xfit),
+                           cfit, validation=(Xval, cval))
+    session.run()
+    fitted = session.fitted()
     acc = float(jnp.mean(fitted.predict(Xte) == cte))
 
+    cfg = ASCIIConfig(num_classes=10, max_rounds=8, cv_fraction=0.2,
+                      cv_patience=2)
     single = fit_single_agent_adaboost(jax.random.key(2), Xtr[0], ctr,
                                        learners[0], cfg)
     acc_single = float(jnp.mean(single.predict([Xte[0]]) == cte))

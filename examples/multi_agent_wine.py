@@ -1,13 +1,17 @@
 """Multi-agent chain (Section IV): 11 agents each holding ONE wine feature,
 decision-tree learners, comparing the chain order against ASCII-Random,
-ASCII-Simple, Ensemble-AdaBoost, and the beyond-paper ASCII-Async.
+ASCII-Simple, Ensemble-AdaBoost, and the beyond-paper ASCII-Async — all
+through the engine API, where each variant is just a Scheduler + alpha
+policy.
 
 Run:  PYTHONPATH=src python examples/multi_agent_wine.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core.protocol import (ASCIIConfig, fit, fit_ensemble_adaboost)
+from repro.core.engine import (Protocol, SessionConfig, endpoints_for,
+                               variant_setup)
+from repro.core.protocol import ASCIIConfig, fit_ensemble_adaboost
 from repro.data.partition import train_test_split, vertical_split
 from repro.data.synthetic import wine_surrogate
 from repro.learners.tree import DecisionTree
@@ -24,9 +28,12 @@ def main():
     learners = [DecisionTree(depth=3, num_thresholds=8) for _ in splits]
 
     for variant in ("ascii", "simple", "random", "async"):
-        cfg = ASCIIConfig(num_classes=ds.num_classes, max_rounds=6,
-                          variant=variant)
-        fitted = fit(jax.random.key(1), Xtr, ctr, learners, cfg)
+        scheduler, upstream = variant_setup(variant)
+        engine = Protocol(SessionConfig(num_classes=ds.num_classes,
+                                        max_rounds=6, upstream=upstream),
+                          scheduler=scheduler)
+        fitted = engine.fit(jax.random.key(1), endpoints_for(learners, Xtr),
+                            ctr)
         acc = float(jnp.mean(fitted.predict(Xte) == cte))
         print(f"{variant:12s} acc={acc:.3f} rounds={fitted.num_rounds} "
               f"components={len(fitted.components)}")

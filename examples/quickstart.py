@@ -1,14 +1,18 @@
-"""Quickstart: two-agent ASCII on Gaussian blobs (paper Fig. 1 scenario).
+"""Quickstart: two-agent ASCII on Gaussian blobs (paper Fig. 1 scenario),
+on the agent-session engine API.
 
 Agent A holds features 0-1, agent B holds features 2-7; both see the
 labels.  B assists A by interchanging ignorance scores only — no raw data
-moves.  Run:  PYTHONPATH=src python examples/quickstart.py
+moves.  Each agent is an AgentEndpoint; the byte-metered transport books
+every message.  Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core.protocol import ASCIIConfig, fit, fit_single_agent_adaboost
-from repro.core.transport import TransportLog, oracle_bits
+from repro.core.engine import (AgentEndpoint, MeteredTransport, Protocol,
+                               SessionConfig)
+from repro.core.protocol import ASCIIConfig, fit_single_agent_adaboost
+from repro.core.transport import oracle_bits
 from repro.data.partition import train_test_split, vertical_split
 from repro.data.synthetic import blob_fig3
 from repro.learners.tree import DecisionTree
@@ -22,15 +26,20 @@ def main():
     Xtr, Xte = [x[tr] for x in Xs], [x[te] for x in Xs]
     ctr, cte = ds.classes[tr], ds.classes[te]
 
-    learners = [DecisionTree(depth=4), DecisionTree(depth=4)]
-    cfg = ASCIIConfig(num_classes=ds.num_classes, max_rounds=10)
-
-    log = TransportLog()
-    fitted = fit(jax.random.key(1), Xtr, ctr, learners, cfg, transport=log)
+    endpoints = [AgentEndpoint(0, DecisionTree(depth=4), Xtr[0]),
+                 AgentEndpoint(1, DecisionTree(depth=4), Xtr[1])]
+    transport = MeteredTransport()
+    engine = Protocol(SessionConfig(num_classes=ds.num_classes,
+                                    max_rounds=10),
+                      transport=transport)
+    session = engine.start(jax.random.key(1), endpoints, ctr)
+    session.run()
+    fitted = session.fitted()
 
     acc = float(jnp.mean(fitted.predict(Xte) == cte))
+    cfg = ASCIIConfig(num_classes=ds.num_classes, max_rounds=10)
     single = fit_single_agent_adaboost(jax.random.key(2), Xtr[0], ctr,
-                                       learners[0], cfg)
+                                       endpoints[0].learner, cfg)
     acc_single = float(jnp.mean(single.predict([Xte[0]]) == cte))
     oracle = fit_single_agent_adaboost(jax.random.key(3),
                                        jnp.concatenate(Xtr, 1), ctr,
@@ -42,7 +51,7 @@ def main():
     print(f"ASCII  (A assisted)   : {acc:.3f}")
     print(f"Single (A alone)      : {acc_single:.3f}")
     print(f"Oracle (pulled data)  : {acc_oracle:.3f}")
-    print(f"bits interchanged     : {log.total_bits:,} "
+    print(f"bits interchanged     : {transport.total_bits:,} "
           f"(vs {oracle_bits(len(tr), 6):,} to ship B's raw features)")
     for t, h in enumerate(fitted.history[:3]):
         print(f"round {t}: alphas={['%.2f' % a for a in h['alphas']]} "

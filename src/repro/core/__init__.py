@@ -1,3 +1,19 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+# The paper's primary contribution — the ASCII interchange protocol — lives
+# here.  `engine` is the agent-session engine (endpoints, schedulers,
+# transports, SessionState); `protocol` is the back-compat front door;
+# `scores`/`encoding` the math; `collectives` the mesh-native ring;
+# `transport` the byte ledger.
+from repro.core.engine import (AgentEndpoint, AsyncStaleScheduler, Component,
+                               FittedASCII, IgnoranceMsg, InProcessTransport,
+                               MeshRingTransport, MeteredTransport,
+                               ModelWeightMsg, Protocol, RandomScheduler,
+                               Scheduler, ScoreBlockMsg, SequentialScheduler,
+                               Session, SessionConfig, SessionState, Transport,
+                               endpoints_for, holdout_split, variant_setup)
+
+__all__ = ["AgentEndpoint", "AsyncStaleScheduler", "Component", "FittedASCII",
+           "IgnoranceMsg", "InProcessTransport", "MeshRingTransport",
+           "MeteredTransport", "ModelWeightMsg", "Protocol", "RandomScheduler",
+           "Scheduler", "ScoreBlockMsg", "SequentialScheduler", "Session",
+           "SessionConfig", "SessionState", "Transport", "endpoints_for",
+           "holdout_split", "variant_setup"]

@@ -1,0 +1,804 @@
+"""Agent-session engine for the ASCII interchange protocol.
+
+The paper's contribution is an *interchange protocol*: agents passing
+ignorance scores and model weights around a ring while all raw features stay
+private.  This module is the one place that protocol is implemented; the
+variant-branched host loop, the byte-metered simulator, and the mesh-native
+ring are now three pluggable pieces of a single engine:
+
+  * ``AgentEndpoint`` — one agent: a private :class:`~repro.learners.base.
+    Learner` plus its local feature block, addressable by name, with a typed
+    message inbox.  Endpoints can drop out mid-session (``active = False``)
+    or join late (:meth:`Session.add_endpoint`).
+  * Typed messages — :class:`IgnoranceMsg`, :class:`ModelWeightMsg`,
+    :class:`ScoreBlockMsg` (plus the one-time :class:`LabelsMsg` /
+    :class:`SampleIdsMsg` collation setup).  Every message knows its size so
+    transports can meter it.
+  * ``Transport`` — how messages move and where the interchange update
+    executes.  :class:`InProcessTransport` is the plain host path,
+    :class:`MeteredTransport` additionally books every bit into a
+    :class:`~repro.core.transport.TransportLog` (Fig. 4 accounting), and
+    :class:`MeshRingTransport` runs the fused update on-device via the
+    Pallas kernel / ``core.collectives`` ring.
+  * ``Scheduler`` — the round order, replacing the old ``variant`` string
+    branching: :class:`SequentialScheduler` (paper chain),
+    :class:`RandomScheduler` (ASCII-Random), :class:`AsyncStaleScheduler`
+    (beyond-paper stale-read parallel rounds).
+  * ``SessionState`` — the explicit protocol state (ignorance vector, PRNG
+    key, fitted components, round history, stop bookkeeping).  It is a plain
+    tree of arrays + JSON-able metadata, checkpointable mid-run through
+    ``train/checkpoint.py`` and resumable to bit-identical trajectories.
+  * ``Protocol`` — the engine: wires a config, a scheduler, and a transport,
+    and drives endpoints round by round (``start`` / ``step`` / ``run`` /
+    ``resume``).
+
+``repro.core.protocol.fit`` is a thin back-compat wrapper over this engine;
+its ``variant`` strings map onto schedulers via :func:`variant_setup`.
+
+Quickstart::
+
+    endpoints = [AgentEndpoint(0, DecisionTree(depth=3), X_a),
+                 AgentEndpoint(1, DecisionTree(depth=3), X_b)]
+    engine = Protocol(SessionConfig(num_classes=10, max_rounds=6),
+                      scheduler=SequentialScheduler(),
+                      transport=MeteredTransport())
+    session = engine.start(jax.random.key(0), endpoints, classes)
+    session.run()
+    preds = session.fitted().predict([Xte_a, Xte_b])
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scores
+from repro.core.encoding import encode_labels
+from repro.core.transport import TransportLog
+from repro.learners.base import Learner
+
+PyTree = Any
+
+VARIANTS = ("ascii", "simple", "random", "async")
+
+
+# ===================================================================== messages
+@dataclass(frozen=True)
+class Message:
+    """Base class for everything that crosses an agent boundary.
+
+    ``num_elements``/``bits_per_element`` expose the wire size so transports
+    can meter without understanding the payload.
+    """
+    src: str
+    dst: str
+
+    kind = "message"
+    bits_per_element = 32
+
+    @property
+    def num_elements(self) -> int:
+        return 0
+
+    @property
+    def bits(self) -> int:
+        return self.num_elements * self.bits_per_element
+
+
+@dataclass(frozen=True)
+class IgnoranceMsg(Message):
+    """The length-n ignorance score shipped on every interchange hop."""
+    w: jnp.ndarray = None
+
+    kind = "ignorance"
+
+    @property
+    def num_elements(self) -> int:
+        return int(np.size(self.w))
+
+
+@dataclass(frozen=True)
+class ModelWeightMsg(Message):
+    """The scalar model weight alpha accompanying each hop."""
+    alpha: float = 0.0
+
+    kind = "model_weight"
+
+    @property
+    def num_elements(self) -> int:
+        return 1
+
+
+@dataclass(frozen=True)
+class ScoreBlockMsg(Message):
+    """An [n, K] coded score block: an agent's alpha-weighted votes for the
+    collated samples — the O(nK) prediction-time traffic of Algorithm 1
+    line 12 (raw features never move)."""
+    scores: jnp.ndarray = None
+
+    kind = "score_block"
+
+    @property
+    def num_elements(self) -> int:
+        return int(np.size(self.scores))
+
+
+@dataclass(frozen=True)
+class LabelsMsg(Message):
+    """One-time setup: the head agent shares the numeric labels."""
+    num_samples: int = 0
+
+    kind = "labels"
+
+    @property
+    def num_elements(self) -> int:
+        return self.num_samples
+
+
+@dataclass(frozen=True)
+class SampleIdsMsg(Message):
+    """One-time setup: collation IDs aligning rows across agents."""
+    num_samples: int = 0
+
+    kind = "sample_ids"
+
+    @property
+    def num_elements(self) -> int:
+        return self.num_samples
+
+
+# =================================================================== transports
+class Transport(abc.ABC):
+    """How messages move between endpoints and where interchange math runs.
+
+    ``bind`` gives the transport the endpoint registry; ``send`` routes a
+    message into the destination inbox (subclasses hook ``_on_send`` for
+    accounting); ``interchange`` executes one hop of eqs. (10)/(12): update
+    the ignorance score with ``src``'s reward and alpha, then deliver it to
+    ``dst``.
+    """
+
+    def __init__(self) -> None:
+        self._endpoints: dict[str, "AgentEndpoint"] = {}
+
+    def bind(self, endpoints: Sequence["AgentEndpoint"]) -> None:
+        self._endpoints = {ep.name: ep for ep in endpoints}
+
+    def send(self, msg: Message) -> None:
+        self._on_send(msg)
+        ep = self._endpoints.get(msg.dst)
+        if ep is not None:
+            ep.receive(msg)
+
+    def _on_send(self, msg: Message) -> None:  # metering hook
+        pass
+
+    def _execute_update(self, w: jnp.ndarray, r: jnp.ndarray, alpha,
+                        reweight: Callable, standard: bool) -> jnp.ndarray:
+        return reweight(w, r, alpha)
+
+    def interchange(self, src: "AgentEndpoint", dst: "AgentEndpoint",
+                    w: jnp.ndarray, r: jnp.ndarray, alpha,
+                    reweight: Callable, standard: bool = True) -> jnp.ndarray:
+        """One hop: w' = reweight(w, r, alpha), shipped src -> dst."""
+        w_next = self._execute_update(w, r, alpha, reweight, standard)
+        self.send(IgnoranceMsg(src.name, dst.name, w_next))
+        self.send(ModelWeightMsg(src.name, dst.name, float(alpha)))
+        return w_next
+
+
+class InProcessTransport(Transport):
+    """Direct in-memory delivery; the plain single-host path."""
+
+
+class MeteredTransport(Transport):
+    """In-process delivery that books every bit into a
+    :class:`~repro.core.transport.TransportLog` — the byte-accounted
+    simulator behind the Fig. 4 transmission-cost benchmark."""
+
+    def __init__(self, log: TransportLog | None = None) -> None:
+        super().__init__()
+        self.log = log if log is not None else TransportLog()
+
+    def _on_send(self, msg: Message) -> None:
+        self.log.send(msg.src, msg.dst, msg.kind, msg.num_elements,
+                      msg.bits_per_element)
+
+    @property
+    def total_bits(self) -> int:
+        return self.log.total_bits
+
+    def bits_by_kind(self) -> dict:
+        return self.log.bits_by_kind()
+
+
+class MeshRingTransport(Transport):
+    """Device-resident interchange.
+
+    The per-hop ignorance update runs the fused Pallas kernel
+    (``kernels.ops.ignorance_update``); given a mesh with an ``agent`` axis,
+    :meth:`ring_step` executes a whole round of hops as one
+    ``shard_map``-ed neighbour ``ppermute`` via ``core.collectives`` — one
+    ICI hop of n/|data| floats per device, zero resharding.
+
+    The beyond-paper ``exact_reweight`` surrogate has no fused kernel; those
+    hops fall back to the host formula.
+    """
+
+    def __init__(self, mesh=None, *, agent_axis: str = "agent",
+                 data_axis: str = "data",
+                 interpret: bool | None = None) -> None:
+        super().__init__()
+        self.mesh = mesh
+        self.agent_axis = agent_axis
+        self.data_axis = data_axis
+        self.interpret = interpret
+        self._ring = None
+
+    def _execute_update(self, w, r, alpha, reweight, standard):
+        if not standard:
+            return reweight(w, r, alpha)
+        from repro.kernels import ops
+        return ops.ignorance_update(w, r, jnp.asarray(alpha, w.dtype),
+                                    interpret=self.interpret)
+
+    def ring_step(self, w_stack: jnp.ndarray, r_stack: jnp.ndarray,
+                  alphas: jnp.ndarray) -> jnp.ndarray:
+        """All-lanes ring hop on the mesh: agent m+1 receives agent m's
+        updated score.  Shapes [M, n], [M, n], [M]."""
+        if self.mesh is None:
+            raise ValueError("ring_step needs a mesh with an agent axis")
+        if self._ring is None:
+            from repro.core.collectives import make_ring_interchange
+            self._ring = make_ring_interchange(
+                self.mesh, agent_axis=self.agent_axis,
+                data_axis=self.data_axis)
+        return self._ring(w_stack, r_stack, alphas)
+
+
+# =================================================================== schedulers
+class Scheduler(abc.ABC):
+    """Round-order policy: which active agents act, in what order.
+
+    ``stale`` selects the asynchronous execution model (all agents read the
+    same round-t ignorance score; updates merge at the round barrier) instead
+    of the sequential chain.
+    """
+
+    stale = False
+
+    def reset(self) -> None:
+        """Called at session start; clears any per-run RNG state."""
+
+    @abc.abstractmethod
+    def round_order(self, round_idx: int, active: list[int]) -> list[int]:
+        """Agent ids (a permutation of ``active``) for round ``round_idx``."""
+
+    def skip_to(self, order_sizes: Sequence[int]) -> None:
+        """Fast-forward RNG state past already-executed rounds (resume).
+        ``order_sizes`` holds each completed round's active-agent count, so
+        the replayed RNG draws match even if agents dropped out or joined
+        mid-session."""
+        for t, size in enumerate(order_sizes):
+            self.round_order(t, list(range(size)))
+
+
+class SequentialScheduler(Scheduler):
+    """The paper's chain 1 -> 2 -> ... -> M, every round."""
+
+    def round_order(self, round_idx: int, active: list[int]) -> list[int]:
+        return list(active)
+
+
+class RandomScheduler(Scheduler):
+    """ASCII-Random: a fresh random agent order each round."""
+
+    def __init__(self, seed: int = 0) -> None:
+        self.seed = seed
+        self._rng = np.random.default_rng(seed)
+
+    def reset(self) -> None:
+        self._rng = np.random.default_rng(self.seed)
+
+    def round_order(self, round_idx: int, active: list[int]) -> list[int]:
+        perm = self._rng.permutation(len(active))
+        return [active[i] for i in perm]
+
+
+class AsyncStaleScheduler(SequentialScheduler):
+    """Beyond-paper asynchronous rounds (the paper's open problem): all
+    agents train concurrently against the same stale round-t score; positive
+    updates merge multiplicatively (damped by 1/M) at the round barrier, so
+    the M WST fits parallelize."""
+
+    stale = True
+
+
+# ======================================================================= agents
+@dataclass
+class AgentEndpoint:
+    """One protocol participant: a private learner plus its local feature
+    block.  Raw features never leave the endpoint; only messages do.
+
+    ``active`` gates participation round by round — flip it off to simulate
+    dropout mid-session, or append a fresh endpoint to a live session
+    (:meth:`Session.add_endpoint`) for a late join.
+    """
+
+    agent_id: int
+    learner: Learner
+    X: jnp.ndarray
+    name: str = ""
+    active: bool = True
+    inbox: list[Message] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        if not self.name:
+            self.name = f"agent{self.agent_id}"
+
+    def receive(self, msg: Message) -> None:
+        # keep only the freshest message per kind: the protocol never reads
+        # stale state, and retaining every length-n IgnoranceMsg would grow
+        # memory O(rounds * n)
+        self.inbox = [m for m in self.inbox if m.kind != msg.kind]
+        self.inbox.append(msg)
+
+    def latest(self, kind: str) -> Message | None:
+        for msg in reversed(self.inbox):
+            if msg.kind == kind:
+                return msg
+        return None
+
+    # ---- local computation (Algorithm 2: weighted supervised training)
+    def fit_local(self, key, classes: jnp.ndarray, w: jnp.ndarray,
+                  num_classes: int) -> PyTree:
+        return self.learner.fit(key, self.X, classes, w, num_classes)
+
+    def reward(self, params: PyTree, classes: jnp.ndarray) -> jnp.ndarray:
+        return self.learner.reward(params, self.X, classes)
+
+    def score_block(self, components: Sequence["Component"], num_classes: int,
+                    X: jnp.ndarray | None = None,
+                    max_round: int | None = None) -> jnp.ndarray:
+        """This agent's [n, K] alpha-weighted coded votes over its own
+        components (the prediction-time ScoreBlockMsg payload)."""
+        X = self.X if X is None else X
+        total = jnp.zeros((X.shape[0], num_classes), jnp.float32)
+        for comp in components:
+            if comp.agent != self.agent_id:
+                continue
+            if max_round is not None and comp.round > max_round:
+                continue
+            total = total + _component_score(comp, self.learner, X,
+                                             num_classes)
+        return total
+
+
+# ================================================================ fitted result
+@dataclass
+class Component:
+    """One boosting component: (agent, round, alpha, fitted params)."""
+    agent: int
+    round: int
+    alpha: float
+    params: PyTree
+
+
+def _component_score(comp: "Component", learner: Learner, X: jnp.ndarray,
+                     num_classes: int) -> jnp.ndarray:
+    """One component's [n, K] contribution: alpha * coded votes (Algorithm 1
+    line 12 term) — the single definition shared by host-side prediction and
+    endpoint score blocks."""
+    pred = learner.predict(comp.params, X)
+    return comp.alpha * encode_labels(pred, num_classes)
+
+
+@dataclass
+class FittedASCII:
+    """The trained ensemble: Algorithm 1's output, usable for prediction.
+
+    Also the engine's session result (``Session.fitted()``) and the
+    back-compat return type of ``protocol.fit``.
+    """
+    components: list[Component]
+    learners: Sequence[Learner]
+    num_classes: int
+    history: list[dict] = field(default_factory=list)
+
+    def decision_scores(self, Xs: Sequence[jnp.ndarray],
+                        max_round: int | None = None) -> jnp.ndarray:
+        """Line 12 of Algorithm 1: sum_t sum_m alpha * g (coded scores).
+
+        Each agent evaluates only its own components on its own features and
+        ships a [n, K] score block — O(nK) communication, not raw data.
+        """
+        n = Xs[0].shape[0]
+        k = self.num_classes
+        # NB: summed in component order (not grouped per agent) so float
+        # addition order — and therefore predictions — match the legacy loop
+        # bit for bit.
+        total = jnp.zeros((n, k), jnp.float32)
+        for comp in self.components:
+            if max_round is not None and comp.round > max_round:
+                continue
+            total = total + _component_score(comp, self.learners[comp.agent],
+                                             Xs[comp.agent], k)
+        return total
+
+    def predict(self, Xs: Sequence[jnp.ndarray],
+                max_round: int | None = None) -> jnp.ndarray:
+        return jnp.argmax(self.decision_scores(Xs, max_round), axis=-1)
+
+    @property
+    def num_rounds(self) -> int:
+        return max((c.round for c in self.components), default=-1) + 1
+
+
+# ================================================================ session state
+@dataclass
+class SessionState:
+    """Explicit, checkpointable protocol state.
+
+    Arrays (ignorance score, PRNG key, component params) serialize through
+    ``train/checkpoint.py``'s structured tree writer; everything else is
+    JSON-able metadata.  Saving mid-run and resuming reproduces the exact
+    trajectory: the PRNG key is part of the state and schedulers fast-forward
+    their RNG via :meth:`Scheduler.skip_to`.
+    """
+
+    w: jnp.ndarray
+    key: jax.Array
+    round: int = 0
+    components: list[Component] = field(default_factory=list)
+    history: list[dict] = field(default_factory=list)
+    stopped: bool = False
+    best_val: float = -1.0
+    cv_stale: int = 0
+    # per-round active-agent counts (for exact scheduler-RNG replay on
+    # resume) and the endpoint active flags at checkpoint time
+    order_sizes: list[int] = field(default_factory=list)
+    active: list[bool] | None = None
+
+    # ---- (de)serialization --------------------------------------------------
+    def to_tree(self) -> tuple[PyTree, dict]:
+        """Split into (array tree, JSON-able metadata)."""
+        tree = {"w": self.w,
+                "key": jax.random.key_data(self.key),
+                "params": [c.params for c in self.components]}
+        meta = {"round": self.round,
+                "stopped": self.stopped,
+                "best_val": self.best_val,
+                "cv_stale": self.cv_stale,
+                "history": self.history,
+                "order_sizes": self.order_sizes,
+                "active": self.active,
+                "components": [{"agent": c.agent, "round": c.round,
+                                "alpha": c.alpha} for c in self.components]}
+        return tree, meta
+
+    @classmethod
+    def from_tree(cls, tree: PyTree, meta: dict) -> "SessionState":
+        components = [
+            Component(int(c["agent"]), int(c["round"]), float(c["alpha"]), p)
+            for c, p in zip(meta["components"], tree["params"])]
+        return cls(w=jnp.asarray(tree["w"]),
+                   key=jax.random.wrap_key_data(jnp.asarray(tree["key"])),
+                   round=int(meta["round"]),
+                   components=components,
+                   history=list(meta["history"]),
+                   stopped=bool(meta["stopped"]),
+                   best_val=float(meta["best_val"]),
+                   cv_stale=int(meta["cv_stale"]),
+                   order_sizes=[int(s) for s in meta.get("order_sizes", [])],
+                   active=meta.get("active"))
+
+    def save(self, directory: str, step: int | None = None) -> str:
+        from repro.train import checkpoint
+        tree, meta = self.to_tree()
+        return checkpoint.save_structured(
+            directory, self.round if step is None else step, tree, meta=meta)
+
+    @classmethod
+    def restore(cls, directory: str, step: int | None = None) -> "SessionState":
+        from repro.train import checkpoint
+        tree, meta, _ = checkpoint.restore_structured(directory, step=step)
+        return cls.from_tree(tree, meta)
+
+
+# ======================================================================= config
+@dataclass(frozen=True)
+class SessionConfig:
+    """Engine knobs (the old ASCIIConfig minus variant/seed, which became
+    the Scheduler)."""
+    num_classes: int
+    max_rounds: int = 20
+    upstream: bool = True             # eqs. 11/13 side info (False = -Simple)
+    stop_on_negative_alpha: bool = True
+    cv_patience: int = 2
+    alpha_cap: float = 20.0
+    exact_reweight: bool = False      # beyond-paper exact exp-loss reweight
+
+
+def holdout_split(Xs: Sequence[jnp.ndarray], classes: jnp.ndarray,
+                  fraction: float):
+    """The paper's CV stop criterion split (Section III-C): reserve the
+    trailing rows (aligned by sample ID) for validation."""
+    cut = int(round((1.0 - fraction) * Xs[0].shape[0]))
+    return ([x[:cut] for x in Xs], classes[:cut],
+            [x[cut:] for x in Xs], classes[cut:])
+
+
+# ====================================================================== session
+class Session:
+    """A live protocol run: endpoints + scheduler + transport + state.
+
+    ``step()`` executes one interchange round and returns whether the
+    session should continue; ``run()`` loops to completion.  Between steps
+    callers may drop endpoints (``active = False``), add late joiners
+    (:meth:`add_endpoint`), or checkpoint (:meth:`checkpoint`).
+    """
+
+    def __init__(self, cfg: SessionConfig, scheduler: Scheduler,
+                 transport: Transport, endpoints: Sequence[AgentEndpoint],
+                 classes: jnp.ndarray, state: SessionState,
+                 validation: tuple[Sequence[jnp.ndarray], jnp.ndarray] | None = None,
+                 _send_setup: bool = True) -> None:
+        self.cfg = cfg
+        self.scheduler = scheduler
+        self.transport = transport
+        self.endpoints = list(endpoints)
+        for i, ep in enumerate(self.endpoints):
+            assert ep.agent_id == i, "endpoint agent_ids must be 0..M-1"
+        self.classes = classes
+        self.state = state
+        self.validation = validation
+        transport.bind(self.endpoints)
+        if _send_setup:
+            self._send_setup()
+
+    # ---- wiring -------------------------------------------------------------
+    def _send_setup_to(self, ep: AgentEndpoint) -> None:
+        """Collation setup for one endpoint: the head agent shares labels
+        and sample IDs (metered under Fig. 4)."""
+        n = int(self.classes.shape[0])
+        head = self.endpoints[0].name
+        self.transport.send(LabelsMsg(head, ep.name, n))
+        self.transport.send(SampleIdsMsg(head, ep.name, n))
+
+    def _send_setup(self) -> None:
+        for ep in self.endpoints[1:]:
+            self._send_setup_to(ep)
+
+    def add_endpoint(self, learner: Learner, X: jnp.ndarray,
+                     name: str = "") -> AgentEndpoint:
+        """Late join: a new agent enters the live session.  It receives the
+        collation setup and participates from the next round on."""
+        ep = AgentEndpoint(len(self.endpoints), learner, X, name=name)
+        self.endpoints.append(ep)
+        self.transport.bind(self.endpoints)
+        self._send_setup_to(ep)
+        return ep
+
+    def _reweight(self):
+        cfg = self.cfg
+        if cfg.exact_reweight:
+            return (lambda w, r, a:
+                    scores.ignorance_update_exact(w, r, a, cfg.num_classes)), False
+        return scores.ignorance_update, True
+
+    # ---- the round loop -----------------------------------------------------
+    def step(self) -> bool:
+        """One interchange round (Algorithm 1 lines 3-11 / the Section-IV
+        chain).  Returns False once the session stopped."""
+        st, cfg = self.state, self.cfg
+        if st.stopped or st.round >= cfg.max_rounds:
+            return False
+        t = st.round
+        eps = {ep.agent_id: ep for ep in self.endpoints}
+        active = [ep.agent_id for ep in self.endpoints if ep.active]
+        if not active:
+            st.stopped = True          # everyone dropped out: nothing to run
+            return False
+        order = self.scheduler.round_order(t, active)
+        st.order_sizes.append(len(order))
+        rec: dict = {"round": t, "alphas": [], "accs": []}
+        reweight, standard = self._reweight()
+        k = cfg.num_classes
+        stop = False
+
+        if self.scheduler.stale:
+            stop = self._step_stale(order, eps, rec)
+        else:
+            n = st.w.shape[0]
+            u = jnp.ones((n,), jnp.float32)
+            for j, m in enumerate(order):
+                st.key, sub = jax.random.split(st.key)
+                params = eps[m].fit_local(sub, self.classes, st.w, k)
+                r = eps[m].reward(params, self.classes)
+                if (not cfg.upstream) or j == 0:
+                    a, rbar = scores.model_weight(st.w, r, k,
+                                                  alpha_cap=cfg.alpha_cap)
+                else:
+                    a, rbar = scores.model_weight(st.w, r, k, u=u,
+                                                  alpha_cap=cfg.alpha_cap)
+                rec["alphas"].append(float(a))
+                rec["accs"].append(float(rbar))
+                if cfg.stop_on_negative_alpha and float(a) <= 0:
+                    stop = True        # Algorithm 1, line 8
+                    break
+                st.components.append(Component(m, t, float(a), params))
+                u = scores.upstream_factor_update(u, a, r, k)
+                dst = eps[order[(j + 1) % len(order)]]
+                st.w = self.transport.interchange(eps[m], dst, st.w, r, a,
+                                                  reweight, standard)
+
+        if self.validation is not None:
+            Xs_val, c_val = self.validation
+            val_acc = float(jnp.mean(self.fitted().predict(Xs_val) == c_val))
+            rec["val_acc"] = val_acc
+            if val_acc > st.best_val + 1e-9:
+                st.best_val, st.cv_stale = val_acc, 0
+            else:
+                st.cv_stale += 1
+                if st.cv_stale >= cfg.cv_patience:
+                    stop = True        # out-sample error no longer decreasing
+        st.history.append(rec)
+        st.round += 1
+        if stop:
+            st.stopped = True
+        return not st.stopped and st.round < cfg.max_rounds
+
+    def _step_stale(self, order: list[int], eps: dict, rec: dict) -> bool:
+        """Asynchronous round: stale reads, damped multiplicative merge at
+        the barrier (see AsyncStaleScheduler)."""
+        st, cfg = self.state, self.cfg
+        k = cfg.num_classes
+        t = st.round
+        fits = []
+        for m in order:
+            st.key, sub = jax.random.split(st.key)
+            params = eps[m].fit_local(sub, self.classes, st.w, k)
+            r = eps[m].reward(params, self.classes)
+            a, rbar = scores.model_weight(st.w, r, k, alpha_cap=cfg.alpha_cap)
+            fits.append((m, params, r, a, rbar))
+        w_next = st.w
+        any_pos = False
+        total = len(order)
+        for j, (m, params, r, a, rbar) in enumerate(fits):
+            rec["alphas"].append(float(a))
+            rec["accs"].append(float(rbar))
+            if float(a) <= 0:
+                continue
+            any_pos = True
+            st.components.append(Component(m, t, float(a), params))
+            # damp the stale multiplicative updates by 1/M: the naive product
+            # of M per-agent reweights diverges for large M (measured:
+            # chance-level at M=20); damping restores the per-round weight
+            # movement of the sequential chain.
+            w_next = w_next * jnp.exp((a / total) * (1.0 - r))
+            dst = eps[order[(j + 1) % total]]
+            self.transport.send(IgnoranceMsg(eps[m].name, dst.name, w_next))
+            self.transport.send(ModelWeightMsg(eps[m].name, dst.name, float(a)))
+        st.w = w_next / jnp.maximum(jnp.sum(w_next), 1e-12)
+        return not any_pos and cfg.stop_on_negative_alpha
+
+    def run(self, max_rounds: int | None = None) -> SessionState:
+        """Drive ``step()`` to completion (or for ``max_rounds`` more)."""
+        budget = float("inf") if max_rounds is None else max_rounds
+        while budget > 0:
+            budget -= 1
+            if not self.step():
+                break
+        return self.state
+
+    # ---- results ------------------------------------------------------------
+    def fitted(self) -> FittedASCII:
+        return FittedASCII(self.state.components,
+                           [ep.learner for ep in self.endpoints],
+                           self.cfg.num_classes, self.state.history)
+
+    def predict_distributed(self, Xs: Sequence[jnp.ndarray] | None = None,
+                            max_round: int | None = None) -> jnp.ndarray:
+        """Prediction as the protocol actually runs it: every endpoint ships
+        its [n, K] ScoreBlockMsg to the head agent, which sums and argmaxes.
+        Metered transports book this O(nK) traffic."""
+        head = self.endpoints[0]
+        total = None
+        for i, ep in enumerate(self.endpoints):
+            X = None if Xs is None else Xs[i]
+            block = ep.score_block(self.state.components,
+                                   self.cfg.num_classes, X=X,
+                                   max_round=max_round)
+            if ep is head:
+                contrib = block
+            else:
+                self.transport.send(ScoreBlockMsg(ep.name, head.name, block))
+                contrib = head.latest("score_block").scores
+            total = contrib if total is None else total + contrib
+        return jnp.argmax(total, axis=-1)
+
+    # ---- checkpointing ------------------------------------------------------
+    def checkpoint(self, directory: str, step: int | None = None) -> str:
+        """Save the live SessionState mid-run (resumable via
+        ``Protocol.resume``)."""
+        self.state.active = [ep.active for ep in self.endpoints]
+        return self.state.save(directory, step)
+
+
+# ======================================================================= engine
+class Protocol:
+    """The ASCII engine: config + scheduler + transport, driving endpoints.
+
+    ``start`` opens a fresh session, ``resume`` restores one from a
+    checkpoint directory (fast-forwarding the scheduler RNG), and ``fit`` is
+    the one-call convenience that runs a session to completion.
+    """
+
+    def __init__(self, cfg: SessionConfig, scheduler: Scheduler | None = None,
+                 transport: Transport | None = None) -> None:
+        self.cfg = cfg
+        self.scheduler = scheduler if scheduler is not None else SequentialScheduler()
+        self.transport = transport if transport is not None else InProcessTransport()
+
+    def start(self, key: jax.Array, endpoints: Sequence[AgentEndpoint],
+              classes: jnp.ndarray,
+              validation=None) -> Session:
+        n = endpoints[0].X.shape[0]
+        state = SessionState(w=scores.init_ignorance(n), key=key)
+        self.scheduler.reset()
+        return Session(self.cfg, self.scheduler, self.transport, endpoints,
+                       classes, state, validation=validation)
+
+    def resume(self, directory: str, endpoints: Sequence[AgentEndpoint],
+               classes: jnp.ndarray, validation=None,
+               step: int | None = None) -> Session:
+        """Restore a checkpointed session and continue where it left off."""
+        state = SessionState.restore(directory, step=step)
+        self.scheduler.reset()
+        self.scheduler.skip_to(state.order_sizes)
+        if state.active is not None:
+            if len(endpoints) != len(state.active):
+                raise ValueError(
+                    f"resume expects {len(state.active)} endpoints (the "
+                    f"checkpointed session's roster, incl. late joiners), "
+                    f"got {len(endpoints)}")
+            for ep, flag in zip(endpoints, state.active):
+                ep.active = bool(flag)
+        return Session(self.cfg, self.scheduler, self.transport, endpoints,
+                       classes, state, validation=validation,
+                       _send_setup=False)
+
+    def fit(self, key: jax.Array, endpoints: Sequence[AgentEndpoint],
+            classes: jnp.ndarray, validation=None) -> FittedASCII:
+        session = self.start(key, endpoints, classes, validation=validation)
+        session.run()
+        return session.fitted()
+
+
+def variant_setup(variant: str, seed: int = 0) -> tuple[Scheduler, bool]:
+    """Map a legacy ``variant`` string to (scheduler, upstream flag):
+
+      ascii  -> sequential chain, upstream side info (eqs. 11/13)
+      simple -> sequential chain, own-loss alphas only
+      random -> random order per round, upstream side info
+      async  -> stale-read parallel rounds (beyond paper)
+    """
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}; expected {VARIANTS}")
+    if variant == "random":
+        return RandomScheduler(seed), True
+    if variant == "async":
+        return AsyncStaleScheduler(), True
+    return SequentialScheduler(), variant != "simple"
+
+
+def endpoints_for(learners: Sequence[Learner],
+                  Xs: Sequence[jnp.ndarray]) -> list[AgentEndpoint]:
+    """Build the endpoint list for aligned (learner, feature-block) pairs."""
+    assert len(learners) == len(Xs)
+    return [AgentEndpoint(m, lr, X) for m, (lr, X) in
+            enumerate(zip(learners, Xs))]

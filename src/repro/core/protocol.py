@@ -1,40 +1,41 @@
 """ASCII protocol: Algorithm 1 (two-agent), its M-agent extension
-(Section IV), and the Section-V variants.
+(Section IV), and the Section-V variants — back-compat front door.
 
-The round loop is a host-side Python loop (rounds are inherently sequential
-and few); each agent's WST fit and all score math are jitted JAX.  Agents
-are heterogeneous (arbitrary Learner per agent), exactly as the paper
-allows.  A TransportLog can be attached to meter every interchanged message
-(Fig. 4); the mesh-native runtime lives in core/collectives.py.
+The round loop itself now lives in the agent-session engine
+(:mod:`repro.core.engine`): endpoints exchange typed messages through a
+pluggable Transport, round order is a pluggable Scheduler, and protocol
+state is an explicit checkpointable SessionState.  ``fit`` here is a thin
+wrapper that maps the legacy ``ASCIIConfig`` (variant strings, cv_fraction,
+a raw ``TransportLog``) onto that engine and returns the same
+``FittedASCII`` as before — every pre-engine call site keeps working and
+produces bit-identical results (tests/test_engine_golden.py).
 
-Variants:
+Variants (now scheduler + alpha-policy pairs, see ``engine.variant_setup``):
   * ``ascii``        — the paper's method: assistant alphas use the upstream
                        factor (model-level side information, eqs. 11/13).
   * ``simple``       — ASCII-Simple: alpha from the agent's own loss only.
   * ``random``       — ASCII-Random: random agent order each round.
   * ``async``        — beyond-paper: answers the paper's open problem on
-                       asynchronous interchange.  All agents train
-                       concurrently on the *same* round-t ignorance score
-                       (stale reads), updates are merged multiplicatively at
-                       the round barrier.  This removes the serial chain so
-                       the M WST fits parallelize across the mesh.
+                       asynchronous interchange (stale reads, damped merge).
   Ensemble-AdaBoost (Method 3) is `fit_ensemble_adaboost` below.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Sequence
+from dataclasses import dataclass
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import scores
-from repro.core.encoding import encode_labels
+from repro.core.engine import (Component, FittedASCII, InProcessTransport,
+                               MeteredTransport, Protocol, SessionConfig,
+                               Transport, endpoints_for, holdout_split,
+                               variant_setup)
 from repro.core.transport import TransportLog
 from repro.learners.base import Learner
 
-PyTree = Any
+__all__ = ["ASCIIConfig", "Component", "FittedASCII", "EnsembleAdaBoost",
+           "fit", "fit_single_agent_adaboost", "fit_ensemble_adaboost"]
 
 
 @dataclass(frozen=True)
@@ -53,161 +54,43 @@ class ASCIIConfig:
     exact_reweight: bool = False        # beyond-paper exact exp-loss reweight
     seed: int = 0
 
-
-@dataclass
-class Component:
-    agent: int
-    round: int
-    alpha: float
-    params: PyTree
-
-
-@dataclass
-class FittedASCII:
-    components: list[Component]
-    learners: Sequence[Learner]
-    num_classes: int
-    history: list[dict] = field(default_factory=list)
-
-    def decision_scores(self, Xs: Sequence[jnp.ndarray],
-                        max_round: int | None = None) -> jnp.ndarray:
-        """Line 12 of Algorithm 1: sum_t sum_m alpha * g (coded scores).
-
-        Each agent evaluates only its own components on its own features and
-        ships a [n, K] score block — O(nK) communication, not raw data.
-        """
-        n = Xs[0].shape[0]
-        k = self.num_classes
-        total = jnp.zeros((n, k), jnp.float32)
-        for comp in self.components:
-            if max_round is not None and comp.round > max_round:
-                continue
-            pred = self.learners[comp.agent].predict(comp.params, Xs[comp.agent])
-            total = total + comp.alpha * encode_labels(pred, k)
-        return total
-
-    def predict(self, Xs: Sequence[jnp.ndarray],
-                max_round: int | None = None) -> jnp.ndarray:
-        return jnp.argmax(self.decision_scores(Xs, max_round), axis=-1)
-
-    @property
-    def num_rounds(self) -> int:
-        return max((c.round for c in self.components), default=-1) + 1
-
-
-def _meter_setup(transport: TransportLog | None, n: int, num_agents: int) -> None:
-    if transport is None:
-        return
-    for m in range(1, num_agents):
-        transport.send("agent0", f"agent{m}", "labels", n)      # numeric labels
-        transport.send("agent0", f"agent{m}", "sample_ids", n)  # collation IDs
-
-
-def _meter_hop(transport: TransportLog | None, src: int, dst: int, n: int) -> None:
-    if transport is None:
-        return
-    transport.send(f"agent{src}", f"agent{dst}", "ignorance", n)
-    transport.send(f"agent{src}", f"agent{dst}", "model_weight", 1)
+    def session_config(self, upstream: bool) -> SessionConfig:
+        return SessionConfig(num_classes=self.num_classes,
+                             max_rounds=self.max_rounds,
+                             upstream=upstream,
+                             stop_on_negative_alpha=self.stop_on_negative_alpha,
+                             cv_patience=self.cv_patience,
+                             alpha_cap=self.alpha_cap,
+                             exact_reweight=self.exact_reweight)
 
 
 def fit(key: jax.Array, Xs: Sequence[jnp.ndarray], classes: jnp.ndarray,
         learners: Sequence[Learner], cfg: ASCIIConfig,
-        transport: TransportLog | None = None) -> FittedASCII:
-    """Run the ASCII training protocol (Algorithm 1 / Section IV)."""
+        transport: TransportLog | Transport | None = None) -> FittedASCII:
+    """Run the ASCII training protocol (Algorithm 1 / Section IV).
+
+    Back-compat wrapper over ``engine.Protocol``: accepts a raw
+    ``TransportLog`` (wrapped into a MeteredTransport) or any engine
+    ``Transport``; ``cfg.variant`` picks the scheduler.
+    """
     num_agents = len(Xs)
     assert len(learners) == num_agents
-    # Paper's CV stop criterion: reserve the trailing rows (aligned by
-    # sample ID) for validation; learning uses the leading rows only.
-    Xs_val, c_val = None, None
+    validation = None
     if cfg.cv_fraction > 0.0:
-        cut = int(round((1.0 - cfg.cv_fraction) * Xs[0].shape[0]))
-        Xs_val = [x[cut:] for x in Xs]
-        c_val = classes[cut:]
-        Xs = [x[:cut] for x in Xs]
-        classes = classes[:cut]
-    n = Xs[0].shape[0]
-    k = cfg.num_classes
-    w = scores.init_ignorance(n)
-    rng = np.random.default_rng(cfg.seed)
-    result = FittedASCII([], learners, k)
-    _meter_setup(transport, n, num_agents)
-    best_val, stale = -1.0, 0
-
-    reweight = (
-        (lambda w, r, a: scores.ignorance_update_exact(w, r, a, k))
-        if cfg.exact_reweight else scores.ignorance_update)
-
-    stop = False
-    for t in range(cfg.max_rounds):
-        if cfg.variant == "random":
-            order = list(rng.permutation(num_agents))
-        else:
-            order = list(range(num_agents))
-
-        round_rec: dict = {"round": t, "alphas": [], "accs": []}
-
-        if cfg.variant == "async":
-            # Beyond-paper: stale-read parallel round (see module docstring).
-            fits = []
-            for m in order:
-                key, sub = jax.random.split(key)
-                params = learners[m].fit(sub, Xs[m], classes, w, k)
-                r = learners[m].reward(params, Xs[m], classes)
-                a, rbar = scores.model_weight(w, r, k, alpha_cap=cfg.alpha_cap)
-                fits.append((m, params, r, a, rbar))
-            w_next = w
-            any_pos = False
-            for m, params, r, a, rbar in fits:
-                round_rec["alphas"].append(float(a))
-                round_rec["accs"].append(float(rbar))
-                if float(a) <= 0:
-                    continue
-                any_pos = True
-                result.components.append(Component(m, t, float(a), params))
-                # damp the stale multiplicative updates by 1/M: the naive
-                # product of M per-agent reweights diverges for large M
-                # (measured: chance-level at M=20); damping restores the
-                # per-round weight movement of the sequential chain.
-                w_next = w_next * jnp.exp((a / num_agents) * (1.0 - r))
-                _meter_hop(transport, m, (m + 1) % num_agents, n)
-            w = w_next / jnp.maximum(jnp.sum(w_next), 1e-12)
-            if not any_pos and cfg.stop_on_negative_alpha:
-                stop = True
-        else:
-            u = jnp.ones((n,), jnp.float32)
-            for j, m in enumerate(order):
-                key, sub = jax.random.split(key)
-                params = learners[m].fit(sub, Xs[m], classes, w, k)
-                r = learners[m].reward(params, Xs[m], classes)
-                if cfg.variant == "simple" or j == 0:
-                    a, rbar = scores.model_weight(w, r, k, alpha_cap=cfg.alpha_cap)
-                else:
-                    a, rbar = scores.model_weight(w, r, k, u=u,
-                                                  alpha_cap=cfg.alpha_cap)
-                round_rec["alphas"].append(float(a))
-                round_rec["accs"].append(float(rbar))
-                if cfg.stop_on_negative_alpha and float(a) <= 0:
-                    stop = True   # Algorithm 1, line 8: break if alpha < 0
-                    break
-                result.components.append(Component(m, t, float(a), params))
-                u = scores.upstream_factor_update(u, a, r, k)
-                w = reweight(w, r, a)
-                nxt = order[(j + 1) % num_agents]
-                _meter_hop(transport, m, nxt, n)
-
-        if Xs_val is not None:
-            val_acc = float(jnp.mean(result.predict(Xs_val) == c_val))
-            round_rec["val_acc"] = val_acc
-            if val_acc > best_val + 1e-9:
-                best_val, stale = val_acc, 0
-            else:
-                stale += 1
-                if stale >= cfg.cv_patience:
-                    stop = True   # out-sample error no longer decreasing
-        result.history.append(round_rec)
-        if stop:
-            break
-    return result
+        Xs, classes, Xs_val, c_val = holdout_split(Xs, classes,
+                                                   cfg.cv_fraction)
+        validation = (Xs_val, c_val)
+    scheduler, upstream = variant_setup(cfg.variant, cfg.seed)
+    if transport is None:
+        engine_transport: Transport = InProcessTransport()
+    elif isinstance(transport, TransportLog):
+        engine_transport = MeteredTransport(log=transport)
+    else:
+        engine_transport = transport
+    engine = Protocol(cfg.session_config(upstream), scheduler=scheduler,
+                      transport=engine_transport)
+    return engine.fit(key, endpoints_for(learners, Xs), classes,
+                      validation=validation)
 
 
 def fit_single_agent_adaboost(key, X: jnp.ndarray, classes: jnp.ndarray,

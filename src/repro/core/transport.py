@@ -1,13 +1,16 @@
-"""Byte-accounted transport simulator.
+"""Byte ledger for the metered transport.
 
 The paper's Fig. 4 measures transmission cost in bits.  ASCII transmits per
 hop: the length-n ignorance score plus one scalar model weight; once at
 setup: the numeric labels and sample IDs (collation).  The oracle baseline
-transmits agent B's raw feature matrix.  This module meters every logical
-message so benchmarks/fig4_transmission.py can reproduce the accounting.
+transmits agent B's raw feature matrix.
 
-In the distributed runtime the same messages ride mesh collectives
-(core/collectives.py); this simulator is the faithful, metered counterpart.
+The transport itself now lives in the agent-session engine
+(`core/engine.py`): `MeteredTransport` routes every typed message through
+this ledger, so benchmarks/fig4_transmission.py reads its accounting from
+`MeteredTransport.log`.  `TransportLog` stays importable here for
+back-compat (`protocol.fit(..., transport=TransportLog())` still works and
+is wrapped into a MeteredTransport by the engine).
 """
 from __future__ import annotations
 

@@ -1,0 +1,132 @@
+"""Session driver: run an ASCII engine session from the command line.
+
+Wires a dataset, a scheduler (via the variant name), and a transport into
+``core.engine.Protocol``, with optional mid-run checkpointing and resume —
+the launch-layer entry point for protocol runs, the way ``launch/train.py``
+is for LM training.
+
+  PYTHONPATH=src python -m repro.launch.session --dataset blob3 \
+      --variant ascii --rounds 6 --transport metered
+  PYTHONPATH=src python -m repro.launch.session --ckpt-dir /tmp/sess \
+      --stop-after 2                       # save mid-run ...
+  PYTHONPATH=src python -m repro.launch.session --ckpt-dir /tmp/sess \
+      --resume                             # ... and pick the run back up
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import (InProcessTransport, MeshRingTransport,
+                               MeteredTransport, Protocol, SessionConfig,
+                               endpoints_for, variant_setup)
+from repro.data.partition import train_test_split, vertical_split
+from repro.data import synthetic
+from repro.learners.tree import DecisionTree
+
+DATASETS = {
+    "blob3": lambda key, n: synthetic.blob_fig3(key, n=n),
+    "blob4": lambda key, n: synthetic.blob_fig4(key, n=n),
+    "blob6": lambda key, n: synthetic.blob_fig6(key, n=n),
+    "wine": lambda key, n: synthetic.wine_surrogate(key),
+}
+
+TRANSPORTS = {
+    "inprocess": InProcessTransport,
+    "metered": MeteredTransport,
+    "meshring": MeshRingTransport,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dataset", default="blob3", choices=sorted(DATASETS))
+    ap.add_argument("--n", type=int, default=600)
+    ap.add_argument("--variant", default="ascii",
+                    choices=["ascii", "simple", "random", "async"])
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--transport", default="metered",
+                    choices=sorted(TRANSPORTS))
+    ap.add_argument("--depth", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="",
+                    help="checkpoint SessionState here after the run "
+                         "(or after --stop-after rounds)")
+    ap.add_argument("--stop-after", type=int, default=0,
+                    help="pause after this many rounds (with --ckpt-dir: "
+                         "save a resumable checkpoint and exit)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from --ckpt-dir instead of starting fresh")
+    args = ap.parse_args()
+
+    key = jax.random.key(args.seed)
+    ds = DATASETS[args.dataset](key, args.n)
+    tr, te = train_test_split(args.seed, ds.X.shape[0])
+    Xs = vertical_split(ds.X, ds.splits)
+    Xtr, Xte = [x[tr] for x in Xs], [x[te] for x in Xs]
+    ctr, cte = ds.classes[tr], ds.classes[te]
+
+    scheduler, upstream = variant_setup(args.variant, args.seed)
+    transport = TRANSPORTS[args.transport]()
+    engine = Protocol(SessionConfig(num_classes=ds.num_classes,
+                                    max_rounds=args.rounds,
+                                    upstream=upstream),
+                      scheduler=scheduler, transport=transport)
+    endpoints = endpoints_for(
+        [DecisionTree(depth=args.depth, num_thresholds=8) for _ in Xs], Xtr)
+
+    # the run config that must match across pause/resume: a different
+    # variant/seed/dataset would silently corrupt the resumed trajectory
+    run_cfg = {k: getattr(args, k)
+               for k in ("dataset", "n", "variant", "depth", "seed")}
+    cfg_path = os.path.join(args.ckpt_dir or ".", "cli_config.json")
+    if args.resume:
+        if not args.ckpt_dir:
+            ap.error("--resume needs --ckpt-dir")
+        if os.path.exists(cfg_path):
+            with open(cfg_path) as f:
+                saved = json.load(f)
+            if saved != run_cfg:
+                ap.error(f"--resume config mismatch: checkpoint was written "
+                         f"with {saved}, this run is {run_cfg}")
+        else:
+            print(f"warning: no {cfg_path} manifest (checkpoint written "
+                  f"outside this CLI?) — cannot verify dataset/variant/seed "
+                  f"match the saved session")
+        session = engine.resume(args.ckpt_dir, endpoints, ctr)
+        print(f"resumed {args.ckpt_dir} at round {session.state.round}")
+    else:
+        session = engine.start(jax.random.fold_in(key, 1), endpoints, ctr)
+
+    session.run(max_rounds=args.stop_after or None)
+    paused = (args.stop_after and not session.state.stopped
+              and session.state.round < args.rounds)
+    if args.ckpt_dir:
+        path = session.checkpoint(args.ckpt_dir)
+        with open(cfg_path, "w") as f:
+            json.dump(run_cfg, f)
+        print(f"checkpointed round {session.state.round} -> {path}")
+
+    fitted = session.fitted()
+    acc = float(jnp.mean(fitted.predict(Xte) == cte))
+    line = (f"{args.dataset},{args.variant},{args.transport},"
+            f"rounds={fitted.num_rounds},components={len(fitted.components)},"
+            f"acc={acc:.3f}")
+    if isinstance(transport, MeteredTransport):
+        line += f",bits={transport.total_bits}"
+    print(line)
+    if paused:
+        if args.ckpt_dir:
+            print(f"paused after {session.state.round} rounds; rerun with "
+                  f"--resume to continue")
+        else:
+            print(f"paused after {session.state.round} rounds; nothing was "
+                  f"saved (pass --ckpt-dir to make the pause resumable)")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,3 +37,9 @@ class Learner(abc.ABC):
                classes: jnp.ndarray) -> jnp.ndarray:
         """Prop. 1 reward r_i = I{g(x_i) = y_i} (Algorithm 2, line 2)."""
         return (self.predict(params, X) == classes).astype(jnp.float32)
+
+    def endpoint(self, agent_id: int, X: jnp.ndarray, name: str = ""):
+        """Wrap this learner + its private feature block as a protocol
+        AgentEndpoint (see repro.core.engine)."""
+        from repro.core.engine import AgentEndpoint
+        return AgentEndpoint(agent_id, self, X, name=name)

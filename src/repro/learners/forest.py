@@ -26,9 +26,10 @@ def _fit_forest(key, X, classes, w, *, num_trees, depth, num_thresholds,
 
     def fit_one(key):
         boot_key, feat_key = jax.random.split(key)
-        # weight-space bootstrap: multinomial counts ~ bootstrap resampling
-        counts = jax.random.multinomial(
-            boot_key, n, jnp.full((n,), 1.0 / n)).astype(w.dtype)
+        # weight-space bootstrap: Poisson(1) counts ~ bootstrap resampling
+        # (jax.random.multinomial does not exist on this JAX version; the
+        # Poisson limit is the standard bootstrap approximation)
+        counts = jax.random.poisson(boot_key, 1.0, (n,)).astype(w.dtype)
         wb = w * counts
         cols = jax.random.permutation(feat_key, p)[:num_feats]
         params = fit_tree(X[:, cols], classes, wb, depth=depth,

@@ -1,0 +1,179 @@
+"""Verbatim copy of the pre-engine `repro.core.protocol.fit` host loop.
+
+This is the golden reference for tests/test_engine_golden.py: the engine-backed
+`protocol.fit` must reproduce this loop's alphas, component lists, and
+predictions exactly (same seed, same variant).  Do not "fix" or modernise this
+file — its value is that it is frozen at the seed commit's behaviour.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scores
+from repro.core.encoding import encode_labels
+from repro.core.transport import TransportLog
+from repro.learners.base import Learner
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class LegacyASCIIConfig:
+    num_classes: int
+    max_rounds: int = 20
+    variant: str = "ascii"              # ascii | simple | random | async
+    stop_on_negative_alpha: bool = True
+    cv_fraction: float = 0.0
+    cv_patience: int = 2
+    alpha_cap: float = 20.0
+    exact_reweight: bool = False
+    seed: int = 0
+
+
+@dataclass
+class LegacyComponent:
+    agent: int
+    round: int
+    alpha: float
+    params: PyTree
+
+
+@dataclass
+class LegacyFittedASCII:
+    components: list[LegacyComponent]
+    learners: Sequence[Learner]
+    num_classes: int
+    history: list[dict] = field(default_factory=list)
+
+    def decision_scores(self, Xs: Sequence[jnp.ndarray],
+                        max_round: int | None = None) -> jnp.ndarray:
+        n = Xs[0].shape[0]
+        k = self.num_classes
+        total = jnp.zeros((n, k), jnp.float32)
+        for comp in self.components:
+            if max_round is not None and comp.round > max_round:
+                continue
+            pred = self.learners[comp.agent].predict(comp.params, Xs[comp.agent])
+            total = total + comp.alpha * encode_labels(pred, k)
+        return total
+
+    def predict(self, Xs: Sequence[jnp.ndarray],
+                max_round: int | None = None) -> jnp.ndarray:
+        return jnp.argmax(self.decision_scores(Xs, max_round), axis=-1)
+
+    @property
+    def num_rounds(self) -> int:
+        return max((c.round for c in self.components), default=-1) + 1
+
+
+def _meter_setup(transport: TransportLog | None, n: int, num_agents: int) -> None:
+    if transport is None:
+        return
+    for m in range(1, num_agents):
+        transport.send("agent0", f"agent{m}", "labels", n)
+        transport.send("agent0", f"agent{m}", "sample_ids", n)
+
+
+def _meter_hop(transport: TransportLog | None, src: int, dst: int, n: int) -> None:
+    if transport is None:
+        return
+    transport.send(f"agent{src}", f"agent{dst}", "ignorance", n)
+    transport.send(f"agent{src}", f"agent{dst}", "model_weight", 1)
+
+
+def legacy_fit(key: jax.Array, Xs: Sequence[jnp.ndarray], classes: jnp.ndarray,
+               learners: Sequence[Learner], cfg: LegacyASCIIConfig,
+               transport: TransportLog | None = None) -> LegacyFittedASCII:
+    """The seed repo's host loop for Algorithm 1 / Section IV, frozen."""
+    num_agents = len(Xs)
+    assert len(learners) == num_agents
+    Xs_val, c_val = None, None
+    if cfg.cv_fraction > 0.0:
+        cut = int(round((1.0 - cfg.cv_fraction) * Xs[0].shape[0]))
+        Xs_val = [x[cut:] for x in Xs]
+        c_val = classes[cut:]
+        Xs = [x[:cut] for x in Xs]
+        classes = classes[:cut]
+    n = Xs[0].shape[0]
+    k = cfg.num_classes
+    w = scores.init_ignorance(n)
+    rng = np.random.default_rng(cfg.seed)
+    result = LegacyFittedASCII([], learners, k)
+    _meter_setup(transport, n, num_agents)
+    best_val, stale = -1.0, 0
+
+    reweight = (
+        (lambda w, r, a: scores.ignorance_update_exact(w, r, a, k))
+        if cfg.exact_reweight else scores.ignorance_update)
+
+    stop = False
+    for t in range(cfg.max_rounds):
+        if cfg.variant == "random":
+            order = list(rng.permutation(num_agents))
+        else:
+            order = list(range(num_agents))
+
+        round_rec: dict = {"round": t, "alphas": [], "accs": []}
+
+        if cfg.variant == "async":
+            fits = []
+            for m in order:
+                key, sub = jax.random.split(key)
+                params = learners[m].fit(sub, Xs[m], classes, w, k)
+                r = learners[m].reward(params, Xs[m], classes)
+                a, rbar = scores.model_weight(w, r, k, alpha_cap=cfg.alpha_cap)
+                fits.append((m, params, r, a, rbar))
+            w_next = w
+            any_pos = False
+            for m, params, r, a, rbar in fits:
+                round_rec["alphas"].append(float(a))
+                round_rec["accs"].append(float(rbar))
+                if float(a) <= 0:
+                    continue
+                any_pos = True
+                result.components.append(LegacyComponent(m, t, float(a), params))
+                w_next = w_next * jnp.exp((a / num_agents) * (1.0 - r))
+                _meter_hop(transport, m, (m + 1) % num_agents, n)
+            w = w_next / jnp.maximum(jnp.sum(w_next), 1e-12)
+            if not any_pos and cfg.stop_on_negative_alpha:
+                stop = True
+        else:
+            u = jnp.ones((n,), jnp.float32)
+            for j, m in enumerate(order):
+                key, sub = jax.random.split(key)
+                params = learners[m].fit(sub, Xs[m], classes, w, k)
+                r = learners[m].reward(params, Xs[m], classes)
+                if cfg.variant == "simple" or j == 0:
+                    a, rbar = scores.model_weight(w, r, k, alpha_cap=cfg.alpha_cap)
+                else:
+                    a, rbar = scores.model_weight(w, r, k, u=u,
+                                                  alpha_cap=cfg.alpha_cap)
+                round_rec["alphas"].append(float(a))
+                round_rec["accs"].append(float(rbar))
+                if cfg.stop_on_negative_alpha and float(a) <= 0:
+                    stop = True
+                    break
+                result.components.append(LegacyComponent(m, t, float(a), params))
+                u = scores.upstream_factor_update(u, a, r, k)
+                w = reweight(w, r, a)
+                nxt = order[(j + 1) % num_agents]
+                _meter_hop(transport, m, nxt, n)
+
+        if Xs_val is not None:
+            val_acc = float(jnp.mean(result.predict(Xs_val) == c_val))
+            round_rec["val_acc"] = val_acc
+            if val_acc > best_val + 1e-9:
+                best_val, stale = val_acc, 0
+            else:
+                stale += 1
+                if stale >= cfg.cv_patience:
+                    stop = True
+        result.history.append(round_rec)
+        if stop:
+            break
+    return result

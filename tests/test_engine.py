@@ -1,0 +1,309 @@
+"""Engine-level behaviour: transport parity, session checkpoint/resume,
+agent dropout and late joins, and distributed score-block prediction."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import (AgentEndpoint, InProcessTransport,
+                               MeshRingTransport, MeteredTransport, Protocol,
+                               RandomScheduler, SequentialScheduler,
+                               SessionConfig, SessionState, endpoints_for,
+                               variant_setup)
+from repro.data.partition import train_test_split, vertical_split
+from repro.data.synthetic import blob_fig3
+from repro.learners.tree import DecisionTree
+
+
+@pytest.fixture(scope="module")
+def blob():
+    key = jax.random.key(0)
+    ds = blob_fig3(key, n=300)
+    tr, te = train_test_split(0, 300)
+    Xs = vertical_split(ds.X, ds.splits)
+    return ([x[tr] for x in Xs], ds.classes[tr],
+            [x[te] for x in Xs], ds.classes[te], ds.num_classes)
+
+
+def _endpoints(Xtr):
+    return endpoints_for([DecisionTree(depth=3, num_thresholds=8)
+                          for _ in Xtr], Xtr)
+
+
+def _cfg(k, rounds=3, **kw):
+    return SessionConfig(num_classes=k, max_rounds=rounds, **kw)
+
+
+# ------------------------------------------------------------------ transports
+def test_transport_parity_inprocess_vs_metered(blob):
+    """The byte-metered simulator and the plain in-process transport must be
+    bit-identical: metering is passive."""
+    Xtr, ctr, Xte, cte, k = blob
+    runs = {}
+    for name, transport in [("plain", InProcessTransport()),
+                            ("metered", MeteredTransport())]:
+        session = Protocol(_cfg(k), transport=transport).start(
+            jax.random.key(2), _endpoints(Xtr), ctr)
+        session.run()
+        runs[name] = session
+    a, b = runs["plain"], runs["metered"]
+    np.testing.assert_array_equal(np.asarray(a.state.w),
+                                  np.asarray(b.state.w))
+    assert [(c.agent, c.round, c.alpha) for c in a.state.components] == \
+           [(c.agent, c.round, c.alpha) for c in b.state.components]
+    assert a.state.history == b.state.history
+    np.testing.assert_array_equal(np.asarray(a.fitted().predict(Xte)),
+                                  np.asarray(b.fitted().predict(Xte)))
+
+
+def test_metered_totals_match_fig4_accounting(blob):
+    """Engine-metered totals reproduce the Fig. 4 formula: one-time
+    (labels + sample IDs) to M-1 agents, then (n + 1) floats per hop, one
+    hop per appended component."""
+    Xtr, ctr, _, _, k = blob
+    transport = MeteredTransport()
+    session = Protocol(_cfg(k, rounds=2, stop_on_negative_alpha=False),
+                       transport=transport).start(
+        jax.random.key(6), _endpoints(Xtr), ctr)
+    session.run()
+    n = Xtr[0].shape[0]
+    m = len(Xtr)
+    hops = len(session.state.components)
+    expected = (m - 1) * 2 * n * 32 + hops * (n + 1) * 32
+    assert transport.total_bits == expected
+    kinds = transport.bits_by_kind()
+    assert kinds["ignorance"] == hops * n * 32
+    assert kinds["model_weight"] == hops * 32
+    assert kinds["labels"] == (m - 1) * n * 32
+
+
+def test_mesh_ring_transport_matches_host(blob):
+    """The device-kernel hop (Pallas ignorance_update) behind the same
+    Transport interface tracks the host trajectory."""
+    Xtr, ctr, Xte, cte, k = blob
+    host = Protocol(_cfg(k), transport=InProcessTransport()).start(
+        jax.random.key(2), _endpoints(Xtr), ctr)
+    host.run()
+    ring = Protocol(_cfg(k), transport=MeshRingTransport()).start(
+        jax.random.key(2), _endpoints(Xtr), ctr)
+    ring.run()
+    np.testing.assert_allclose(
+        np.asarray([c.alpha for c in ring.state.components]),
+        np.asarray([c.alpha for c in host.state.components]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(ring.state.w),
+                               np.asarray(host.state.w), atol=1e-6)
+    agree = float(jnp.mean(ring.fitted().predict(Xte)
+                           == host.fitted().predict(Xte)))
+    assert agree > 0.99
+
+
+_RING_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.engine import MeshRingTransport
+    from repro.core import scores
+
+    mesh = jax.make_mesh((4, 2), ("agent", "data"))
+    M, n = 4, 64
+    key = jax.random.key(0)
+    w = jax.random.dirichlet(key, jnp.ones(n))
+    ws = jnp.tile(w[None], (M, 1))
+    r = (jax.random.uniform(jax.random.fold_in(key, 1), (M, n)) > 0.4
+         ).astype(jnp.float32)
+    alpha = jnp.asarray([0.5, 1.0, 1.5, 2.0])
+    out = MeshRingTransport(mesh).ring_step(ws, r, alpha)
+    ref = jnp.stack([scores.ignorance_update(ws[m], r[m], alpha[m])
+                     for m in range(M)])
+    ref = jnp.roll(ref, 1, axis=0)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    assert err < 1e-6, err
+    print("ENGINE_RING_OK", err)
+""")
+
+
+@pytest.mark.slow
+def test_mesh_ring_collective_step():
+    """ring_step on a real (host-device) mesh: one shard_map'd ppermute hop
+    delivers agent m's updated score to agent m+1."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", _RING_SCRIPT],
+                         capture_output=True, text=True, env=env, timeout=560)
+    assert "ENGINE_RING_OK" in out.stdout, out.stdout + out.stderr
+
+
+# ---------------------------------------------------------- checkpoint / resume
+@pytest.mark.parametrize("scheduler_fn", [
+    lambda: SequentialScheduler(), lambda: RandomScheduler(seed=3)],
+    ids=["sequential", "random"])
+def test_checkpoint_and_resume_identical(blob, tmp_path, scheduler_fn):
+    """Save mid-run, resume in a fresh session: identical final state and
+    predictions (PRNG key is part of SessionState; scheduler RNG
+    fast-forwards)."""
+    Xtr, ctr, Xte, cte, k = blob
+    cfg = _cfg(k, rounds=4)
+
+    full = Protocol(cfg, scheduler=scheduler_fn()).start(
+        jax.random.key(9), _endpoints(Xtr), ctr)
+    full.run()
+
+    part = Protocol(cfg, scheduler=scheduler_fn()).start(
+        jax.random.key(9), _endpoints(Xtr), ctr)
+    part.step()
+    part.step()
+    ckpt_dir = str(tmp_path / "sess")
+    part.checkpoint(ckpt_dir)
+
+    resumed = Protocol(cfg, scheduler=scheduler_fn()).resume(
+        ckpt_dir, _endpoints(Xtr), ctr)
+    assert resumed.state.round == 2
+    resumed.run()
+
+    assert [(c.agent, c.round, c.alpha) for c in resumed.state.components] == \
+           [(c.agent, c.round, c.alpha) for c in full.state.components]
+    assert resumed.state.history == full.state.history
+    np.testing.assert_array_equal(np.asarray(resumed.state.w),
+                                  np.asarray(full.state.w))
+    np.testing.assert_array_equal(np.asarray(resumed.fitted().predict(Xte)),
+                                  np.asarray(full.fitted().predict(Xte)))
+
+
+def test_checkpoint_resume_exact_with_dropout(blob, tmp_path):
+    """Resume stays bit-identical even when the active set changed mid-run:
+    the scheduler RNG replays with the recorded per-round active counts and
+    endpoint active flags are part of the checkpoint."""
+    Xtr, ctr, Xte, cte, k = blob
+    cfg = _cfg(k, rounds=5, stop_on_negative_alpha=False)
+
+    def run(resume_dir=None):
+        session = Protocol(cfg, scheduler=RandomScheduler(seed=3)).start(
+            jax.random.key(9), _endpoints(Xtr), ctr)
+        session.step()
+        session.endpoints[1].active = False     # dropout after round 0
+        session.step()
+        if resume_dir is not None:
+            session.checkpoint(resume_dir)
+            session = Protocol(cfg, scheduler=RandomScheduler(seed=3)).resume(
+                resume_dir, _endpoints(Xtr), ctr)
+            assert not session.endpoints[1].active   # flag restored
+        session.run()
+        return session
+
+    full = run()
+    resumed = run(str(tmp_path / "churn"))
+    assert resumed.state.history == full.state.history
+    assert [(c.agent, c.round, c.alpha) for c in resumed.state.components] \
+        == [(c.agent, c.round, c.alpha) for c in full.state.components]
+    np.testing.assert_array_equal(np.asarray(resumed.fitted().predict(Xte)),
+                                  np.asarray(full.fitted().predict(Xte)))
+
+
+def test_all_agents_dropped_stops_session(blob):
+    Xtr, ctr, _, _, k = blob
+    session = Protocol(_cfg(k, rounds=5)).start(jax.random.key(1),
+                                                _endpoints(Xtr), ctr)
+    session.step()
+    for ep in session.endpoints:
+        ep.active = False
+    rounds_before = session.state.round
+    session.run()
+    assert session.state.stopped
+    assert session.state.round == rounds_before   # no empty spin rounds
+
+
+def test_session_state_roundtrip(blob, tmp_path):
+    Xtr, ctr, _, _, k = blob
+    session = Protocol(_cfg(k, rounds=2)).start(jax.random.key(1),
+                                                _endpoints(Xtr), ctr)
+    session.run()
+    st = session.state
+    st.save(str(tmp_path))
+    back = SessionState.restore(str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(back.w), np.asarray(st.w))
+    np.testing.assert_array_equal(jax.random.key_data(back.key),
+                                  jax.random.key_data(st.key))
+    assert back.round == st.round and back.stopped == st.stopped
+    assert [(c.agent, c.round, c.alpha) for c in back.components] == \
+           [(c.agent, c.round, c.alpha) for c in st.components]
+    for cb, cs in zip(back.components, st.components):
+        for lb, ls in zip(jax.tree.leaves(cb.params),
+                          jax.tree.leaves(cs.params)):
+            np.testing.assert_array_equal(np.asarray(lb), np.asarray(ls))
+
+
+# ------------------------------------------------------- dropout and late joins
+def test_agent_dropout_mid_session(blob):
+    """An endpoint going inactive mid-session: later rounds run without it,
+    its earlier components stay in the ensemble, training continues."""
+    Xtr, ctr, Xte, cte, k = blob
+    session = Protocol(_cfg(k, rounds=4, stop_on_negative_alpha=False)).start(
+        jax.random.key(4), _endpoints(Xtr), ctr)
+    session.step()
+    dropped = session.endpoints[1]
+    dropped.active = False
+    session.run()
+    comps = session.state.components
+    assert any(c.agent == 1 and c.round == 0 for c in comps)
+    assert not any(c.agent == 1 and c.round >= 1 for c in comps)
+    assert any(c.agent == 0 and c.round >= 1 for c in comps)
+    acc = float(jnp.mean(session.fitted().predict(Xte) == cte))
+    assert acc > 1.0 / k
+
+
+def test_late_join(blob):
+    """A fresh endpoint joins a live session after round 0: it receives the
+    collation setup and contributes components from the next round."""
+    Xtr, ctr, Xte, cte, k = blob
+    transport = MeteredTransport()
+    session = Protocol(_cfg(k, rounds=4, stop_on_negative_alpha=False),
+                       transport=transport).start(
+        jax.random.key(8), _endpoints(Xtr[:2]), ctr)
+    session.step()
+    newcomer = session.add_endpoint(DecisionTree(depth=3, num_thresholds=8),
+                                    Xtr[2])
+    assert newcomer.latest("labels") is not None        # got collation setup
+    session.run()
+    comps = session.state.components
+    assert not any(c.agent == 2 and c.round == 0 for c in comps)
+    assert any(c.agent == 2 and c.round >= 1 for c in comps)
+    acc = float(jnp.mean(session.fitted().predict(Xte) == cte))
+    assert acc > 1.0 / k
+
+
+# -------------------------------------------------- score-block prediction path
+def test_distributed_prediction_matches_host(blob):
+    """predict_distributed (endpoints shipping ScoreBlockMsg to the head)
+    equals the host-side FittedASCII.predict, and the O(nK) traffic is
+    metered."""
+    Xtr, ctr, Xte, cte, k = blob
+    transport = MeteredTransport()
+    session = Protocol(_cfg(k), transport=transport).start(
+        jax.random.key(3), _endpoints(Xtr), ctr)
+    session.run()
+    before = transport.total_bits
+    pred = session.predict_distributed(Xte)
+    np.testing.assert_array_equal(np.asarray(pred),
+                                  np.asarray(session.fitted().predict(Xte)))
+    n = Xte[0].shape[0]
+    shipped = transport.bits_by_kind().get("score_block", 0)
+    assert shipped == (len(Xtr) - 1) * n * k * 32
+    assert transport.total_bits == before + shipped
+
+
+def test_variant_setup_mapping():
+    sch, up = variant_setup("ascii")
+    assert isinstance(sch, SequentialScheduler) and up and not sch.stale
+    sch, up = variant_setup("simple")
+    assert isinstance(sch, SequentialScheduler) and not up
+    sch, up = variant_setup("random", seed=7)
+    assert isinstance(sch, RandomScheduler) and sch.seed == 7
+    sch, _ = variant_setup("async")
+    assert sch.stale
+    with pytest.raises(ValueError):
+        variant_setup("bogus")

@@ -1,0 +1,86 @@
+"""Golden back-compat: the engine-backed `protocol.fit` must reproduce the
+pre-refactor host loop (tests/golden_legacy_protocol.py) exactly — same
+alphas, same component lists, same predictions, same metered bits — for
+every variant and a fixed seed."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from golden_legacy_protocol import (LegacyASCIIConfig, legacy_fit)
+from repro.core.protocol import ASCIIConfig, fit
+from repro.core.transport import TransportLog
+from repro.data.partition import train_test_split, vertical_split
+from repro.data.synthetic import blob_fig3
+from repro.learners.logistic import LogisticRegression
+from repro.learners.tree import DecisionTree
+
+
+@pytest.fixture(scope="module")
+def blob():
+    key = jax.random.key(0)
+    ds = blob_fig3(key, n=300)
+    tr, te = train_test_split(0, 300)
+    Xs = vertical_split(ds.X, ds.splits)
+    return ([x[tr] for x in Xs], ds.classes[tr],
+            [x[te] for x in Xs], ds.classes[te], ds.num_classes)
+
+
+def _run_both(blob, variant, **cfg_kw):
+    Xtr, ctr, Xte, cte, k = blob
+    learners = [DecisionTree(depth=3, num_thresholds=8) for _ in Xtr]
+    new_log, old_log = TransportLog(), TransportLog()
+    new = fit(jax.random.key(11), Xtr, ctr, learners,
+              ASCIIConfig(num_classes=k, max_rounds=4, variant=variant,
+                          **cfg_kw),
+              transport=new_log)
+    old = legacy_fit(jax.random.key(11), Xtr, ctr, learners,
+                     LegacyASCIIConfig(num_classes=k, max_rounds=4,
+                                       variant=variant, **cfg_kw),
+                     transport=old_log)
+    return new, old, new_log, old_log, Xte
+
+
+@pytest.mark.parametrize("variant", ["ascii", "simple", "random", "async"])
+def test_engine_matches_legacy(blob, variant):
+    new, old, new_log, old_log, Xte = _run_both(blob, variant)
+    # identical component lists: same agents, rounds, alphas, params
+    assert [(c.agent, c.round) for c in new.components] == \
+           [(c.agent, c.round) for c in old.components]
+    np.testing.assert_array_equal(
+        np.asarray([c.alpha for c in new.components]),
+        np.asarray([c.alpha for c in old.components]))
+    for cn, co in zip(new.components, old.components):
+        for ln, lo in zip(jax.tree.leaves(cn.params),
+                          jax.tree.leaves(co.params)):
+            np.testing.assert_array_equal(np.asarray(ln), np.asarray(lo))
+    # identical round history
+    assert new.history == old.history
+    # identical predictions
+    np.testing.assert_array_equal(np.asarray(new.predict(Xte)),
+                                  np.asarray(old.predict(Xte)))
+    # identical metered traffic, entry for entry
+    assert new_log.entries == old_log.entries
+
+
+def test_engine_matches_legacy_exact_reweight(blob):
+    new, old, _, _, Xte = _run_both(blob, "ascii", exact_reweight=True)
+    np.testing.assert_array_equal(
+        np.asarray([c.alpha for c in new.components]),
+        np.asarray([c.alpha for c in old.components]))
+    np.testing.assert_array_equal(np.asarray(new.predict(Xte)),
+                                  np.asarray(old.predict(Xte)))
+
+
+def test_engine_matches_legacy_cv_stop(blob):
+    Xtr, ctr, Xte, cte, k = blob
+    learners = [LogisticRegression(steps=60) for _ in Xtr]
+    cfg_kw = dict(num_classes=k, max_rounds=6, cv_fraction=0.25,
+                  cv_patience=1)
+    new = fit(jax.random.key(5), Xtr, ctr, learners, ASCIIConfig(**cfg_kw))
+    old = legacy_fit(jax.random.key(5), Xtr, ctr, learners,
+                     LegacyASCIIConfig(**cfg_kw))
+    assert new.history == old.history
+    assert new.num_rounds == old.num_rounds
+    np.testing.assert_array_equal(np.asarray(new.predict(Xte)),
+                                  np.asarray(old.predict(Xte)))
