@@ -39,6 +39,18 @@ def main() -> None:
         print(f"fig6_{r['dataset']}_{r['method']},"
               f"{0:.0f},final_acc={r['final_acc']:.4f}")
 
+    _section("fleet (eager loop vs compiled session vs vmapped fleet)")
+    from benchmarks import fleet_bench
+    fr = fleet_bench.run(sessions=16 if args.full else 8,
+                         rounds=6 if args.full else 4,
+                         steps=150 if args.full else 80,
+                         out="BENCH_fleet.json")
+    for mode in ("eager", "compiled", "fleet"):
+        print(f"fleet_{mode},{fr[mode]['seconds'] * 1e6:.0f},"
+              f"sessions_per_sec={fr[mode]['sessions_per_sec']:.2f}")
+    print(f"fleet_speedup,0,fleet_vs_eager="
+          f"{fr['speedup_fleet_vs_eager']:.1f}x (BENCH_fleet.json)")
+
     _section("kernels (Pallas interpret vs jnp oracle)")
     from benchmarks import kernels_bench
     for r in kernels_bench.run():

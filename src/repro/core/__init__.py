@@ -1,8 +1,12 @@
 # The paper's primary contribution — the ASCII interchange protocol — lives
 # here.  `engine` is the agent-session engine (endpoints, schedulers,
-# transports, SessionState); `protocol` is the back-compat front door;
-# `scores`/`encoding` the math; `collectives` the mesh-native ring;
-# `transport` the byte ledger.
+# transports, SessionState); `compiled` lowers whole sessions into single
+# lax.scan programs (and vmapped session fleets); `protocol` is the
+# back-compat front door; `scores`/`encoding` the math; `collectives` the
+# mesh-native ring; `transport` the byte ledger.
+from repro.core.compiled import (SessionPlan, SessionResult, compiled_session,
+                                 fitted_from_result, fleet_run,
+                                 make_session_fn, plan_for)
 from repro.core.engine import (AgentEndpoint, AsyncStaleScheduler, Component,
                                FittedASCII, IgnoranceMsg, InProcessTransport,
                                MeshRingTransport, MeteredTransport,
@@ -15,5 +19,7 @@ __all__ = ["AgentEndpoint", "AsyncStaleScheduler", "Component", "FittedASCII",
            "IgnoranceMsg", "InProcessTransport", "MeshRingTransport",
            "MeteredTransport", "ModelWeightMsg", "Protocol", "RandomScheduler",
            "Scheduler", "ScoreBlockMsg", "SequentialScheduler", "Session",
-           "SessionConfig", "SessionState", "Transport", "endpoints_for",
-           "holdout_split", "variant_setup"]
+           "SessionConfig", "SessionPlan", "SessionResult", "SessionState",
+           "Transport", "compiled_session", "endpoints_for",
+           "fitted_from_result", "fleet_run", "holdout_split",
+           "make_session_fn", "plan_for", "variant_setup"]

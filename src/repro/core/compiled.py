@@ -1,0 +1,312 @@
+"""Compiled interchange rounds: an entire ASCII session as one XLA program.
+
+The eager engine (:mod:`repro.core.engine`) drives Algorithm 1 as a Python
+host loop — one dispatch per weighted fit, per reward, per ignorance hop.
+That is the right shape for heterogeneous eager learners (trees, forests)
+and for transports that must observe every message, but it leaves the
+hardware idle between dispatches.  The paper's round recurrence, however,
+is fixed-shape:
+
+    Algorithm 1, lines 3-11 (and its Section-IV M-agent chain):
+      line 4/9  params_m = WST(X_m, y, w_t)            -> LearnerCore.fit
+      line 5/9  r_i      = I{g_m(x_i) = y_i}           -> LearnerCore.predict
+      line 5    alpha    = model_weight(w, r[, u])     -> scores.head_agent_
+                                                          alpha / assistant_
+                                                          alpha (eqs. 9/11/13)
+      line 6/10 w_{t+1}  = reweight(w, r, alpha)       -> the fused Pallas
+                                                          kernel (eqs. 10/12)
+
+    so ``session_program`` lowers all rounds x all agents of that recurrence
+    into a single ``lax.scan`` over rounds (agents unrolled inside the round
+    body — their feature widths and learner cores differ, the round shape
+    does not), and ``fleet_run`` vmaps the whole program over per-session
+    PRNG keys (and optionally per-cohort data) so one compiled program
+    serves many concurrent sessions.
+
+The scan replicates the eager engine's semantics exactly — including the
+alpha <= 0 early stop (Algorithm 1, line 8), which becomes a ``stopped``
+mask that freezes the carried ignorance score — so ``backend="compiled"``
+on :class:`repro.core.engine.Protocol` is pinned bit-for-bit against the
+eager loop under sequential scheduling (tests/test_compiled.py).
+
+Quickstart::
+
+    cores = tuple(lr.core(num_classes) for lr in learners)
+    plan = SessionPlan(cores=cores, num_classes=k, max_rounds=6)
+    result = compiled_session(plan, jax.random.key(0), Xs, classes)
+    fitted = fitted_from_result(plan, result, learners)    # FittedASCII
+
+    keys = jax.random.split(jax.random.key(0), 32)         # 32 sessions,
+    fleet = fleet_run(plan, keys, Xs, classes)             # one program
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scores
+from repro.kernels.ignorance import DEFAULT_BN
+
+PyTree = Any
+
+
+# ========================================================================= plan
+@dataclass(frozen=True)
+class SessionPlan:
+    """The static half of a session: everything XLA needs at trace time.
+
+    ``cores`` are the agents' :class:`~repro.learners.base.LearnerCore`
+    contracts in chain order (hashable frozen dataclasses, so a plan is a
+    valid jit static argument and programs cache per plan).  The remaining
+    fields mirror :class:`repro.core.engine.SessionConfig`.
+    """
+    cores: tuple
+    num_classes: int
+    max_rounds: int = 20
+    upstream: bool = True
+    stop_on_negative_alpha: bool = True
+    alpha_cap: float = 20.0
+    exact_reweight: bool = False
+    # Run eqs. (10)/(12) through the fused Pallas kernel
+    # (kernels.ignorance.ignorance_update_unnormalized) when the score
+    # length tiles evenly; False forces the plain jnp formula everywhere.
+    # The two are bit-identical for n <= the kernel tile (1024); above it
+    # the tiled partial-sum reduction can differ in the last ulp, which is
+    # why Protocol._fit_compiled derives this flag from the transport
+    # (kernel iff MeshRingTransport) instead of taking the default.
+    use_kernel: bool = True
+    # Pallas interpret-mode override for the kernel (None = resolve by
+    # backend, like kernels.ops does) — threaded through from
+    # MeshRingTransport.interpret so compiled runs execute the same kernel
+    # mode the eager transport would.
+    kernel_interpret: bool | None = None
+
+    @property
+    def num_agents(self) -> int:
+        return len(self.cores)
+
+
+class SessionResult(NamedTuple):
+    """Fixed-shape output of one compiled session (vmap-friendly).
+
+    ``alphas``/``accs`` are [T, M]; ``executed`` marks (round, agent) slots
+    the eager loop would have reached, ``valid`` the subset that produced a
+    boosting component (executed and not the alpha<=0 stop trigger);
+    ``params`` is a length-M tuple of per-agent param pytrees with a
+    leading round axis [T, ...]; ``w_trace`` is the post-hop ignorance
+    score per slot [T, M, n] (what each IgnoranceMsg carried); ``w`` is the
+    final ignorance score.
+    """
+    alphas: jnp.ndarray
+    accs: jnp.ndarray
+    executed: jnp.ndarray
+    valid: jnp.ndarray
+    params: tuple
+    w_trace: jnp.ndarray
+    w: jnp.ndarray
+
+
+def plan_for(learners: Sequence, num_classes: int, *, max_rounds: int = 20,
+             upstream: bool = True, stop_on_negative_alpha: bool = True,
+             alpha_cap: float = 20.0, exact_reweight: bool = False,
+             use_kernel: bool = True,
+             kernel_interpret: bool | None = None) -> SessionPlan:
+    """Build a SessionPlan from eager Learners (they must all be
+    ``functional`` — have a LearnerCore)."""
+    cores = []
+    for m, lr in enumerate(learners):
+        core = lr.core(num_classes)
+        if core is None:
+            raise ValueError(
+                f"agent {m}: {type(lr).__name__} has no LearnerCore "
+                f"(functional=False) — eager-only learners (tree/forest) "
+                f"cannot ride the compiled backend")
+        cores.append(core)
+    return SessionPlan(cores=tuple(cores), num_classes=num_classes,
+                       max_rounds=max_rounds, upstream=upstream,
+                       stop_on_negative_alpha=stop_on_negative_alpha,
+                       alpha_cap=alpha_cap, exact_reweight=exact_reweight,
+                       use_kernel=use_kernel,
+                       kernel_interpret=kernel_interpret)
+
+
+# ==================================================================== lowering
+def _make_reweight(plan: SessionPlan, n: int):
+    """Pick the eqs.-(10)/(12) implementation for score length n: the fused
+    Pallas kernel when the tiling divides evenly (interpret mode off-TPU),
+    else the pure-jnp formula — both bit-identical reductions for n <= bn."""
+    if plan.exact_reweight:
+        k = plan.num_classes
+        return lambda w, r, a: scores.ignorance_update_exact(w, r, a, k)
+    if plan.use_kernel and n % min(DEFAULT_BN, n) == 0:
+        from repro.kernels import ops
+        return lambda w, r, a: ops.ignorance_update(
+            w, r, a, interpret=plan.kernel_interpret)
+    return scores.ignorance_update
+
+
+def make_session_fn(plan: SessionPlan, feature_shapes: tuple):
+    """Lower ``plan`` for per-agent feature shapes into a pure callable
+
+        session_fn(key, Xs, classes) -> SessionResult
+
+    — a single ``lax.scan`` over interchange rounds, agents unrolled in the
+    round body.  The callable is pure and fixed-shape, so it jits, vmaps
+    (``fleet_run``) and shards like any other program.
+    """
+    if len(feature_shapes) != plan.num_agents:
+        raise ValueError(f"{plan.num_agents} cores but "
+                         f"{len(feature_shapes)} feature shapes")
+    k = plan.num_classes
+    cores = plan.cores
+
+    def session_fn(key: jax.Array, Xs: tuple, classes: jnp.ndarray
+                   ) -> SessionResult:
+        classes = classes.astype(jnp.int32)
+        n = classes.shape[0]
+        onehot = jax.nn.one_hot(classes, k)
+        reweight = _make_reweight(plan, n)
+        w0 = scores.init_ignorance(n)
+        ones = jnp.ones((n,), jnp.float32)
+
+        def round_body(carry, _):
+            w, key, stopped = carry
+            u = ones
+            outs = []
+            # Agents unrolled: heterogeneous feature widths / cores, but a
+            # fixed chain shape — exactly Algorithm 1's inner lines 3-11.
+            for j, core in enumerate(cores):
+                key, sub = jax.random.split(key)
+                params = core.fit(core.init(sub, feature_shapes[j]), sub,
+                                  Xs[j], onehot, w)
+                r = (core.predict(params, Xs[j]) == classes
+                     ).astype(jnp.float32)
+                u_in = ones if (j == 0 or not plan.upstream) else u
+                a, rbar = scores.model_weight(w, r, k, u=u_in,
+                                              alpha_cap=plan.alpha_cap)
+                executed = jnp.logical_not(stopped)
+                if plan.stop_on_negative_alpha:
+                    trigger = executed & (a <= 0)   # Algorithm 1, line 8
+                else:
+                    trigger = jnp.zeros((), bool)
+                valid = executed & jnp.logical_not(trigger)
+                # Only a component-producing slot advances u and w — the
+                # eager loop breaks before touching them on a stop trigger,
+                # and never reaches them once stopped.
+                u = jnp.where(valid,
+                              scores.upstream_factor_update(u, a, r, k), u)
+                w = jnp.where(valid, reweight(w, r, a), w)
+                stopped = stopped | trigger
+                outs.append((params, a, rbar, executed, valid, w))
+            return (w, key, stopped), tuple(outs)
+
+        init = (w0, key, jnp.zeros((), bool))
+        (w_fin, _, _), ys = jax.lax.scan(round_body, init, None,
+                                         length=plan.max_rounds)
+        return SessionResult(
+            alphas=jnp.stack([y[1] for y in ys], axis=1),
+            accs=jnp.stack([y[2] for y in ys], axis=1),
+            executed=jnp.stack([y[3] for y in ys], axis=1),
+            valid=jnp.stack([y[4] for y in ys], axis=1),
+            params=tuple(y[0] for y in ys),
+            w_trace=jnp.stack([y[5] for y in ys], axis=1),
+            w=w_fin)
+
+    return session_fn
+
+
+@functools.lru_cache(maxsize=64)
+def _session_program(plan: SessionPlan, feature_shapes: tuple):
+    return jax.jit(make_session_fn(plan, feature_shapes))
+
+
+def compiled_session(plan: SessionPlan, key: jax.Array,
+                     Xs: Sequence[jnp.ndarray],
+                     classes: jnp.ndarray) -> SessionResult:
+    """Run one ASCII session as a single compiled program (cached per
+    (plan, feature shapes))."""
+    Xs = tuple(jnp.asarray(x) for x in Xs)
+    shapes = tuple(x.shape[1:] for x in Xs)
+    return _session_program(plan, shapes)(key, Xs, classes)
+
+
+# ======================================================================== fleet
+@functools.lru_cache(maxsize=64)
+def _fleet_program(plan: SessionPlan, feature_shapes: tuple,
+                   data_batched: bool, axis_name: str | None):
+    fn = make_session_fn(plan, feature_shapes)
+    data_ax = 0 if data_batched else None
+    vf = jax.vmap(fn, in_axes=(0, data_ax, data_ax))
+    if axis_name is None:
+        return jax.jit(vf)
+
+    from repro.sharding.context import shard_map  # version shim
+    P = jax.sharding.PartitionSpec
+
+    def sharded(keys, Xs, classes):
+        mesh = jax.sharding.Mesh(np.asarray(jax.devices()), (axis_name,))
+        spec_b = P(axis_name)
+        spec_data = spec_b if data_batched else P()
+        in_specs = (spec_b, tuple(spec_data for _ in Xs), spec_data)
+        out_specs = jax.tree.map(lambda _: spec_b,
+                                 jax.eval_shape(vf, keys, Xs, classes))
+        return shard_map(vf, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs)(keys, Xs, classes)
+
+    return jax.jit(sharded)
+
+
+def fleet_run(plan: SessionPlan, keys: jax.Array, Xs: Sequence[jnp.ndarray],
+              classes: jnp.ndarray, *, data_batched: bool = False,
+              shard_axis: str | None = None) -> SessionResult:
+    """Run a whole fleet of sessions as one vmapped compiled program.
+
+    ``keys`` is [S] session PRNG keys.  With ``data_batched=False`` every
+    session sees the same (Xs, classes) cohort (seed fleets, e.g. paper
+    replication sweeps); with True, ``Xs[m]`` is [S, n, p_m] and ``classes``
+    [S, n] — one cohort per session.  ``shard_axis`` optionally shard_maps
+    the session axis across all local devices (the engine mesh's data axis)
+    so fleets scale past one chip; the device count must then divide S
+    evenly.  Returns a SessionResult with a leading session axis.
+    """
+    Xs = tuple(jnp.asarray(x) for x in Xs)
+    shapes = tuple(x.shape[2:] if data_batched else x.shape[1:] for x in Xs)
+    return _fleet_program(plan, shapes, data_batched, shard_axis)(
+        keys, Xs, classes)
+
+
+# ============================================================= host extraction
+def fitted_from_result(plan: SessionPlan, result: SessionResult,
+                       learners: Sequence):
+    """Rebuild the eager engine's result objects from a compiled run: the
+    component list (valid slots in chain order), the round history, and a
+    :class:`repro.core.engine.FittedASCII` — byte-compatible with what
+    ``Protocol.fit`` returns on the eager path."""
+    from repro.core.engine import Component, FittedASCII
+
+    alphas = np.asarray(result.alphas)
+    accs = np.asarray(result.accs)
+    executed = np.asarray(result.executed)
+    valid = np.asarray(result.valid)
+    components, history = [], []
+    for t in range(plan.max_rounds):
+        if not executed[t].any():
+            break                        # the eager loop stopped before t
+        rec = {"round": t, "alphas": [], "accs": []}
+        for j in range(plan.num_agents):
+            if not executed[t, j]:
+                break                    # mid-round alpha<=0 stop
+            rec["alphas"].append(float(alphas[t, j]))
+            rec["accs"].append(float(accs[t, j]))
+            if valid[t, j]:
+                params_tj = jax.tree.map(lambda x, _t=t: x[_t],
+                                         result.params[j])
+                components.append(Component(j, t, float(alphas[t, j]),
+                                            params_tj))
+        history.append(rec)
+    return FittedASCII(components, list(learners), plan.num_classes, history)

@@ -243,6 +243,13 @@ class MeshRingTransport(Transport):
         if not standard:
             return reweight(w, r, alpha)
         from repro.kernels import ops
+        from repro.kernels.ignorance import DEFAULT_BN
+        n = w.shape[0]
+        if n % min(DEFAULT_BN, n) != 0:
+            # score length doesn't tile the kernel grid; host formula
+            # (same fallback the compiled backend's _make_reweight takes,
+            # so eager and compiled stay in lockstep at any n)
+            return reweight(w, r, alpha)
         return ops.ignorance_update(w, r, jnp.asarray(alpha, w.dtype),
                                     interpret=self.interpret)
 
@@ -730,19 +737,40 @@ class Session:
 
 
 # ======================================================================= engine
+BACKENDS = ("eager", "compiled")
+
+
 class Protocol:
     """The ASCII engine: config + scheduler + transport, driving endpoints.
 
     ``start`` opens a fresh session, ``resume`` restores one from a
     checkpoint directory (fast-forwarding the scheduler RNG), and ``fit`` is
     the one-call convenience that runs a session to completion.
+
+    ``backend`` selects how ``fit`` executes the rounds:
+
+      * ``"eager"`` (default) — the host loop above: one dispatch per fit /
+        reward / hop.  Works with every learner, scheduler, and transport,
+        and supports mid-run checkpointing, dropout, and late joins.
+      * ``"compiled"`` — lower the whole run (all agents x all rounds of
+        weighted fit, reward, alpha, ignorance update) into a single
+        ``lax.scan`` program via :mod:`repro.core.compiled`.  Requires
+        sequential scheduling, no CV validation split, and learners with a
+        :class:`~repro.learners.base.LearnerCore` (``functional = True``);
+        reproduces the eager trajectory bit for bit, and metered transports
+        still receive the exact same message ledger (replayed post-run).
+        ``start``/``resume`` (interactive stepping) always run eager.
     """
 
     def __init__(self, cfg: SessionConfig, scheduler: Scheduler | None = None,
-                 transport: Transport | None = None) -> None:
+                 transport: Transport | None = None,
+                 backend: str = "eager") -> None:
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
         self.cfg = cfg
         self.scheduler = scheduler if scheduler is not None else SequentialScheduler()
         self.transport = transport if transport is not None else InProcessTransport()
+        self.backend = backend
 
     def start(self, key: jax.Array, endpoints: Sequence[AgentEndpoint],
               classes: jnp.ndarray,
@@ -774,9 +802,73 @@ class Protocol:
 
     def fit(self, key: jax.Array, endpoints: Sequence[AgentEndpoint],
             classes: jnp.ndarray, validation=None) -> FittedASCII:
+        if self.backend == "compiled":
+            return self._fit_compiled(key, endpoints, classes, validation)
         session = self.start(key, endpoints, classes, validation=validation)
         session.run()
         return session.fitted()
+
+    # ---- compiled backend ---------------------------------------------------
+    def _fit_compiled(self, key, endpoints: Sequence[AgentEndpoint],
+                      classes: jnp.ndarray, validation) -> FittedASCII:
+        """One-program execution of the whole run (core/compiled.py), with
+        the transport ledger replayed afterwards so Fig.-4 metering is
+        byte-identical to the eager path."""
+        from repro.core import compiled
+        cfg = self.cfg
+        if not (isinstance(self.scheduler, SequentialScheduler)
+                and not self.scheduler.stale):
+            raise ValueError(
+                f"backend='compiled' supports sequential scheduling only, "
+                f"got {type(self.scheduler).__name__}")
+        if validation is not None:
+            raise ValueError("backend='compiled' does not support the CV "
+                             "validation stop; use the eager backend")
+        if not all(ep.active for ep in endpoints):
+            raise ValueError("backend='compiled' assumes all endpoints "
+                             "active for the whole run")
+        plan = compiled.plan_for(
+            [ep.learner for ep in endpoints], cfg.num_classes,
+            max_rounds=cfg.max_rounds, upstream=cfg.upstream,
+            stop_on_negative_alpha=cfg.stop_on_negative_alpha,
+            alpha_cap=cfg.alpha_cap, exact_reweight=cfg.exact_reweight,
+            # mirror the eager transport's update implementation: mesh-ring
+            # runs the fused Pallas kernel (with its configured interpret
+            # mode), the host transports the jnp formula — so the pin holds
+            # at any score length (at n <= bn the two are bit-identical
+            # anyway)
+            use_kernel=isinstance(self.transport, MeshRingTransport),
+            kernel_interpret=getattr(self.transport, "interpret", None))
+        result = compiled.compiled_session(
+            plan, key, tuple(ep.X for ep in endpoints), classes)
+        fitted = compiled.fitted_from_result(
+            plan, result, [ep.learner for ep in endpoints])
+        self._replay_traffic(endpoints, classes, result)
+        return fitted
+
+    def _replay_traffic(self, endpoints: Sequence[AgentEndpoint],
+                        classes: jnp.ndarray, result) -> None:
+        """Book the message ledger a sequential eager run would have
+        produced: collation setup, then one IgnoranceMsg + ModelWeightMsg
+        per component-producing hop, in chain order."""
+        self.transport.bind(endpoints)
+        n = int(classes.shape[0])
+        head = endpoints[0].name
+        for ep in endpoints[1:]:
+            self.transport.send(LabelsMsg(head, ep.name, n))
+            self.transport.send(SampleIdsMsg(head, ep.name, n))
+        valid = np.asarray(result.valid)
+        alphas = np.asarray(result.alphas)
+        num = len(endpoints)
+        for t in range(valid.shape[0]):
+            for j in range(num):
+                if not valid[t, j]:
+                    continue
+                dst = endpoints[(j + 1) % num]
+                self.transport.send(IgnoranceMsg(
+                    endpoints[j].name, dst.name, result.w_trace[t, j]))
+                self.transport.send(ModelWeightMsg(
+                    endpoints[j].name, dst.name, float(alphas[t, j])))
 
 
 def variant_setup(variant: str, seed: int = 0) -> tuple[Scheduler, bool]:

@@ -20,15 +20,15 @@ def batched_indices(n: int, batch_size: int, seed: int,
             yield perm[i:i + batch_size]
 
 
-def lm_batches(key, *, vocab_size: int, batch: int, seq_len: int
-               ) -> Iterator[dict]:
+def lm_batches(key, *, vocab_size: int, batch: int, seq_len: int,
+               copy_prob: float = 0.35) -> Iterator[dict]:
     """Infinite synthetic LM batches (see data/synthetic.token_stream)."""
     from repro.data.synthetic import token_stream
     i = 0
     while True:
         sub = jax.random.fold_in(key, i)
         tokens = token_stream(sub, vocab_size=vocab_size, batch=batch,
-                              seq_len=seq_len)
+                              seq_len=seq_len, copy_prob=copy_prob)
         yield {"tokens": tokens,
                "sample_weight": jnp.ones((batch,), jnp.float32)}
         i += 1

@@ -141,12 +141,28 @@ def fashion_surrogate(key, n: int = 4000, side: int = 28) -> Dataset:
 
 
 def token_stream(key, *, vocab_size: int, batch: int, seq_len: int,
-                 num_classes: int | None = None):
-    """Synthetic LM token batches (order-2 Markov-ish) for the end-to-end
-    training driver and smoke tests."""
+                 num_classes: int | None = None, copy_prob: float = 0.35):
+    """Synthetic LM token batches for the end-to-end training driver and
+    smoke tests: a genuine first-order Markov chain — with probability
+    ``copy_prob`` token t is the affine map ``31 * t_{prev} + 7 (mod V)``
+    of the *emitted* predecessor, else uniform noise.
+
+    (The seed version applied the map to a pre-noise base sequence, which
+    makes consecutive *output* tokens independent — ~zero learnable signal
+    at any ``copy_prob``; that is why the tier-1 loss-decrease check could
+    never pass.)  ``copy_prob`` scales the signal: at 1.0 the chain is
+    deterministic and the next-token loss can approach 0."""
     kt, kl = jax.random.split(key)
-    base = jax.random.randint(kt, (batch, seq_len), 0, vocab_size)
-    shifted = jnp.roll(base, 1, axis=-1)
-    tokens = jnp.where(jax.random.bernoulli(kl, 0.35, base.shape),
-                       (shifted * 31 + 7) % vocab_size, base)
+    noise = jax.random.randint(kt, (batch, seq_len), 0, vocab_size)
+    use_map = jax.random.bernoulli(kl, copy_prob, (batch, seq_len))
+
+    def step(prev, xs):
+        nz, um = xs
+        nxt = jnp.where(um, (prev * 31 + 7) % vocab_size, nz)
+        return nxt, nxt
+
+    first = noise[:, 0]
+    _, rest = jax.lax.scan(step, first,
+                           (noise[:, 1:].T, use_map[:, 1:].T))
+    tokens = jnp.concatenate([first[:, None], rest.T], axis=1)
     return tokens.astype(jnp.int32)

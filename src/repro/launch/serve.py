@@ -19,7 +19,10 @@ from repro.models import api
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
-    ap.add_argument("--reduced", action="store_true", default=True)
+    # BooleanOptionalAction so --no-reduced can actually select the full
+    # config (store_true with default=True could never be switched off)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt_len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
@@ -31,21 +34,25 @@ def main():
     cfg = ARCHS[args.arch]
     if args.reduced:
         cfg = cfg.reduced()
-    key = jax.random.key(0)
-    params = api.init_params(key, cfg)
+    # independent streams for params / prompt tokens / frontend inputs —
+    # reusing one key correlates the weights with the test inputs
+    param_key, token_key, frontend_key = jax.random.split(jax.random.key(0), 3)
+    params = api.init_params(param_key, cfg)
 
     b, s = args.batch, args.prompt_len
     total = s + args.gen
-    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    batch = {"tokens": jax.random.randint(token_key, (b, s), 0,
+                                          cfg.vocab_size)}
     off = 0
     if cfg.frontend == "vision":
         batch["patch_emb"] = jax.random.normal(
-            key, (b, cfg.num_frontend_tokens, cfg.d_model),
+            frontend_key, (b, cfg.num_frontend_tokens, cfg.d_model),
             jnp.dtype(cfg.dtype))
         off = cfg.num_frontend_tokens
     if cfg.frontend == "audio":
         batch["frames"] = jax.random.normal(
-            key, (b, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+            frontend_key, (b, cfg.encoder_seq, cfg.d_model),
+            jnp.dtype(cfg.dtype))
 
     s_cache = (api.cache_length(cfg, off + total)
                if args.cache_mode == "ring" else off + total)

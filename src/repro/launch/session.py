@@ -26,6 +26,8 @@ from repro.core.engine import (InProcessTransport, MeshRingTransport,
                                endpoints_for, variant_setup)
 from repro.data.partition import train_test_split, vertical_split
 from repro.data import synthetic
+from repro.learners.logistic import LogisticRegression
+from repro.learners.mlp import MLP
 from repro.learners.tree import DecisionTree
 
 DATASETS = {
@@ -41,6 +43,14 @@ TRANSPORTS = {
     "meshring": MeshRingTransport,
 }
 
+LEARNERS = {
+    # tree is eager-only; logistic/mlp carry a LearnerCore and can ride
+    # --backend compiled
+    "tree": lambda args: DecisionTree(depth=args.depth, num_thresholds=8),
+    "logistic": lambda args: LogisticRegression(steps=args.steps),
+    "mlp": lambda args: MLP(hidden=(32, 16), steps=args.steps),
+}
+
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
@@ -51,7 +61,15 @@ def main():
     ap.add_argument("--rounds", type=int, default=6)
     ap.add_argument("--transport", default="metered",
                     choices=sorted(TRANSPORTS))
-    ap.add_argument("--depth", type=int, default=3)
+    ap.add_argument("--learner", default="tree", choices=sorted(LEARNERS))
+    ap.add_argument("--depth", type=int, default=3,
+                    help="tree depth (tree learner only)")
+    ap.add_argument("--steps", type=int, default=150,
+                    help="optimizer steps (logistic/mlp learners)")
+    ap.add_argument("--backend", default="eager",
+                    choices=["eager", "compiled"],
+                    help="compiled lowers the whole run into one lax.scan "
+                         "program (sequential variants, functional learners)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="",
                     help="checkpoint SessionState here after the run "
@@ -70,19 +88,43 @@ def main():
     Xtr, Xte = [x[tr] for x in Xs], [x[te] for x in Xs]
     ctr, cte = ds.classes[tr], ds.classes[te]
 
+    if args.backend == "compiled":
+        if args.resume or args.stop_after or args.ckpt_dir:
+            ap.error("--backend compiled runs fit-to-completion with no "
+                     "SessionState; checkpointing/pause/resume need the "
+                     "eager backend")
+        if args.learner == "tree":
+            ap.error("--backend compiled needs a functional learner "
+                     "(--learner logistic|mlp); tree is eager-only")
+        if args.variant not in ("ascii", "simple"):
+            ap.error("--backend compiled supports sequential scheduling "
+                     "only (--variant ascii|simple)")
     scheduler, upstream = variant_setup(args.variant, args.seed)
     transport = TRANSPORTS[args.transport]()
     engine = Protocol(SessionConfig(num_classes=ds.num_classes,
                                     max_rounds=args.rounds,
                                     upstream=upstream),
-                      scheduler=scheduler, transport=transport)
+                      scheduler=scheduler, transport=transport,
+                      backend=args.backend)
     endpoints = endpoints_for(
-        [DecisionTree(depth=args.depth, num_thresholds=8) for _ in Xs], Xtr)
+        [LEARNERS[args.learner](args) for _ in Xs], Xtr)
+
+    if args.backend == "compiled":
+        fitted = engine.fit(jax.random.fold_in(key, 1), endpoints, ctr)
+        acc = float(jnp.mean(fitted.predict(Xte) == cte))
+        line = (f"{args.dataset},{args.variant},{args.transport},compiled,"
+                f"rounds={fitted.num_rounds},"
+                f"components={len(fitted.components)},acc={acc:.3f}")
+        if isinstance(transport, MeteredTransport):
+            line += f",bits={transport.total_bits}"
+        print(line)
+        return
 
     # the run config that must match across pause/resume: a different
     # variant/seed/dataset would silently corrupt the resumed trajectory
     run_cfg = {k: getattr(args, k)
-               for k in ("dataset", "n", "variant", "depth", "seed")}
+               for k in ("dataset", "n", "variant", "learner", "depth",
+                         "steps", "seed")}
     cfg_path = os.path.join(args.ckpt_dir or ".", "cli_config.json")
     if args.resume:
         if not args.ckpt_dir:
@@ -90,6 +132,9 @@ def main():
         if os.path.exists(cfg_path):
             with open(cfg_path) as f:
                 saved = json.load(f)
+            # manifests written before the learner/steps flags existed
+            # imply the old fixed tree learner — default, don't reject
+            saved = {"learner": "tree", "steps": 150, **saved}
             if saved != run_cfg:
                 ap.error(f"--resume config mismatch: checkpoint was written "
                          f"with {saved}, this run is {run_cfg}")

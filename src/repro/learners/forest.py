@@ -55,6 +55,10 @@ def _predict_forest(params, X, *, depth, num_classes):
 
 @dataclass(frozen=True)
 class RandomForest(Learner):
+    # Eager-only like DecisionTree: the bootstrap of argmin tree fits has no
+    # LearnerCore; the compiled engine backend rejects it with a clear error.
+    functional = False
+
     num_trees: int = 16
     depth: int = 4
     num_thresholds: int = 16

@@ -1,7 +1,11 @@
 """Weighted multinomial logistic regression, fitted with full-batch AdamW.
 
 Small-data workhorse used by the paper's 20-agent Blob experiment
-(Section VI-C, Fig. 6a).
+(Section VI-C, Fig. 6a).  The fit is implemented once, as a pure
+:class:`~repro.learners.base.LearnerCore` (init / fit / logits over a
+fixed-shape params pytree); the eager ``Learner.fit`` is a thin wrapper so
+the eager engine and the compiled session program share the exact same
+computation.
 """
 from __future__ import annotations
 
@@ -10,7 +14,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.learners.base import Learner
+from repro.learners.base import Learner, LearnerCore, jitted_fresh_fit
 from repro.optim.optimizers import adamw
 
 
@@ -23,16 +27,20 @@ def _weighted_ce(params, X, onehot, w, l2):
 
 
 @dataclass(frozen=True)
-class LogisticRegression(Learner):
+class LogisticCore(LearnerCore):
+    num_classes: int
     steps: int = 300
     lr: float = 0.1
     l2: float = 1e-4
 
-    def fit(self, key, X, classes, w, num_classes):
-        p = X.shape[-1]
-        params = {"w": jnp.zeros((p, num_classes), jnp.float32),
-                  "b": jnp.zeros((num_classes,), jnp.float32)}
-        onehot = jax.nn.one_hot(classes, num_classes)
+    def init(self, key, shapes):
+        del key  # deterministic init (zeros)
+        (p,) = shapes
+        return {"w": jnp.zeros((p, self.num_classes), jnp.float32),
+                "b": jnp.zeros((self.num_classes,), jnp.float32)}
+
+    def fit(self, params, key, X, onehot, w):
+        del key  # full-batch fit is deterministic
         opt = adamw(self.lr)
         opt_state = opt.init(params)
         grad_fn = jax.grad(_weighted_ce)
@@ -44,6 +52,26 @@ class LogisticRegression(Learner):
 
         params, _ = jax.lax.fori_loop(0, self.steps, body, (params, opt_state))
         return params
+
+    def logits(self, params, X):
+        return X @ params["w"] + params["b"]
+
+
+@dataclass(frozen=True)
+class LogisticRegression(Learner):
+    steps: int = 300
+    lr: float = 0.1
+    l2: float = 1e-4
+
+    functional = True
+
+    def core(self, num_classes: int) -> LogisticCore:
+        return LogisticCore(num_classes, self.steps, self.lr, self.l2)
+
+    def fit(self, key, X, classes, w, num_classes):
+        core = self.core(num_classes)
+        onehot = jax.nn.one_hot(classes, num_classes)
+        return jitted_fresh_fit(core, X.shape[1:])(key, X, onehot, w)
 
     def predict(self, params, X):
         return jnp.argmax(X @ params["w"] + params["b"], axis=-1)

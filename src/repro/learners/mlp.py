@@ -1,5 +1,13 @@
 """Weighted 3-layer neural network (the paper's Fashion-MNIST learner,
-Section VI-B) fitted with AdamW on the w-weighted cross-entropy."""
+Section VI-B) fitted with AdamW on the w-weighted cross-entropy.
+
+Implemented as a pure :class:`~repro.learners.base.LearnerCore` shared by
+the eager wrapper and the compiled session program.  Per the core contract,
+``init`` and ``fit`` receive the same per-fit key: ``init`` uses
+``split(key)[1]`` and ``fit`` uses ``split(key)[0]`` for minibatch draws —
+the exact key discipline of the original monolithic fit, so eager and
+compiled trajectories stay bit-identical.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -7,7 +15,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.learners.base import Learner
+from repro.learners.base import Learner, LearnerCore, jitted_fresh_fit
 from repro.optim.optimizers import adamw
 
 
@@ -36,17 +44,20 @@ def _weighted_ce(params, X, onehot, w):
 
 
 @dataclass(frozen=True)
-class MLP(Learner):
-    hidden: tuple[int, ...] = (128, 64)   # 3 layers total with the output
+class MLPCore(LearnerCore):
+    num_classes: int
+    hidden: tuple[int, ...] = (128, 64)
     steps: int = 400
     lr: float = 3e-3
-    batch_size: int | None = None         # None => full batch
+    batch_size: int | None = None
 
-    def fit(self, key, X, classes, w, num_classes):
-        key, init_key = jax.random.split(key)
-        dims = (X.shape[-1],) + tuple(self.hidden) + (num_classes,)
-        params = _init_mlp(init_key, dims)
-        onehot = jax.nn.one_hot(classes, num_classes)
+    def init(self, key, shapes):
+        _, init_key = jax.random.split(key)
+        dims = (shapes[0],) + tuple(self.hidden) + (self.num_classes,)
+        return _init_mlp(init_key, dims)
+
+    def fit(self, params, key, X, onehot, w):
+        key, _ = jax.random.split(key)      # the minibatch key (init took [1])
         opt = adamw(self.lr)
         opt_state = opt.init(params)
         grad_fn = jax.grad(_weighted_ce)
@@ -65,6 +76,28 @@ class MLP(Learner):
 
         params, _ = jax.lax.fori_loop(0, self.steps, body, (params, opt_state))
         return params
+
+    def logits(self, params, X):
+        return _forward(params, X)
+
+
+@dataclass(frozen=True)
+class MLP(Learner):
+    hidden: tuple[int, ...] = (128, 64)   # 3 layers total with the output
+    steps: int = 400
+    lr: float = 3e-3
+    batch_size: int | None = None         # None => full batch
+
+    functional = True
+
+    def core(self, num_classes: int) -> MLPCore:
+        return MLPCore(num_classes, tuple(self.hidden), self.steps, self.lr,
+                       self.batch_size)
+
+    def fit(self, key, X, classes, w, num_classes):
+        core = self.core(num_classes)
+        onehot = jax.nn.one_hot(classes, num_classes)
+        return jitted_fresh_fit(core, X.shape[1:])(key, X, onehot, w)
 
     def predict(self, params, X):
         return jnp.argmax(_forward(params, X), axis=-1)

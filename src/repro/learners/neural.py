@@ -1,16 +1,22 @@
 """Neural-backbone ASCII agent: wraps any assigned architecture (via the
 classifier head) as a Learner, fitting it with the w-weighted cross-entropy
 per Algorithm 2.  Tabular features are linearly projected into d_model and
-treated as a length-1 'sequence'; token inputs pass straight through."""
+treated as a length-1 'sequence'; token inputs pass straight through.
+
+The fit lives in :class:`NeuralCore` (pure LearnerCore contract, compiled-
+backend-ready); the eager Learner delegates to it.  ``init`` consumes
+``split(key, 3)[:2]`` — the same draws as the original monolithic fit —
+and ``fit`` itself is deterministic.
+"""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.learners.base import Learner
+from repro.learners.base import Learner, LearnerCore, jitted_fresh_fit
 from repro.models import classifier
 from repro.models.layers import he_init
 from repro.optim.optimizers import adamw
@@ -39,17 +45,21 @@ def _logits(params, X, cfg):
 
 
 @dataclass(frozen=True)
-class NeuralBackbone(Learner):
+class NeuralCore(LearnerCore):
+    num_classes: int
     cfg: ArchConfig = None
     steps: int = 200
     lr: float = 1e-3
 
-    def fit(self, key, X, classes, w, num_classes):
-        k1, k2, k3 = jax.random.split(key, 3)
-        params = classifier.init_params(k1, self.cfg, num_classes)
-        params["proj"] = he_init(k2, (X.shape[-1], self.cfg.d_model),
+    def init(self, key, shapes):
+        k1, k2, _ = jax.random.split(key, 3)
+        params = classifier.init_params(k1, self.cfg, self.num_classes)
+        params["proj"] = he_init(k2, (shapes[0], self.cfg.d_model),
                                  jnp.float32)
-        onehot = jax.nn.one_hot(classes, num_classes)
+        return params
+
+    def fit(self, params, key, X, onehot, w):
+        del key  # full-batch fit is deterministic
         opt = adamw(self.lr)
         opt_state = opt.init(params)
 
@@ -58,7 +68,6 @@ class NeuralBackbone(Learner):
             ll = jnp.sum(onehot * logits, -1) - jax.nn.logsumexp(logits, -1)
             return -jnp.sum(w * ll) / jnp.maximum(jnp.sum(w), 1e-12)
 
-        @jax.jit
         def step(carry, i):
             p, s = carry
             grads = jax.grad(loss_fn)(p)
@@ -68,6 +77,26 @@ class NeuralBackbone(Learner):
         (params, _), _ = jax.lax.scan(step, (params, opt_state),
                                       jnp.arange(self.steps))
         return params
+
+    def logits(self, params, X):
+        return _logits(params, X, self.cfg)
+
+
+@dataclass(frozen=True)
+class NeuralBackbone(Learner):
+    cfg: ArchConfig = None
+    steps: int = 200
+    lr: float = 1e-3
+
+    functional = True
+
+    def core(self, num_classes: int) -> NeuralCore:
+        return NeuralCore(num_classes, self.cfg, self.steps, self.lr)
+
+    def fit(self, key, X, classes, w, num_classes):
+        core = self.core(num_classes)
+        onehot = jax.nn.one_hot(classes, num_classes)
+        return jitted_fresh_fit(core, X.shape[1:])(key, X, onehot, w)
 
     def predict(self, params, X):
         return jnp.argmax(_logits(params, X, self.cfg), axis=-1)

@@ -59,8 +59,10 @@ def fit_tree(X: jnp.ndarray, classes: jnp.ndarray, w: jnp.ndarray,
         best_q = best % q
         best_thr = thr_cand[best_f, best_q]
         offset = 2 ** level - 1
-        feat = feat.at[offset:offset + width].set(best_f)
-        thr = thr.at[offset:offset + width].set(best_thr)
+        # explicit casts: under JAX_ENABLE_X64 best_f/best_thr promote to
+        # 64-bit and the mixed-dtype scatter is deprecated (future error)
+        feat = feat.at[offset:offset + width].set(best_f.astype(feat.dtype))
+        thr = thr.at[offset:offset + width].set(best_thr.astype(thr.dtype))
         go_right = X[jnp.arange(n), best_f[node_of]] > best_thr[node_of]
         node_of = 2 * node_of + go_right.astype(jnp.int32)
 
@@ -91,6 +93,11 @@ def predict_tree(params, X: jnp.ndarray, *, depth: int) -> jnp.ndarray:
 class DecisionTree(Learner):
     depth: int = 4
     num_thresholds: int = 16
+
+    # Eager-only: the greedy argmin split search is not a fixed-shape
+    # differentiable update, so trees stay on the eager engine backend
+    # (Learner.functional = False) rather than implementing LearnerCore.
+    functional = False
 
     def fit(self, key, X, classes, w, num_classes):
         del key  # deterministic

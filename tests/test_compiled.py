@@ -1,0 +1,217 @@
+"""Compiled-backend pin: `backend="compiled"` (one lax.scan program per
+session, core/compiled.py) must reproduce the eager engine bit for bit
+under sequential scheduling — same components, alphas, params, history,
+predictions, and metered message ledger — and the vmapped fleet must match
+per-session compiled runs exactly."""
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compiled import (SessionPlan, compiled_session, fleet_run,
+                                 plan_for)
+from repro.core.engine import (MeteredTransport, Protocol, RandomScheduler,
+                               SessionConfig, endpoints_for)
+from repro.data.partition import train_test_split, vertical_split
+from repro.data.synthetic import blob_fig3
+from repro.learners.base import Learner, LearnerCore
+from repro.learners.logistic import LogisticRegression
+from repro.learners.mlp import MLP
+from repro.learners.tree import DecisionTree
+
+
+@pytest.fixture(scope="module")
+def blob():
+    key = jax.random.key(0)
+    ds = blob_fig3(key, n=240)
+    tr, te = train_test_split(0, 240)
+    Xs = vertical_split(ds.X, ds.splits)
+    return ([x[tr] for x in Xs], ds.classes[tr],
+            [x[te] for x in Xs], ds.classes[te], ds.num_classes)
+
+
+LEARNERS = {
+    "logistic": lambda: LogisticRegression(steps=60),
+    "mlp": lambda: MLP(hidden=(16,), steps=40),
+}
+
+
+def _run_both(blob, learner_fn, **cfg_kw):
+    Xtr, ctr, Xte, cte, k = blob
+    learners = [learner_fn() for _ in Xtr]
+    cfg = SessionConfig(num_classes=k, max_rounds=3, **cfg_kw)
+    log_e, log_c = MeteredTransport(), MeteredTransport()
+    eager = Protocol(cfg, transport=log_e).fit(
+        jax.random.key(11), endpoints_for(learners, Xtr), ctr)
+    comp = Protocol(cfg, transport=log_c, backend="compiled").fit(
+        jax.random.key(11), endpoints_for(learners, Xtr), ctr)
+    return eager, comp, log_e, log_c, Xte
+
+
+def _assert_identical(eager, comp, Xte):
+    assert [(c.agent, c.round) for c in eager.components] == \
+           [(c.agent, c.round) for c in comp.components]
+    np.testing.assert_array_equal(
+        np.asarray([c.alpha for c in eager.components]),
+        np.asarray([c.alpha for c in comp.components]))
+    for ce, cc in zip(eager.components, comp.components):
+        for le, lc in zip(jax.tree.leaves(ce.params),
+                          jax.tree.leaves(cc.params)):
+            np.testing.assert_array_equal(np.asarray(le), np.asarray(lc))
+    assert eager.history == comp.history
+    np.testing.assert_array_equal(np.asarray(eager.predict(Xte)),
+                                  np.asarray(comp.predict(Xte)))
+
+
+@pytest.mark.parametrize("name", list(LEARNERS))
+def test_compiled_matches_eager(blob, name):
+    eager, comp, log_e, log_c, Xte = _run_both(blob, LEARNERS[name])
+    _assert_identical(eager, comp, Xte)
+    # byte-identical Fig.-4 accounting, entry for entry
+    assert log_e.log.entries == log_c.log.entries
+
+
+def test_compiled_matches_eager_simple_variant(blob):
+    """upstream=False (ASCII-Simple alphas) pins too."""
+    eager, comp, _, _, Xte = _run_both(blob, LEARNERS["logistic"],
+                                       upstream=False)
+    _assert_identical(eager, comp, Xte)
+
+
+def test_compiled_matches_eager_exact_reweight(blob):
+    eager, comp, _, _, Xte = _run_both(blob, LEARNERS["logistic"],
+                                       exact_reweight=True)
+    _assert_identical(eager, comp, Xte)
+
+
+# --------------------------------------------------- early-stop (line 8) pin
+@dataclass(frozen=True)
+class _ConstCore(LearnerCore):
+    """Always predicts class 0 — its weighted accuracy ~1/K drives alpha
+    negative and trips Algorithm 1's line-8 stop."""
+    num_classes: int
+
+    def init(self, key, shapes):
+        return {"z": jnp.zeros(())}
+
+    def fit(self, params, key, X, onehot, w):
+        return params
+
+    def logits(self, params, X):
+        base = jnp.zeros((X.shape[0], self.num_classes)).at[:, 0].set(1.0)
+        return base + params["z"]
+
+
+@dataclass(frozen=True)
+class _ConstLearner(Learner):
+    num_classes: int
+    functional = True
+
+    def core(self, num_classes):
+        return _ConstCore(num_classes)
+
+    def fit(self, key, X, classes, w, num_classes):
+        core = self.core(num_classes)
+        return core.fit(core.init(key, X.shape[1:]), key, X,
+                        jax.nn.one_hot(classes, num_classes), w)
+
+    def predict(self, params, X):
+        return jnp.argmax(_ConstCore(self.num_classes).logits(params, X),
+                          axis=-1)
+
+
+def test_compiled_matches_eager_early_stop(blob):
+    """The alpha<=0 stop (and the masked tail after it) pins bit for bit."""
+    Xtr, ctr, Xte, cte, k = blob
+    learners = [LogisticRegression(steps=60), _ConstLearner(k),
+                LogisticRegression(steps=60)]
+    cfg = SessionConfig(num_classes=k, max_rounds=3)
+    eager = Protocol(cfg).fit(jax.random.key(5),
+                              endpoints_for(learners, Xtr[:3]), ctr)
+    comp = Protocol(cfg, backend="compiled").fit(
+        jax.random.key(5), endpoints_for(learners, Xtr[:3]), ctr)
+    # the constant agent must actually have tripped the stop mid-round
+    assert eager.num_rounds == 1
+    assert len(eager.history[0]["alphas"]) == 2   # head + triggering agent
+    _assert_identical(eager, comp, Xte[:3])
+
+
+# ------------------------------------------------------------------ the fleet
+def test_fleet_matches_single_sessions(blob):
+    Xtr, ctr, _, _, k = blob
+    plan = plan_for([LogisticRegression(steps=40) for _ in Xtr], k,
+                    max_rounds=3)
+    keys = jax.random.split(jax.random.key(0), 4)
+    fleet = fleet_run(plan, keys, Xtr, ctr)
+    assert fleet.alphas.shape == (4, 3, len(Xtr))
+    for s in (0, 3):
+        single = compiled_session(plan, keys[s], Xtr, ctr)
+        np.testing.assert_array_equal(np.asarray(fleet.alphas[s]),
+                                      np.asarray(single.alphas))
+        np.testing.assert_array_equal(np.asarray(fleet.w[s]),
+                                      np.asarray(single.w))
+
+
+def test_fleet_data_batched(blob):
+    """Per-cohort fleets: each session gets its own (Xs, classes)."""
+    Xtr, ctr, _, _, k = blob
+    S = 3
+    Xs_b = [jnp.stack([x + 0.01 * s for s in range(S)]) for x in Xtr]
+    classes_b = jnp.stack([ctr] * S)
+    plan = plan_for([LogisticRegression(steps=30) for _ in Xtr], k,
+                    max_rounds=2)
+    fleet = fleet_run(plan, jax.random.split(jax.random.key(1), S),
+                      Xs_b, classes_b, data_batched=True)
+    assert fleet.alphas.shape == (S, 2, len(Xtr))
+    assert bool(jnp.all(jnp.isfinite(fleet.alphas)))
+
+
+# ------------------------------------------------------------------ contracts
+@pytest.mark.parametrize("name", list(LEARNERS))
+def test_core_composition_equals_eager_fit(blob, name):
+    """The LearnerCore contract: fit(init(key), key, ...) == Learner.fit."""
+    Xtr, ctr, _, _, k = blob
+    learner = LEARNERS[name]()
+    key = jax.random.key(9)
+    w = jnp.full((ctr.shape[0],), 1.0 / ctr.shape[0])
+    params_eager = learner.fit(key, Xtr[0], ctr, w, k)
+    core = learner.core(k)
+    onehot = jax.nn.one_hot(ctr, k)
+    shapes = Xtr[0].shape[1:]
+    # jit the composition like both engine backends do (op-by-op dispatch
+    # fuses differently at the last ulp)
+    fresh = jax.jit(lambda kk, X, oh, ww:
+                    core.fit(core.init(kk, shapes), kk, X, oh, ww))
+    params_core = fresh(key, Xtr[0], onehot, w)
+    for le, lc in zip(jax.tree.leaves(params_eager),
+                      jax.tree.leaves(params_core)):
+        np.testing.assert_array_equal(np.asarray(le), np.asarray(lc))
+    np.testing.assert_array_equal(
+        np.asarray(learner.predict(params_eager, Xtr[0])),
+        np.asarray(core.predict(params_core, Xtr[0])))
+
+
+def test_compiled_rejects_eager_only_learners(blob):
+    Xtr, ctr, _, _, k = blob
+    cfg = SessionConfig(num_classes=k, max_rounds=2)
+    eng = Protocol(cfg, backend="compiled")
+    eps = endpoints_for([DecisionTree(depth=2) for _ in Xtr], Xtr)
+    with pytest.raises(ValueError, match="LearnerCore"):
+        eng.fit(jax.random.key(0), eps, ctr)
+
+
+def test_compiled_rejects_nonsequential_scheduler(blob):
+    Xtr, ctr, _, _, k = blob
+    cfg = SessionConfig(num_classes=k, max_rounds=2)
+    eng = Protocol(cfg, scheduler=RandomScheduler(0), backend="compiled")
+    eps = endpoints_for([LogisticRegression(steps=10) for _ in Xtr], Xtr)
+    with pytest.raises(ValueError, match="sequential"):
+        eng.fit(jax.random.key(0), eps, ctr)
+
+
+def test_unknown_backend_rejected(blob):
+    _, _, _, _, k = blob
+    with pytest.raises(ValueError, match="backend"):
+        Protocol(SessionConfig(num_classes=k), backend="turbo")

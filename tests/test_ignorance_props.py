@@ -1,0 +1,112 @@
+"""Property tests (hypothesis): the three implementations of the eqs.
+(10)/(12) interchange update agree across dtypes, shapes, and edge cases —
+the pure-jnp surrogate (`scores.ignorance_update`), the beyond-paper exact
+exponential-loss reweight (`scores.ignorance_update_exact`, equal to the
+surrogate at the rescaled alpha' = alpha * K/(K-1)^2), and the fused Pallas
+kernel (`kernels.ignorance.ignorance_update_unnormalized`)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scores
+from repro.kernels import ops
+from repro.kernels.ignorance import ignorance_update_unnormalized
+
+# n values exercise: sub-tile, one exact tile, multi-tile (bn = 1024)
+SHAPES = st.sampled_from([4, 64, 257, 1024, 2048])
+DTYPES = st.sampled_from([jnp.float32, jnp.bfloat16])
+ALPHAS = st.floats(0.0, 8.0)
+
+
+def _wr(n, dtype, seed):
+    key = jax.random.key(seed)
+    w = jax.random.dirichlet(key, jnp.ones(n)).astype(dtype)
+    r = (jax.random.uniform(jax.random.fold_in(key, 1), (n,)) > 0.4
+         ).astype(dtype)
+    return w, r
+
+
+@given(n=SHAPES, alpha=ALPHAS, dtype=DTYPES, k=st.integers(2, 10))
+@settings(max_examples=25, deadline=None)
+def test_exact_reweight_is_rescaled_surrogate(n, alpha, dtype, k):
+    """After normalization the exact exponential-loss reweight equals the
+    SAMME-style surrogate at alpha' = alpha * K/(K-1)^2 (the per-round
+    constant exp(-alpha/(K-1)) cancels)."""
+    w, r = _wr(n, dtype, n + k)
+    a = jnp.asarray(alpha, jnp.float32)
+    exact = scores.ignorance_update_exact(w, r, a, k)
+    rescaled = scores.ignorance_update(w, r, a * k / (k - 1) ** 2)
+    tol = 1e-5 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(exact, np.float32),
+                               np.asarray(rescaled, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@given(n=SHAPES, alpha=ALPHAS, dtype=DTYPES)
+@settings(max_examples=25, deadline=None)
+def test_kernel_matches_host_formula(n, alpha, dtype):
+    """The fused Pallas kernel (unnormalized + per-tile partial sums) equals
+    the host formula for every tiling regime and input dtype."""
+    w, r = _wr(n, dtype, n + 1)
+    a = jnp.asarray(alpha, jnp.float32)
+    host = scores.ignorance_update(w.astype(jnp.float32),
+                                   r.astype(jnp.float32), a)
+    fused = ops.ignorance_update(w, r, a)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(host),
+                               rtol=1e-6, atol=1e-8)
+    # and the raw kernel output: w * exp(alpha (1 - r)), tile sums
+    w_new, psums = ignorance_update_unnormalized(w, r, a, interpret=True)
+    ref = np.asarray(w, np.float32) * np.exp(
+        float(a) * (1.0 - np.asarray(r, np.float32)))
+    np.testing.assert_allclose(np.asarray(w_new), ref, rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(float(jnp.sum(psums)), ref.sum(), rtol=1e-5)
+
+
+@given(n=SHAPES, dtype=DTYPES)
+@settings(max_examples=10, deadline=None)
+def test_alpha_zero_only_renormalizes(n, dtype):
+    """alpha -> 0: no reweighting, every implementation returns w/sum(w)."""
+    w, r = _wr(n, dtype, n + 2)
+    a = jnp.asarray(0.0, jnp.float32)
+    expected = np.asarray(w, np.float32)
+    expected = expected / expected.sum()
+    for out in (scores.ignorance_update(w.astype(jnp.float32), r, a),
+                scores.ignorance_update_exact(w.astype(jnp.float32), r, a, 3),
+                ops.ignorance_update(w, r, a)):
+        np.testing.assert_allclose(np.asarray(out, np.float32), expected,
+                                   rtol=1e-6, atol=1e-8)
+
+
+@given(n=SHAPES, alpha=ALPHAS, dtype=DTYPES)
+@settings(max_examples=10, deadline=None)
+def test_all_correct_reward_only_renormalizes(n, alpha, dtype):
+    """r = 1 everywhere (the alpha -> +inf degeneracy the alpha_cap guards):
+    the surrogate exp(alpha*(1-r)) is identically 1, so the update reduces
+    to renormalization for ANY alpha — on every implementation."""
+    w, _ = _wr(n, dtype, n + 3)
+    r = jnp.ones((n,), jnp.float32)
+    a = jnp.asarray(alpha, jnp.float32)
+    expected = np.asarray(w, np.float32)
+    expected = expected / expected.sum()
+    for out in (scores.ignorance_update(w.astype(jnp.float32), r, a),
+                ops.ignorance_update(w, r, a)):
+        np.testing.assert_allclose(np.asarray(out, np.float32), expected,
+                                   rtol=1e-6, atol=1e-8)
+    # exact reweight multiplies every sample by the same exp(-alpha/(K-1)):
+    # cancels under normalization too
+    out = scores.ignorance_update_exact(w.astype(jnp.float32), r, a, 4)
+    np.testing.assert_allclose(np.asarray(out, np.float32), expected,
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_update_preserves_probability_simplex():
+    """Outputs are nonnegative and sum to 1 (the 'ignorance' semantics)."""
+    w, r = _wr(1024, jnp.float32, 9)
+    for alpha in (0.0, 0.5, 4.0, 20.0):
+        out = ops.ignorance_update(w, r, jnp.asarray(alpha))
+        assert float(jnp.min(out)) >= 0.0
+        np.testing.assert_allclose(float(jnp.sum(out)), 1.0, rtol=1e-5)

@@ -30,12 +30,14 @@ def test_transmission_cost_advantage(key):
     assert raw / log.total_bits > 3.0         # paper reports ~10x here
 
 
-@pytest.mark.xfail(reason="pre-existing at seed: the synthetic Markov LM "
-                   "task carries ~1 nat of signal but needs far more than "
-                   "12 steps for a visible dip (loss still ~ln(128) after "
-                   "60 steps)", strict=False)
 def test_lm_driver_loss_decreases(key):
-    """The end-to-end WST/LM trainer actually learns (few steps, tiny)."""
+    """The end-to-end WST/LM trainer actually learns (few steps, tiny).
+
+    Un-xfailed: the seed's token_stream had no next-token signal (the
+    Markov map was applied to a pre-noise base sequence, so consecutive
+    emitted tokens were independent).  With the fixed first-order chain at
+    copy_prob=0.9 the loss drops several nats in ~24 steps — deterministic
+    data + deterministic trainer, so the margin is structural, not luck."""
     from repro.configs.base import ArchConfig
     from repro.data.pipeline import lm_batches
     from repro.optim.optimizers import adamw
@@ -43,10 +45,12 @@ def test_lm_driver_loss_decreases(key):
     cfg = ArchConfig(name="tiny", arch_type="dense", num_layers=2,
                      d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
                      d_ff=128, vocab_size=128, dtype="float32")
-    trainer = Trainer(cfg, adamw(3e-3), TrainerConfig(steps=12, log_every=4))
-    data = lm_batches(key, vocab_size=128, batch=4, seq_len=32)
+    trainer = Trainer(cfg, adamw(1e-2), TrainerConfig(steps=24, log_every=8))
+    data = lm_batches(key, vocab_size=128, batch=8, seq_len=64,
+                      copy_prob=0.9)
     _, _, history = trainer.run(key, data)
-    assert history[-1]["loss"] < history[0]["loss"]
+    # a real dip, not jitter: at least 20% off the from-scratch loss
+    assert history[-1]["loss"] < 0.8 * history[0]["loss"], history
 
 
 def test_checkpointed_training_resumes(tmp_path, key):
