@@ -2,22 +2,32 @@
 (oracle), measured in bits at 90%-of-oracle test accuracy.
 
 (a) Gaussian Blob with 195 redundant features, 2 agents x 100 features,
-    random forests;  (b) Fashion(-surrogate) half-images, 3-layer NNs."""
+    random forests;  (b) Fashion(-surrogate) half-images, 3-layer NNs.
+
+Beyond the paper, :func:`frontier` extends Fig. 4 from *counting* bits to
+*reducing* them: the accuracy-vs-bits frontier of the wire-format subsystem
+(repro.comm) on a synthetic two-agent benchmark — every codec, plus DP and
+budget points — emitted as ``BENCH_comm.json``."""
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import acc, split_dataset
+from repro.comm import (BudgetSpec, BudgetedTransport, GaussianMechanism,
+                        make_codec)
 from repro.core.engine import (MeteredTransport, Protocol, SessionConfig,
                                endpoints_for)
 from repro.core.protocol import ASCIIConfig, fit_single_agent_adaboost
 from repro.core.transport import oracle_bits
 from repro.data import synthetic
+from repro.data.synthetic import gaussian_blobs
 from repro.learners.forest import RandomForest
+from repro.learners.logistic import LogisticRegression
 from repro.learners.mlp import MLP
 
 
@@ -77,10 +87,115 @@ def run(quick: bool = True) -> list[dict]:
     return rows
 
 
+# ===================================================== accuracy-vs-bits frontier
+def _two_agent_cohort(*, n: int, num_classes: int = 8, feats: int = 8,
+                      cluster_std: float = 3.2):
+    """The synthetic two-agent benchmark behind the codec frontier: an
+    8-class Gaussian blob split vertically into two 8-feature slices,
+    hard enough (cluster_std 3.2) that the wire actually matters."""
+    X, classes = gaussian_blobs(jax.random.key(3), n=n,
+                                num_features=2 * feats,
+                                num_classes=num_classes,
+                                cluster_std=cluster_std)
+    cut = int(0.7 * n)
+    Xs = [X[:, :feats], X[:, feats:]]
+    return ([x[:cut] for x in Xs], classes[:cut],
+            [x[cut:] for x in Xs], classes[cut:], num_classes)
+
+
+def _frontier_point(name, transport, Xtr, ctr, Xte, cte, k, *, rounds,
+                    steps, backend="compiled"):
+    fitted = Protocol(
+        SessionConfig(num_classes=k, max_rounds=rounds),
+        transport=transport, backend=backend).fit(
+        jax.random.key(2),
+        endpoints_for([LogisticRegression(steps=steps) for _ in Xtr], Xtr),
+        ctr)
+    kinds = transport.bits_by_kind()
+    row = {
+        "point": name,
+        "acc": acc(fitted.predict(Xte), cte),
+        "interchange_bits": (kinds.get("ignorance", 0)
+                             + kinds.get("model_weight", 0)),
+        "total_bits": transport.total_bits,
+        "bits_by_kind": kinds,
+        "rounds": fitted.num_rounds,
+    }
+    if transport.privacy is not None:
+        row["dp"] = transport.accountant.report(transport.privacy)
+    if hasattr(transport, "budget"):
+        row["skipped_hops"] = len(transport.skipped)
+        row["exhausted"] = transport.exhausted
+    return row
+
+
+def frontier(quick: bool = True, smoke: bool = False,
+             out: str | None = "BENCH_comm.json") -> dict:
+    """Accuracy vs encoded interchange bits across wire codecs, plus DP and
+    budget points.  Deterministic (fixed keys), so the derived headline —
+    int8 cutting interchange bits >= 3x vs fp32 at <= 1 point accuracy
+    loss — is asserted by the CI benchmark-smoke job, not eyeballed."""
+    if smoke:
+        n, rounds, steps = 200, 4, 30
+    elif quick:
+        n, rounds, steps = 600, 10, 100
+    else:
+        n, rounds, steps = 2000, 12, 150
+    Xtr, ctr, Xte, cte, k = _two_agent_cohort(n=n)
+    kw = dict(rounds=rounds, steps=steps)
+    rows = [_frontier_point("fp32", MeteredTransport(), Xtr, ctr, Xte, cte,
+                            k, **kw)]
+    for name in ("fp16", "int8", "int4", "topk"):
+        rows.append(_frontier_point(
+            name, MeteredTransport(codec=make_codec(name)),
+            Xtr, ctr, Xte, cte, k, **kw))
+    for eps in (5.0, 1.0):
+        rows.append(_frontier_point(
+            f"int8+dp{eps:g}",
+            MeteredTransport(codec=make_codec("int8"),
+                             privacy=GaussianMechanism(epsilon=eps)),
+            Xtr, ctr, Xte, cte, k, **kw))
+    # a budget point: enough for setup + roughly half the fp32 hops, so the
+    # ladder degrades and the tail defers/skips
+    budget_bits = rows[0]["total_bits"] // 2
+    rows.append(_frontier_point(
+        "budget50pct", BudgetedTransport(BudgetSpec(session_bits=budget_bits)),
+        Xtr, ctr, Xte, cte, k, **kw))
+    base = next(r for r in rows if r["point"] == "fp32")
+    for r in rows:
+        r["bits_ratio_vs_fp32"] = (base["interchange_bits"]
+                                   / max(r["interchange_bits"], 1))
+        r["acc_drop_vs_fp32"] = base["acc"] - r["acc"]
+    result = {"config": {"n": n, "rounds": rounds, "steps": steps,
+                         "agents": 2, "num_classes": k,
+                         "learner": "logistic", "backend": "compiled"},
+              "rows": rows}
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=2)
+    return result
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--frontier", action="store_true",
+                    help="run the codec accuracy-vs-bits frontier instead "
+                         "of the paper Fig. 4 oracle comparison")
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy sizes (CI benchmark-smoke job)")
+    ap.add_argument("--out", default="BENCH_comm.json",
+                    help="frontier JSON path")
     args = ap.parse_args()
+    if args.frontier or args.smoke:
+        res = frontier(quick=not args.full, smoke=args.smoke, out=args.out)
+        for r in res["rows"]:
+            print(f"comm_{r['point']},acc={r['acc']:.4f},"
+                  f"interchange_bits={r['interchange_bits']},"
+                  f"ratio_vs_fp32={r['bits_ratio_vs_fp32']:.2f}x,"
+                  f"acc_drop={r['acc_drop_vs_fp32']:+.4f}")
+        print(f"(written to {args.out})")
+        return
     for r in run(quick=not args.full):
         print(f"{r['dataset']},oracle_acc={r['oracle_acc']:.3f},"
               f"ascii_acc={r['ascii_acc_final']:.3f},"

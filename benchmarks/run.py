@@ -32,6 +32,14 @@ def main() -> None:
         print(f"fig4_{r['dataset']},{0:.0f},cost_ratio={r['cost_ratio']:.1f}x"
               f";ascii_bits={r['ascii_bits']};oracle_bits={r['oracle_bits']}")
 
+    _section("comm frontier (accuracy vs encoded bits across wire codecs)")
+    cf = fig4_transmission.frontier(quick=quick, out="BENCH_comm.json")
+    for r in cf["rows"]:
+        print(f"comm_{r['point']},{0:.0f},acc={r['acc']:.4f};"
+              f"interchange_bits={r['interchange_bits']};"
+              f"ratio_vs_fp32={r['bits_ratio_vs_fp32']:.2f}x")
+    print("comm_frontier,0,written=BENCH_comm.json")
+
     _section("fig6_variants (ASCII vs Simple/Random/Ensemble/Async)")
     from benchmarks import fig6_variants
     for r in fig6_variants.run(reps=3 if args.full else 1,

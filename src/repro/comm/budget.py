@@ -1,0 +1,122 @@
+"""Bit budgets: the byte ledger as an *active* constraint, not accounting.
+
+PR 1 made every message meterable; this module makes the meter enforceable.
+A :class:`BudgetSpec` caps how many bits a session (and optionally each
+directed src->dst link) may spend, and :class:`BudgetedTransport` enforces
+it per hop with a two-stage response:
+
+  1. **degrade** — walk the codec ladder (best-first) and ship the hop with
+     the first codec whose wire cost still fits the remaining budget;
+  2. **defer/skip** — when not even the cheapest codec fits, the hop is
+     dropped: the receiving agent proceeds with its stale ignorance score
+     (the fit and its boosting component still happen — only the score
+     transfer is lost).  A skip caused by the *session* budget marks the
+     transport ``exhausted``, and the engine stops scheduling further
+     rounds (``Session.step`` checks it at round entry) — budget-aware
+     round scheduling.
+
+The same ladder walk runs inside the compiled session scan
+(`core/compiled.py` carries spent-bit counters through the ``lax.scan``),
+so eager and compiled budgeted runs pick identical codecs hop for hop and
+book identical ledgers.
+
+Ladder codecs must be stateless (error-feedback residuals can't migrate
+between codecs mid-run); setup messages (labels/sample IDs) count against
+the session budget, interchange hops against both session and link budgets.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from repro.comm.codecs import Codec, Fp16Codec, Fp32Codec, QuantCodec
+from repro.core.engine import MeteredTransport
+
+#: The scalar ModelWeightMsg that accompanies every shipped hop.
+MODEL_WEIGHT_BITS = 32
+
+DEFAULT_LADDER = (Fp32Codec(), Fp16Codec(), QuantCodec(bits=8),
+                  QuantCodec(bits=4))
+
+
+@dataclass(frozen=True)
+class BudgetSpec:
+    """Bit caps plus the degradation ladder (best codec first).
+
+    ``session_bits`` caps everything the transport books; ``link_bits`` caps
+    each directed (src, dst) interchange link.  Either may be None
+    (uncapped).  Hashable frozen dataclass — a valid jit static argument,
+    so the compiled backend takes it verbatim."""
+    session_bits: int | None = None
+    link_bits: int | None = None
+    ladder: tuple = DEFAULT_LADDER
+
+    def __post_init__(self):
+        if not self.ladder:
+            raise ValueError("budget ladder must hold at least one codec")
+        for c in self.ladder:
+            if not isinstance(c, Codec) or c.stateful:
+                raise ValueError(
+                    f"budget ladder entries must be stateless Codecs, got "
+                    f"{c!r} (error-feedback state cannot migrate between "
+                    f"ladder rungs)")
+        for cap in (self.session_bits, self.link_bits):
+            if cap is not None and cap <= 0:
+                raise ValueError(f"budget caps must be positive, got {cap}")
+
+    def hop_costs(self, n: int) -> tuple:
+        """Per-ladder-rung cost of one hop for a length-n score: the encoded
+        IgnoranceMsg plus the scalar ModelWeightMsg."""
+        return tuple(c.wire_bits(n) + MODEL_WEIGHT_BITS for c in self.ladder)
+
+    def choose(self, n: int, remaining_session: float,
+               remaining_link: float) -> int | None:
+        """First ladder index affordable under both remaining budgets, or
+        None when the hop must be skipped — the single decision rule both
+        engine backends implement."""
+        remaining = min(remaining_session, remaining_link)
+        for i, cost in enumerate(self.hop_costs(n)):
+            if cost <= remaining:
+                return i
+        return None
+
+
+class BudgetedTransport(MeteredTransport):
+    """Byte-metered transport that *enforces* a :class:`BudgetSpec` —
+    degrade down the codec ladder, then defer/skip hops (see module
+    docstring).  ``exhausted`` flips when the session budget can no longer
+    afford even the cheapest rung; the engine stops scheduling rounds."""
+
+    def __init__(self, budget: BudgetSpec, log=None, privacy=None):
+        super().__init__(log=log, codec=budget.ladder[0], privacy=privacy)
+        self.budget = budget
+        self.link_spent: dict = {}      # (src, dst) -> bits
+        self.skipped: list = []         # (src, dst) of dropped hops
+        self.exhausted = False
+        # bits a paused run already spent against the session cap (restored
+        # from SessionState.comm on resume; this process's log starts empty)
+        self.carryover_bits = 0
+
+    def interchange(self, src, dst, w, r, alpha, reweight,
+                    standard=True, *, key=None, codec_state=None):
+        n = int(w.shape[0])
+        costs = self.budget.hop_costs(n)
+        link = (src.name, dst.name)
+        rem_s = (math.inf if self.budget.session_bits is None
+                 else self.budget.session_bits - self.log.total_bits
+                 - self.carryover_bits)
+        rem_l = (math.inf if self.budget.link_bits is None
+                 else self.budget.link_bits - self.link_spent.get(link, 0))
+        idx = self.budget.choose(n, rem_s, rem_l)
+        if idx is None:
+            # defer/skip: the hop is dropped, the receiver keeps its stale
+            # score; a session-budget skip ends round scheduling
+            if rem_s < min(costs):
+                self.exhausted = True
+            self.skipped.append(link)
+            return w, codec_state
+        self.codec = self.budget.ladder[idx]           # degrade precision
+        self.link_spent[link] = self.link_spent.get(link, 0) + costs[idx]
+        return super().interchange(src, dst, w, r, alpha, reweight,
+                                   standard, key=key,
+                                   codec_state=codec_state)

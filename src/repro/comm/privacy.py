@@ -1,0 +1,86 @@
+"""Differentially private ignorance interchange: the Gaussian mechanism on
+outgoing score vectors, with per-agent epsilon accounting.
+
+The ignorance vector w is a per-sample hardness profile — it leaks which of
+the collated samples an agent's model gets wrong, which is exactly the kind
+of per-record signal DP is for (cf. the cost-of-decentralization-under-
+privacy analysis of Jose & Simeone 2021).  Before each hop the sender clips
+its outgoing vector to an L2 ball of radius ``clip`` and adds
+N(0, sigma^2 I) with the standard Gaussian-mechanism calibration
+
+    sigma = clip * sqrt(2 ln(1.25/delta)) / epsilon,
+
+so each release is (epsilon, delta)-DP with respect to a one-sample change
+in the clipped vector.  The noised vector is clamped at zero afterwards
+(post-processing — free under DP) because every downstream formula assumes
+nonnegative ignorance mass.
+
+Accounting is per *agent*: every release an agent makes spends one
+(epsilon, delta) under basic sequential composition, tallied by
+:class:`PrivacyAccountant` on the transport (eager) or replayed from the
+compiled session result (`Protocol._fit_compiled`) — both paths produce the
+same ledger.  Tighter (advanced / RDP) composition is an open item in
+ROADMAP.md.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class GaussianMechanism:
+    """Per-release Gaussian mechanism on a clipped vector.
+
+    Hashable frozen dataclass: a valid jit static argument, so it rides the
+    compiled session scan exactly like a codec."""
+    epsilon: float = 1.0
+    delta: float = 1e-5
+    clip: float = 1.0
+
+    def __post_init__(self):
+        if self.epsilon <= 0 or not (0 < self.delta < 1) or self.clip <= 0:
+            raise ValueError(
+                f"need epsilon > 0, 0 < delta < 1, clip > 0; got "
+                f"({self.epsilon}, {self.delta}, {self.clip})")
+
+    @property
+    def sigma(self) -> float:
+        return self.clip * math.sqrt(2.0 * math.log(1.25 / self.delta)) \
+            / self.epsilon
+
+    def apply(self, x: jnp.ndarray, key) -> jnp.ndarray:
+        """Clip to the L2 ball, add calibrated noise, clamp at zero."""
+        x = x.astype(jnp.float32)
+        norm = jnp.sqrt(jnp.sum(x * x))
+        x = x * jnp.minimum(1.0, self.clip / jnp.maximum(norm, 1e-12))
+        noised = x + self.sigma * jax.random.normal(key, x.shape,
+                                                    jnp.float32)
+        return jnp.maximum(noised, 0.0)
+
+
+@dataclass
+class PrivacyAccountant:
+    """Per-agent (epsilon, delta) tally under basic composition: one
+    (mechanism.epsilon, mechanism.delta) per release of that agent's
+    ignorance vector."""
+    releases: dict = field(default_factory=dict)   # agent name -> count
+
+    def record(self, agent: str) -> None:
+        self.releases[agent] = self.releases.get(agent, 0) + 1
+
+    def spent(self, agent: str, mechanism: GaussianMechanism
+              ) -> tuple[float, float]:
+        """Cumulative (epsilon, delta) spent by ``agent``."""
+        k = self.releases.get(agent, 0)
+        return k * mechanism.epsilon, k * mechanism.delta
+
+    def report(self, mechanism: GaussianMechanism) -> dict:
+        """{agent: {releases, epsilon, delta}} in deterministic name order."""
+        return {name: {"releases": self.releases[name],
+                       "epsilon": self.releases[name] * mechanism.epsilon,
+                       "delta": self.releases[name] * mechanism.delta}
+                for name in sorted(self.releases)}

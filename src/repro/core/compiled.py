@@ -50,7 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import scores
-from repro.kernels.ignorance import DEFAULT_BN
+from repro.kernels.ignorance import tiles_evenly
 
 PyTree = Any
 
@@ -85,10 +85,34 @@ class SessionPlan:
     # MeshRingTransport.interpret so compiled runs execute the same kernel
     # mode the eager transport would.
     kernel_interpret: bool | None = None
+    # The wire channel (repro.comm), all hashable frozen dataclasses:
+    # ``codec`` encodes/decodes every shipped ignorance vector (the scan
+    # carries per-link error-feedback residuals for stateful codecs),
+    # ``privacy`` adds the DP Gaussian mechanism before encoding, and
+    # ``budget`` replaces ``codec`` with its degradation ladder plus
+    # spent-bit counters carried through the scan — the same
+    # degrade-then-skip decision rule the eager BudgetedTransport applies,
+    # so both backends pick identical codecs hop for hop.
+    codec: Any = None
+    privacy: Any = None
+    budget: Any = None
 
     @property
     def num_agents(self) -> int:
         return len(self.cores)
+
+    @property
+    def ladder(self) -> tuple:
+        """The codec rungs the scan must evaluate: the budget ladder, or the
+        single configured codec (None rung = privacy-only channel)."""
+        if self.budget is not None:
+            return self.budget.ladder
+        return (self.codec,)
+
+    @property
+    def has_channel(self) -> bool:
+        return (self.codec is not None or self.privacy is not None
+                or self.budget is not None)
 
 
 class SessionResult(NamedTuple):
@@ -101,6 +125,13 @@ class SessionResult(NamedTuple):
     leading round axis [T, ...]; ``w_trace`` is the post-hop ignorance
     score per slot [T, M, n] (what each IgnoranceMsg carried); ``w`` is the
     final ignorance score.
+
+    Wire-channel bookkeeping (trivial when the plan has no channel):
+    ``sent`` [T, M] marks hops whose score actually crossed the wire
+    (``valid`` minus budget skips), ``codec_idx`` [T, M] the ladder rung it
+    shipped with (-1 = not sent), and ``exhausted`` whether the session bit
+    budget ran dry — together they let ``Protocol._fit_compiled`` replay the
+    exact encoded-bit ledger the eager transport would have booked.
     """
     alphas: jnp.ndarray
     accs: jnp.ndarray
@@ -109,13 +140,17 @@ class SessionResult(NamedTuple):
     params: tuple
     w_trace: jnp.ndarray
     w: jnp.ndarray
+    sent: jnp.ndarray
+    codec_idx: jnp.ndarray
+    exhausted: jnp.ndarray
 
 
 def plan_for(learners: Sequence, num_classes: int, *, max_rounds: int = 20,
              upstream: bool = True, stop_on_negative_alpha: bool = True,
              alpha_cap: float = 20.0, exact_reweight: bool = False,
              use_kernel: bool = True,
-             kernel_interpret: bool | None = None) -> SessionPlan:
+             kernel_interpret: bool | None = None,
+             codec=None, privacy=None, budget=None) -> SessionPlan:
     """Build a SessionPlan from eager Learners (they must all be
     ``functional`` — have a LearnerCore)."""
     cores = []
@@ -127,12 +162,15 @@ def plan_for(learners: Sequence, num_classes: int, *, max_rounds: int = 20,
                 f"(functional=False) — eager-only learners (tree/forest) "
                 f"cannot ride the compiled backend")
         cores.append(core)
+    if budget is not None:
+        codec = None                 # the budget ladder drives codec choice
     return SessionPlan(cores=tuple(cores), num_classes=num_classes,
                        max_rounds=max_rounds, upstream=upstream,
                        stop_on_negative_alpha=stop_on_negative_alpha,
                        alpha_cap=alpha_cap, exact_reweight=exact_reweight,
                        use_kernel=use_kernel,
-                       kernel_interpret=kernel_interpret)
+                       kernel_interpret=kernel_interpret,
+                       codec=codec, privacy=privacy, budget=budget)
 
 
 # ==================================================================== lowering
@@ -143,14 +181,18 @@ def _make_reweight(plan: SessionPlan, n: int):
     if plan.exact_reweight:
         k = plan.num_classes
         return lambda w, r, a: scores.ignorance_update_exact(w, r, a, k)
-    if plan.use_kernel and n % min(DEFAULT_BN, n) == 0:
+    if plan.use_kernel and tiles_evenly(n):
         from repro.kernels import ops
         return lambda w, r, a: ops.ignorance_update(
             w, r, a, interpret=plan.kernel_interpret)
     return scores.ignorance_update
 
 
-def make_session_fn(plan: SessionPlan, feature_shapes: tuple):
+_INT32_MAX = np.iinfo(np.int32).max
+
+
+def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
+                    qmax_arg: bool = False):
     """Lower ``plan`` for per-agent feature shapes into a pure callable
 
         session_fn(key, Xs, classes) -> SessionResult
@@ -158,24 +200,55 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple):
     — a single ``lax.scan`` over interchange rounds, agents unrolled in the
     round body.  The callable is pure and fixed-shape, so it jits, vmaps
     (``fleet_run``) and shards like any other program.
+
+    With a wire channel on the plan the scan additionally carries the
+    per-link codec residuals and (under a budget) the spent-bit counters,
+    reproducing the eager transports' channel hop for hop.  ``qmax_arg``
+    re-parameterizes a QuantCodec plan's clipping level as a *traced*
+    trailing argument ``session_fn(key, Xs, classes, qmax)`` so codec
+    sweeps vmap into one program (:func:`quant_sweep_run`).
     """
     if len(feature_shapes) != plan.num_agents:
         raise ValueError(f"{plan.num_agents} cores but "
                          f"{len(feature_shapes)} feature shapes")
     k = plan.num_classes
     cores = plan.cores
+    codec, privacy, budget = plan.codec, plan.privacy, plan.budget
+    ladder = plan.ladder
+    has_channel = plan.has_channel
+    stateful = codec is not None and codec.stateful
+    if qmax_arg:
+        from repro.comm.codecs import QuantCodec
+        if budget is not None or not isinstance(codec, QuantCodec):
+            raise ValueError("qmax_arg sweeps need a plain QuantCodec plan")
+    if budget is not None:
+        for cap in (budget.session_bits, budget.link_bits):
+            if cap is not None and cap >= _INT32_MAX:
+                raise ValueError(f"budget caps must fit int32 (the scan's "
+                                 f"spent-bit counters), got {cap}")
+    num = plan.num_agents
 
-    def session_fn(key: jax.Array, Xs: tuple, classes: jnp.ndarray
-                   ) -> SessionResult:
+    def session_fn(key: jax.Array, Xs: tuple, classes: jnp.ndarray,
+                   qmax=None) -> SessionResult:
+        from repro.comm.codecs import channel_apply
         classes = classes.astype(jnp.int32)
         n = classes.shape[0]
         onehot = jax.nn.one_hot(classes, k)
         reweight = _make_reweight(plan, n)
         w0 = scores.init_ignorance(n)
         ones = jnp.ones((n,), jnp.float32)
+        if budget is not None:
+            costs = tuple(jnp.asarray(c, jnp.int32)
+                          for c in budget.hop_costs(n))
+            min_cost = min(budget.hop_costs(n))
+            # setup spend priced by the Message classes themselves, so the
+            # scan's counter can never drift from the eager metered ledger
+            from repro.core.engine import LabelsMsg, SampleIdsMsg
+            setup_bits = (num - 1) * (LabelsMsg("", "", n).bits
+                                      + SampleIdsMsg("", "", n).bits)
 
         def round_body(carry, _):
-            w, key, stopped = carry
+            w, key, stopped = carry["w"], carry["key"], carry["stopped"]
             u = ones
             outs = []
             # Agents unrolled: heterogeneous feature widths / cores, but a
@@ -200,14 +273,85 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple):
                 # and never reaches them once stopped.
                 u = jnp.where(valid,
                               scores.upstream_factor_update(u, a, r, k), u)
-                w = jnp.where(valid, reweight(w, r, a), w)
-                stopped = stopped | trigger
-                outs.append((params, a, rbar, executed, valid, w))
-            return (w, key, stopped), tuple(outs)
+                w_upd = reweight(w, r, a)
 
-        init = (w0, key, jnp.zeros((), bool))
-        (w_fin, _, _), ys = jax.lax.scan(round_body, init, None,
-                                         length=plan.max_rounds)
+                if not has_channel:
+                    sent = valid
+                    rung = jnp.where(sent, 0, -1).astype(jnp.int32)
+                    w = jnp.where(valid, w_upd, w)
+                else:
+                    # ---- the wire: budget rung choice, DP noise, codec —
+                    # the same decision rule and traced channel the eager
+                    # transports run (BudgetSpec.choose / channel_apply)
+                    if budget is not None:
+                        rem = jnp.asarray(_INT32_MAX, jnp.int32)
+                        if budget.session_bits is not None:
+                            rem_s = (jnp.asarray(budget.session_bits,
+                                                 jnp.int32) - carry["spent"])
+                            rem = jnp.minimum(rem, rem_s)
+                        if budget.link_bits is not None:
+                            rem = jnp.minimum(
+                                rem, jnp.asarray(budget.link_bits, jnp.int32)
+                                - carry["link"][j])
+                        rung = jnp.asarray(-1, jnp.int32)
+                        for i in reversed(range(len(ladder))):
+                            rung = jnp.where(costs[i] <= rem,
+                                             jnp.asarray(i, jnp.int32), rung)
+                        sendable = rung >= 0
+                    else:
+                        rung = jnp.asarray(0, jnp.int32)
+                        sendable = jnp.ones((), bool)
+                    state_j = carry["resid"][j] if stateful else None
+                    # privacy noise is rung-independent (same key, same
+                    # input): apply it once, then codec-only roundtrips per
+                    # rung — the per-stage key folds inside channel_apply
+                    # depend only on `sub`, so this decomposition is
+                    # bit-identical to the eager fused channel
+                    w_noised, _ = channel_apply(None, privacy, w_upd, sub,
+                                                None)
+                    pairs = [channel_apply(c, None, w_noised, sub, state_j,
+                                           qmax=qmax) for c in ladder]
+                    if len(pairs) == 1:
+                        w_chan = pairs[0][0]
+                    else:
+                        w_chan = jnp.select(
+                            [rung == i for i in range(len(ladder))],
+                            [p[0] for p in pairs], w_upd)
+                    sent = valid & sendable
+                    w = jnp.where(sent, w_chan, w)
+                    if stateful:
+                        carry["resid"] = carry["resid"].at[j].set(
+                            jnp.where(sent, pairs[0][1], state_j))
+                    if budget is not None:
+                        cost = jnp.select(
+                            [rung == i for i in range(len(ladder))],
+                            list(costs), jnp.asarray(0, jnp.int32))
+                        add = jnp.where(sent, cost, 0)
+                        carry["spent"] = carry["spent"] + add
+                        carry["link"] = carry["link"].at[j].add(add)
+                        if budget.session_bits is not None:
+                            carry["exhausted"] = carry["exhausted"] | (
+                                valid & (rem_s < min_cost))
+                    rung = jnp.where(sent, rung, -1)
+                stopped = stopped | trigger
+                outs.append((params, a, rbar, executed, valid, w, sent,
+                             rung))
+            if budget is not None and budget.session_bits is not None:
+                # the eager engine notices exhaustion at the *next* round's
+                # entry: the current round finishes, later ones never start
+                stopped = stopped | carry["exhausted"]
+            carry = dict(carry, w=w, key=key, stopped=stopped)
+            return carry, tuple(outs)
+
+        init = {"w": w0, "key": key, "stopped": jnp.zeros((), bool)}
+        if stateful:
+            init["resid"] = jnp.zeros((num, n), jnp.float32)
+        if budget is not None:
+            init["spent"] = jnp.asarray(setup_bits, jnp.int32)
+            init["link"] = jnp.zeros((num,), jnp.int32)
+            init["exhausted"] = jnp.zeros((), bool)
+        fin, ys = jax.lax.scan(round_body, init, None,
+                               length=plan.max_rounds)
         return SessionResult(
             alphas=jnp.stack([y[1] for y in ys], axis=1),
             accs=jnp.stack([y[2] for y in ys], axis=1),
@@ -215,8 +359,13 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple):
             valid=jnp.stack([y[4] for y in ys], axis=1),
             params=tuple(y[0] for y in ys),
             w_trace=jnp.stack([y[5] for y in ys], axis=1),
-            w=w_fin)
+            w=fin["w"],
+            sent=jnp.stack([y[6] for y in ys], axis=1),
+            codec_idx=jnp.stack([y[7] for y in ys], axis=1),
+            exhausted=fin.get("exhausted", jnp.zeros((), bool)))
 
+    if not qmax_arg:
+        return lambda key, Xs, classes: session_fn(key, Xs, classes)
     return session_fn
 
 
@@ -278,6 +427,33 @@ def fleet_run(plan: SessionPlan, keys: jax.Array, Xs: Sequence[jnp.ndarray],
     shapes = tuple(x.shape[2:] if data_batched else x.shape[1:] for x in Xs)
     return _fleet_program(plan, shapes, data_batched, shard_axis)(
         keys, Xs, classes)
+
+
+# ================================================================= codec sweep
+@functools.lru_cache(maxsize=64)
+def _sweep_program(plan: SessionPlan, feature_shapes: tuple):
+    fn = make_session_fn(plan, feature_shapes, qmax_arg=True)
+    return jax.jit(jax.vmap(fn, in_axes=(0, None, None, 0)))
+
+
+def quant_sweep_run(plan: SessionPlan, keys: jax.Array,
+                    Xs: Sequence[jnp.ndarray], classes: jnp.ndarray,
+                    qmaxes: jnp.ndarray) -> SessionResult:
+    """Sweep quantization levels across a session fleet in ONE XLA program.
+
+    The plan's :class:`~repro.comm.codecs.QuantCodec` clipping level becomes
+    a traced per-session scalar: session s runs with PRNG key ``keys[s]``
+    and integer range [-qmaxes[s], qmaxes[s]] (e.g. ``[127, 31, 7]`` for an
+    int8/int6/int4 frontier — pass identical keys to isolate the codec
+    axis).  This is the codec analogue of :func:`fleet_run`: because codecs
+    are fixed-shape pure functions, the whole accuracy-vs-precision frontier
+    vmaps instead of re-running per config.  Wire bits per session follow
+    from :func:`repro.comm.codecs.quant_bits_per_element`.
+    """
+    Xs = tuple(jnp.asarray(x) for x in Xs)
+    shapes = tuple(x.shape[1:] for x in Xs)
+    return _sweep_program(plan, shapes)(
+        keys, Xs, classes, jnp.asarray(qmaxes, jnp.float32))
 
 
 # ============================================================= host extraction

@@ -72,13 +72,21 @@ class Message:
     """Base class for everything that crosses an agent boundary.
 
     ``num_elements``/``bits_per_element`` expose the wire size so transports
-    can meter without understanding the payload.
+    can meter without understanding the payload; messages that went through
+    a wire codec (repro.comm) carry their *encoded* size in ``wire_bits``
+    instead, and ``bits`` prefers it — the ledger prices what actually
+    crossed the wire, not the decoded payload.
     """
     src: str
     dst: str
 
     kind = "message"
     bits_per_element = 32
+    # plain class attribute, NOT a dataclass field: subclasses that carry an
+    # encoded payload redeclare it as a trailing field; adding it as a field
+    # here would splice it before subclass fields and break positional
+    # construction
+    wire_bits = None
 
     @property
     def num_elements(self) -> int:
@@ -86,13 +94,19 @@ class Message:
 
     @property
     def bits(self) -> int:
+        if self.wire_bits is not None:
+            return self.wire_bits
         return self.num_elements * self.bits_per_element
 
 
 @dataclass(frozen=True)
 class IgnoranceMsg(Message):
-    """The length-n ignorance score shipped on every interchange hop."""
+    """The length-n ignorance score shipped on every interchange hop.
+
+    ``w`` is the *decoded* payload (what the receiver computes with);
+    ``wire_bits`` the encoded size when a codec was active."""
     w: jnp.ndarray = None
+    wire_bits: int | None = None
 
     kind = "ignorance"
 
@@ -160,10 +174,26 @@ class Transport(abc.ABC):
     accounting); ``interchange`` executes one hop of eqs. (10)/(12): update
     the ignorance score with ``src``'s reward and alpha, then deliver it to
     ``dst``.
+
+    Every transport optionally carries a wire channel (repro.comm): a
+    ``codec`` (the outgoing score is encoded, priced at its *encoded* size,
+    and the protocol continues from the decoded array — a genuinely lossy
+    wire) and/or a ``privacy`` Gaussian mechanism (DP noise on the outgoing
+    vector, per-agent epsilon tallied in ``accountant``).
     """
 
-    def __init__(self) -> None:
+    def __init__(self, codec=None, privacy=None) -> None:
         self._endpoints: dict[str, "AgentEndpoint"] = {}
+        self.codec = codec
+        self.privacy = privacy
+        self.accountant = None
+        if privacy is not None:
+            from repro.comm.privacy import PrivacyAccountant
+            self.accountant = PrivacyAccountant()
+
+    @property
+    def has_channel(self) -> bool:
+        return self.codec is not None or self.privacy is not None
 
     def bind(self, endpoints: Sequence["AgentEndpoint"]) -> None:
         self._endpoints = {ep.name: ep for ep in endpoints}
@@ -183,12 +213,34 @@ class Transport(abc.ABC):
 
     def interchange(self, src: "AgentEndpoint", dst: "AgentEndpoint",
                     w: jnp.ndarray, r: jnp.ndarray, alpha,
-                    reweight: Callable, standard: bool = True) -> jnp.ndarray:
-        """One hop: w' = reweight(w, r, alpha), shipped src -> dst."""
+                    reweight: Callable, standard: bool = True, *,
+                    key=None, codec_state=None):
+        """One hop: w' = reweight(w, r, alpha), through the wire channel
+        (DP noise, then codec encode/decode), shipped src -> dst.
+
+        Returns ``(w_received, codec_state)`` — what the receiver decodes
+        (the trajectory continues from it) plus the updated per-link codec
+        state (error-feedback residual; None for stateless codecs).
+        ``key`` is the hop's per-fit subkey; the channel folds its own keys
+        from it, so attaching a channel never shifts the fit PRNG stream.
+        """
         w_next = self._execute_update(w, r, alpha, reweight, standard)
-        self.send(IgnoranceMsg(src.name, dst.name, w_next))
+        wire_bits = None
+        if self.has_channel:
+            from repro.comm.codecs import jitted_channel
+            if (self.codec is not None and self.codec.stateful
+                    and codec_state is None):
+                codec_state = self.codec.init_state(int(w.shape[0]))
+            w_next, codec_state = jitted_channel(self.codec, self.privacy)(
+                w_next, key, codec_state)
+            if self.privacy is not None:
+                self.accountant.record(src.name)
+            if self.codec is not None:
+                wire_bits = self.codec.wire_bits(int(w.shape[0]))
+        self.send(IgnoranceMsg(src.name, dst.name, w_next,
+                               wire_bits=wire_bits))
         self.send(ModelWeightMsg(src.name, dst.name, float(alpha)))
-        return w_next
+        return w_next, codec_state
 
 
 class InProcessTransport(Transport):
@@ -198,15 +250,20 @@ class InProcessTransport(Transport):
 class MeteredTransport(Transport):
     """In-process delivery that books every bit into a
     :class:`~repro.core.transport.TransportLog` — the byte-accounted
-    simulator behind the Fig. 4 transmission-cost benchmark."""
+    simulator behind the Fig. 4 transmission-cost benchmark.  With a codec
+    attached the ledger books *encoded* bits."""
 
-    def __init__(self, log: TransportLog | None = None) -> None:
-        super().__init__()
+    def __init__(self, log: TransportLog | None = None, codec=None,
+                 privacy=None) -> None:
+        super().__init__(codec=codec, privacy=privacy)
         self.log = log if log is not None else TransportLog()
 
     def _on_send(self, msg: Message) -> None:
-        self.log.send(msg.src, msg.dst, msg.kind, msg.num_elements,
-                      msg.bits_per_element)
+        if msg.wire_bits is not None:
+            self.log.send_bits(msg.src, msg.dst, msg.kind, msg.wire_bits)
+        else:
+            self.log.send(msg.src, msg.dst, msg.kind, msg.num_elements,
+                          msg.bits_per_element)
 
     @property
     def total_bits(self) -> int:
@@ -231,8 +288,9 @@ class MeshRingTransport(Transport):
 
     def __init__(self, mesh=None, *, agent_axis: str = "agent",
                  data_axis: str = "data",
-                 interpret: bool | None = None) -> None:
-        super().__init__()
+                 interpret: bool | None = None, codec=None,
+                 privacy=None) -> None:
+        super().__init__(codec=codec, privacy=privacy)
         self.mesh = mesh
         self.agent_axis = agent_axis
         self.data_axis = data_axis
@@ -243,12 +301,11 @@ class MeshRingTransport(Transport):
         if not standard:
             return reweight(w, r, alpha)
         from repro.kernels import ops
-        from repro.kernels.ignorance import DEFAULT_BN
-        n = w.shape[0]
-        if n % min(DEFAULT_BN, n) != 0:
+        from repro.kernels.ignorance import tiles_evenly
+        if not tiles_evenly(w.shape[0]):
             # score length doesn't tile the kernel grid; host formula
-            # (same fallback the compiled backend's _make_reweight takes,
-            # so eager and compiled stay in lockstep at any n)
+            # (same shared predicate the compiled backend's _make_reweight
+            # checks, so eager and compiled stay in lockstep at any n)
             return reweight(w, r, alpha)
         return ops.ignorance_update(w, r, jnp.asarray(alpha, w.dtype),
                                     interpret=self.interpret)
@@ -469,13 +526,23 @@ class SessionState:
     # resume) and the endpoint active flags at checkpoint time
     order_sizes: list[int] = field(default_factory=list)
     active: list[bool] | None = None
+    # per-link wire-codec state (top-k error-feedback residuals, keyed by
+    # sender name) — part of the protocol state, so checkpoint/resume
+    # reproduces lossy-channel trajectories exactly
+    codec_state: dict | None = None
+    # JSON-able transport channel bookkeeping captured at checkpoint time
+    # (budget spent-bits / link spend / exhaustion, DP release counts):
+    # without it a resumed run would restart the bit budget and epsilon
+    # ledger from zero, violating the caps the paused run was under
+    comm: dict | None = None
 
     # ---- (de)serialization --------------------------------------------------
     def to_tree(self) -> tuple[PyTree, dict]:
         """Split into (array tree, JSON-able metadata)."""
         tree = {"w": self.w,
                 "key": jax.random.key_data(self.key),
-                "params": [c.params for c in self.components]}
+                "params": [c.params for c in self.components],
+                "codec_state": self.codec_state}
         meta = {"round": self.round,
                 "stopped": self.stopped,
                 "best_val": self.best_val,
@@ -483,6 +550,7 @@ class SessionState:
                 "history": self.history,
                 "order_sizes": self.order_sizes,
                 "active": self.active,
+                "comm": self.comm,
                 "components": [{"agent": c.agent, "round": c.round,
                                 "alpha": c.alpha} for c in self.components]}
         return tree, meta
@@ -501,7 +569,9 @@ class SessionState:
                    best_val=float(meta["best_val"]),
                    cv_stale=int(meta["cv_stale"]),
                    order_sizes=[int(s) for s in meta.get("order_sizes", [])],
-                   active=meta.get("active"))
+                   active=meta.get("active"),
+                   codec_state=tree.get("codec_state"),
+                   comm=meta.get("comm"))
 
     def save(self, directory: str, step: int | None = None) -> str:
         from repro.train import checkpoint
@@ -563,6 +633,12 @@ class Session:
         self.classes = classes
         self.state = state
         self.validation = validation
+        if scheduler.stale and transport.has_channel:
+            raise ValueError(
+                "wire channels (codec/privacy) are not supported on the "
+                "stale-read async path: its barrier merge is computed "
+                "host-side, so per-hop channel semantics would be fiction; "
+                "use a sequential or random scheduler")
         transport.bind(self.endpoints)
         if _send_setup:
             self._send_setup()
@@ -604,6 +680,11 @@ class Session:
         st, cfg = self.state, self.cfg
         if st.stopped or st.round >= cfg.max_rounds:
             return False
+        if getattr(self.transport, "exhausted", False):
+            # budget-aware scheduling: the session bit budget can no longer
+            # afford even the cheapest codec rung — stop scheduling rounds
+            st.stopped = True
+            return False
         t = st.round
         eps = {ep.agent_id: ep for ep in self.endpoints}
         active = [ep.agent_id for ep in self.endpoints if ep.active]
@@ -640,8 +721,16 @@ class Session:
                 st.components.append(Component(m, t, float(a), params))
                 u = scores.upstream_factor_update(u, a, r, k)
                 dst = eps[order[(j + 1) % len(order)]]
-                st.w = self.transport.interchange(eps[m], dst, st.w, r, a,
-                                                  reweight, standard)
+                link_state = (None if st.codec_state is None
+                              else st.codec_state.get(eps[m].name))
+                st.w, link_state = self.transport.interchange(
+                    eps[m], dst, st.w, r, a, reweight, standard,
+                    key=sub if self.transport.has_channel else None,
+                    codec_state=link_state)
+                if link_state is not None:
+                    if st.codec_state is None:
+                        st.codec_state = {}
+                    st.codec_state[eps[m].name] = link_state
 
         if self.validation is not None:
             Xs_val, c_val = self.validation
@@ -729,10 +818,42 @@ class Session:
         return jnp.argmax(total, axis=-1)
 
     # ---- checkpointing ------------------------------------------------------
+    def _comm_snapshot(self) -> dict | None:
+        """JSON-able channel bookkeeping that must survive pause/resume:
+        budget spend (the cap applies to the whole session, not to one
+        process lifetime) and DP release counts (epsilon composes across
+        the resume boundary)."""
+        t = self.transport
+        snap: dict = {}
+        if t.accountant is not None:
+            snap["releases"] = dict(t.accountant.releases)
+        if hasattr(t, "budget"):
+            snap["ledger_bits"] = (int(t.log.total_bits)
+                                   + int(getattr(t, "carryover_bits", 0)))
+            snap["link_spent"] = [[s, d, int(b)]
+                                  for (s, d), b in t.link_spent.items()]
+            snap["exhausted"] = bool(t.exhausted)
+        return snap or None
+
+    def _comm_restore(self, snap: dict | None) -> None:
+        t = self.transport
+        if not snap:
+            return
+        if snap.get("releases") and t.accountant is not None:
+            t.accountant.releases.update(snap["releases"])
+        if hasattr(t, "budget"):
+            # the resumed transport's log starts empty; the paused run's
+            # spend counts against the session cap via carryover_bits
+            t.carryover_bits = int(snap.get("ledger_bits", 0))
+            t.link_spent = {(s, d): b
+                            for s, d, b in snap.get("link_spent", [])}
+            t.exhausted = bool(snap.get("exhausted", False))
+
     def checkpoint(self, directory: str, step: int | None = None) -> str:
         """Save the live SessionState mid-run (resumable via
         ``Protocol.resume``)."""
         self.state.active = [ep.active for ep in self.endpoints]
+        self.state.comm = self._comm_snapshot()
         return self.state.save(directory, step)
 
 
@@ -796,9 +917,11 @@ class Protocol:
                     f"got {len(endpoints)}")
             for ep, flag in zip(endpoints, state.active):
                 ep.active = bool(flag)
-        return Session(self.cfg, self.scheduler, self.transport, endpoints,
-                       classes, state, validation=validation,
-                       _send_setup=False)
+        session = Session(self.cfg, self.scheduler, self.transport, endpoints,
+                          classes, state, validation=validation,
+                          _send_setup=False)
+        session._comm_restore(state.comm)
+        return session
 
     def fit(self, key: jax.Array, endpoints: Sequence[AgentEndpoint],
             classes: jnp.ndarray, validation=None) -> FittedASCII:
@@ -838,19 +961,27 @@ class Protocol:
             # at any score length (at n <= bn the two are bit-identical
             # anyway)
             use_kernel=isinstance(self.transport, MeshRingTransport),
-            kernel_interpret=getattr(self.transport, "interpret", None))
+            kernel_interpret=getattr(self.transport, "interpret", None),
+            # the wire channel rides the scan: same codec/privacy/budget
+            # objects the eager transport holds, so the traced channel and
+            # the rung-choice rule are shared, not re-implemented
+            codec=self.transport.codec, privacy=self.transport.privacy,
+            budget=getattr(self.transport, "budget", None))
         result = compiled.compiled_session(
             plan, key, tuple(ep.X for ep in endpoints), classes)
         fitted = compiled.fitted_from_result(
             plan, result, [ep.learner for ep in endpoints])
-        self._replay_traffic(endpoints, classes, result)
+        self._replay_traffic(endpoints, classes, result, plan)
         return fitted
 
     def _replay_traffic(self, endpoints: Sequence[AgentEndpoint],
-                        classes: jnp.ndarray, result) -> None:
+                        classes: jnp.ndarray, result, plan=None) -> None:
         """Book the message ledger a sequential eager run would have
         produced: collation setup, then one IgnoranceMsg + ModelWeightMsg
-        per component-producing hop, in chain order."""
+        per component-producing hop, in chain order — at the *encoded* size
+        of whichever codec rung the scan shipped each hop with, skipping
+        budget-dropped hops, and tallying the privacy accountant, so the
+        compiled ledger is byte-identical to the eager one."""
         self.transport.bind(endpoints)
         n = int(classes.shape[0])
         head = endpoints[0].name
@@ -859,16 +990,38 @@ class Protocol:
             self.transport.send(SampleIdsMsg(head, ep.name, n))
         valid = np.asarray(result.valid)
         alphas = np.asarray(result.alphas)
+        sent = np.asarray(result.sent)
+        codec_idx = np.asarray(result.codec_idx)
+        ladder = plan.ladder if plan is not None and plan.has_channel else None
+        budget = plan.budget if plan is not None else None
+        budgeted = budget is not None and hasattr(self.transport,
+                                                  "link_spent")
         num = len(endpoints)
         for t in range(valid.shape[0]):
             for j in range(num):
                 if not valid[t, j]:
                     continue
                 dst = endpoints[(j + 1) % num]
+                link = (endpoints[j].name, dst.name)
+                if not sent[t, j]:
+                    if budgeted:
+                        self.transport.skipped.append(link)
+                    continue
+                codec = ladder[int(codec_idx[t, j])] if ladder else None
+                wire_bits = codec.wire_bits(n) if codec is not None else None
                 self.transport.send(IgnoranceMsg(
-                    endpoints[j].name, dst.name, result.w_trace[t, j]))
+                    endpoints[j].name, dst.name, result.w_trace[t, j],
+                    wire_bits=wire_bits))
                 self.transport.send(ModelWeightMsg(
                     endpoints[j].name, dst.name, float(alphas[t, j])))
+                if self.transport.privacy is not None:
+                    self.transport.accountant.record(endpoints[j].name)
+                if budgeted:
+                    cost = budget.hop_costs(n)[int(codec_idx[t, j])]
+                    self.transport.link_spent[link] = \
+                        self.transport.link_spent.get(link, 0) + cost
+        if budgeted:
+            self.transport.exhausted = bool(result.exhausted)
 
 
 def variant_setup(variant: str, seed: int = 0) -> tuple[Scheduler, bool]:

@@ -25,22 +25,40 @@ class TransportLog:
 
     def send(self, src: str, dst: str, kind: str, num_elements: int,
              bits_per_element: int = 32) -> None:
+        if isinstance(num_elements, bool) or not isinstance(
+                num_elements, (int, np.integer)):
+            raise TypeError(f"num_elements must be an integer, got "
+                            f"{type(num_elements).__name__} ({num_elements!r})")
+        if num_elements < 0:
+            raise ValueError(f"num_elements must be >= 0, got {num_elements}")
+        self.send_bits(src, dst, kind, int(num_elements) * bits_per_element)
+
+    def send_bits(self, src: str, dst: str, kind: str, bits: int) -> None:
+        """Book an exact encoded size (codec wire formats — int8 values plus
+        fp32 tile scales, top-k pairs — aren't a clean elements x width)."""
+        if isinstance(bits, bool) or not isinstance(bits, (int, np.integer)):
+            raise TypeError(f"bits must be an integer, got "
+                            f"{type(bits).__name__} ({bits!r})")
+        if bits < 0:
+            raise ValueError(f"bits must be >= 0, got {bits}")
         self.entries.append({"src": src, "dst": dst, "kind": kind,
-                             "bits": int(num_elements) * bits_per_element})
+                             "bits": int(bits)})
 
     def send_array(self, src: str, dst: str, kind: str, arr) -> None:
         arr = np.asarray(arr)
-        self.send(src, dst, kind, arr.size, arr.dtype.itemsize * 8)
+        self.send(src, dst, kind, int(arr.size), arr.dtype.itemsize * 8)
 
     @property
     def total_bits(self) -> int:
         return sum(e["bits"] for e in self.entries)
 
     def bits_by_kind(self) -> dict:
+        """Per-kind totals with deterministically (name-) ordered keys, so
+        serialized benchmark JSON diffs stably across runs."""
         out: dict = {}
         for e in self.entries:
             out[e["kind"]] = out.get(e["kind"], 0) + e["bits"]
-        return out
+        return dict(sorted(out.items()))
 
 
 def oracle_bits(n: int, p_remote: int, bits_per_element: int = 32) -> int:

@@ -18,6 +18,13 @@ from jax.experimental import pallas as pl
 DEFAULT_BN = 1024
 
 
+def tiles_evenly(n: int, bn: int = DEFAULT_BN) -> bool:
+    """Whether a length-n score tiles the kernel grid — the single
+    eligibility predicate shared by the eager MeshRingTransport and the
+    compiled backend's reweight choice, so the two can never drift."""
+    return n % min(bn, n) == 0
+
+
 def _kernel(alpha_ref, w_ref, r_ref, out_ref, psum_ref):
     alpha = alpha_ref[0]
     w_new = w_ref[...] * jnp.exp(alpha * (1.0 - r_ref[...]))

@@ -70,6 +70,15 @@ def ignorance_update(w, r, alpha, *, axis_name: str | None = None,
     return w_new / jnp.maximum(total, 1e-12)
 
 
+def quantize_dequant(x, u, qmax, *, bn: int = 1024,
+                     interpret: bool | None = None):
+    """Fused per-tile quantize-dequant for wire codecs (repro.comm.codecs):
+    returns (dequantized [n], int8 wire values [n], per-tile scales)."""
+    interp = _default_interpret() if interpret is None else interpret
+    from repro.kernels import quantize as _q
+    return _q.quantize_dequant_tiles(x, u, qmax, bn=bn, interpret=interp)
+
+
 def flash_decode(q, k, v, pos, *, k_scale=None, v_scale=None, window=None,
                  interpret: bool | None = None):
     """Single-token flash attention vs a long (optionally int8) KV cache."""

@@ -1,0 +1,83 @@
+"""Fused quantize-dequant for wire codecs — Pallas TPU kernel.
+
+The comm subsystem (`repro.comm.codecs`) ships ignorance scores as int8/int4
+integers with one fp32 scale per tile.  What the protocol trajectory sees is
+the *dequantized* vector — quantize and dequantize back-to-back — so the two
+halves fuse into one VMEM pass: per-tile absmax, scale, stochastic round,
+clip, and the dequantized product, without materializing the integer wire
+array in HBM first.  The integer values and per-tile scales are emitted too
+(they ARE the wire format, and the byte ledger prices them).
+
+Stochastic rounding takes the uniform draws as an *input* (``u`` in [0, 1),
+``floor(x/scale + u)``) instead of an in-kernel PRNG: the same draws feed the
+host reference (`kernels.ref.quantize_dequant`), which keeps kernel-vs-host
+bit-identical on every backend and keeps the codec a pure function of its
+PRNG key — the property the eager/compiled engine pin rests on.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BN = 1024
+_EPS = 1e-12
+
+
+def tile_for(n: int, bn: int = DEFAULT_BN) -> int:
+    """The tile size actually used for a length-n vector: ``bn`` when it
+    divides evenly, else one global tile (ragged tails would complicate the
+    grid for no win at protocol sizes).  The host reference uses the same
+    rule, so kernel and reference always agree on the scale granularity."""
+    return bn if (n >= bn and n % bn == 0) else n
+
+
+def _kernel(qmax_ref, x_ref, u_ref, xhat_ref, q_ref, scale_ref):
+    qmax = qmax_ref[0]
+    x = x_ref[...]
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), _EPS) / qmax
+    q = jnp.clip(jnp.floor(x / scale + u_ref[...]), -qmax, qmax)
+    xhat_ref[...] = q * scale
+    q_ref[...] = q.astype(jnp.int8)
+    scale_ref[0] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def quantize_dequant_tiles(x: jnp.ndarray, u: jnp.ndarray,
+                           qmax: jnp.ndarray, *, bn: int = DEFAULT_BN,
+                           interpret: bool = False):
+    """Per-tile symmetric quantization of a length-n vector.
+
+    Returns ``(xhat [n] f32, q [n] int8, scales [n/bn] f32)`` where
+    ``xhat = q * scale`` and ``q = clip(floor(x/scale + u), -qmax, qmax)``
+    with ``scale = max(|x_tile|)/qmax``.  ``u`` in [0, 1) selects the
+    rounding mode: uniform draws give unbiased stochastic rounding, a
+    constant 0.5 gives round-half-up.  ``qmax`` may be a traced scalar
+    (e.g. 127 for int8, 7 for int4) so codec sweeps can vmap over it.
+    """
+    n = x.shape[0]
+    bn = tile_for(n, bn)
+    nt = n // bn
+    qmax_arr = jnp.broadcast_to(jnp.asarray(qmax, jnp.float32), (1,))
+    return pl.pallas_call(
+        _kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),       # qmax (replicated)
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.int8),
+            jax.ShapeDtypeStruct((nt,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qmax_arr, x.astype(jnp.float32), u.astype(jnp.float32))

@@ -61,6 +61,29 @@ def ignorance_update(w: jnp.ndarray, r: jnp.ndarray,
     return w_new / jnp.maximum(jnp.sum(w_new), 1e-12)
 
 
+def quantize_dequant(x: jnp.ndarray, u: jnp.ndarray, qmax,
+                     bn: int = 1024):
+    """Reference per-tile symmetric quantize-dequant (the wire codec oracle).
+
+    x [n], u [n] in [0,1) (stochastic-rounding draws; 0.5 = round-half-up),
+    qmax scalar (127 for int8, 7 for int4).  Tiles of ``bn`` (one global
+    tile when bn doesn't divide n — ``quantize.tile_for``, the same rule
+    the Pallas kernel applies).  Returns (xhat [n] f32, q [n] int8,
+    scales [nt] f32).
+    """
+    from repro.kernels.quantize import tile_for
+    n = x.shape[0]
+    bn = tile_for(n, bn)
+    nt = n // bn
+    qmax = jnp.asarray(qmax, jnp.float32)
+    xt = x.astype(jnp.float32).reshape(nt, bn)
+    ut = u.astype(jnp.float32).reshape(nt, bn)
+    scale = jnp.maximum(jnp.max(jnp.abs(xt), axis=1), 1e-12) / qmax
+    q = jnp.clip(jnp.floor(xt / scale[:, None] + ut), -qmax, qmax)
+    return ((q * scale[:, None]).reshape(n), q.astype(jnp.int8).reshape(n),
+            scale)
+
+
 def flash_decode(q, k, v, pos, *, k_scale=None, v_scale=None, window=None):
     """Reference single-token attention vs a (possibly int8) cache.
 

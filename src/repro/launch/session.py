@@ -21,6 +21,8 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.comm import (BudgetSpec, BudgetedTransport, GaussianMechanism,
+                        make_codec)
 from repro.core.engine import (InProcessTransport, MeshRingTransport,
                                MeteredTransport, Protocol, SessionConfig,
                                endpoints_for, variant_setup)
@@ -52,6 +54,22 @@ LEARNERS = {
 }
 
 
+def _print_comm(transport):
+    """Wire-channel summary lines (codec ledger, budget state, DP spend)."""
+    if transport.codec is not None:
+        line = f"codec={type(transport.codec).__name__}"
+        if isinstance(transport, MeteredTransport):
+            line += (f",ignorance_bits="
+                     f"{transport.bits_by_kind().get('ignorance', 0)}")
+        print(line)
+    if hasattr(transport, "budget"):
+        print(f"budget: spent={transport.total_bits}b,"
+              f"skipped_hops={len(transport.skipped)},"
+              f"exhausted={transport.exhausted}")
+    if getattr(transport, "privacy", None) is not None:
+        print(f"dp: {json.dumps(transport.accountant.report(transport.privacy))}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--dataset", default="blob3", choices=sorted(DATASETS))
@@ -70,6 +88,21 @@ def main():
                     choices=["eager", "compiled"],
                     help="compiled lowers the whole run into one lax.scan "
                          "program (sequential variants, functional learners)")
+    ap.add_argument("--codec", default="",
+                    choices=["", "fp32", "fp16", "int8", "int4", "topk"],
+                    help="wire codec for outgoing ignorance scores "
+                         "(repro.comm.codecs; the ledger books encoded "
+                         "bits; empty = raw fp32 messages)")
+    ap.add_argument("--byte-budget", type=int, default=0,
+                    help="session byte budget: the transport degrades down "
+                         "the fp32>fp16>int8>int4 codec ladder, then skips "
+                         "hops and stops scheduling rounds (uses the "
+                         "budgeted metered transport; incompatible with an "
+                         "explicit --transport or --codec)")
+    ap.add_argument("--dp-epsilon", type=float, default=0.0,
+                    help="per-release DP epsilon: Gaussian-mechanism noise "
+                         "on every outgoing ignorance vector, per-agent "
+                         "epsilon accounting printed after the run")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="",
                     help="checkpoint SessionState here after the run "
@@ -99,8 +132,27 @@ def main():
         if args.variant not in ("ascii", "simple"):
             ap.error("--backend compiled supports sequential scheduling "
                      "only (--variant ascii|simple)")
+    if args.variant == "async" and (args.codec or args.byte_budget
+                                    or args.dp_epsilon > 0):
+        ap.error("--variant async has no per-hop wire semantics (its "
+                 "barrier merge is host-side); --codec/--byte-budget/"
+                 "--dp-epsilon need a sequential or random variant")
+    if args.byte_budget > 0:
+        if args.codec:
+            ap.error("--byte-budget drives codec choice through its "
+                     "degradation ladder; drop --codec")
+        if args.transport != "metered":
+            ap.error("--byte-budget needs the (budgeted) metered "
+                     "transport; drop --transport")
     scheduler, upstream = variant_setup(args.variant, args.seed)
-    transport = TRANSPORTS[args.transport]()
+    privacy = (GaussianMechanism(epsilon=args.dp_epsilon)
+               if args.dp_epsilon > 0 else None)
+    if args.byte_budget > 0:
+        transport = BudgetedTransport(
+            BudgetSpec(session_bits=args.byte_budget * 8), privacy=privacy)
+    else:
+        codec = make_codec(args.codec) if args.codec else None
+        transport = TRANSPORTS[args.transport](codec=codec, privacy=privacy)
     engine = Protocol(SessionConfig(num_classes=ds.num_classes,
                                     max_rounds=args.rounds,
                                     upstream=upstream),
@@ -118,13 +170,15 @@ def main():
         if isinstance(transport, MeteredTransport):
             line += f",bits={transport.total_bits}"
         print(line)
+        _print_comm(transport)
         return
 
     # the run config that must match across pause/resume: a different
     # variant/seed/dataset would silently corrupt the resumed trajectory
     run_cfg = {k: getattr(args, k)
                for k in ("dataset", "n", "variant", "learner", "depth",
-                         "steps", "seed")}
+                         "steps", "seed", "codec", "byte_budget",
+                         "dp_epsilon")}
     cfg_path = os.path.join(args.ckpt_dir or ".", "cli_config.json")
     if args.resume:
         if not args.ckpt_dir:
@@ -132,9 +186,11 @@ def main():
         if os.path.exists(cfg_path):
             with open(cfg_path) as f:
                 saved = json.load(f)
-            # manifests written before the learner/steps flags existed
-            # imply the old fixed tree learner — default, don't reject
-            saved = {"learner": "tree", "steps": 150, **saved}
+            # manifests written before the learner/steps (PR 2) or comm
+            # (PR 3) flags existed imply the old defaults — fill, don't
+            # reject
+            saved = {"learner": "tree", "steps": 150, "codec": "",
+                     "byte_budget": 0, "dp_epsilon": 0.0, **saved}
             if saved != run_cfg:
                 ap.error(f"--resume config mismatch: checkpoint was written "
                          f"with {saved}, this run is {run_cfg}")
@@ -164,6 +220,7 @@ def main():
     if isinstance(transport, MeteredTransport):
         line += f",bits={transport.total_bits}"
     print(line)
+    _print_comm(transport)
     if paused:
         if args.ckpt_dir:
             print(f"paused after {session.state.round} rounds; rerun with "

@@ -1,0 +1,228 @@
+"""Wire-format subsystem units: codec encode/decode/roundtrip properties
+(hypothesis: quantize kernel vs host reference across dtypes and tilings),
+top-k error feedback, the Gaussian mechanism + accountant, budget specs,
+and the hardened TransportLog."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (BudgetSpec, GaussianMechanism, PrivacyAccountant,
+                        make_codec)
+from repro.comm.budget import MODEL_WEIGHT_BITS
+from repro.comm.codecs import (Fp16Codec, Fp32Codec, QuantCodec, TopKCodec,
+                               quant_bits_per_element)
+from repro.core.transport import TransportLog
+from repro.kernels import ops, ref
+
+
+# ===================================================== quantize kernel vs ref
+def _x(n, dtype, seed):
+    key = jax.random.key(seed)
+    return (jax.random.dirichlet(key, jnp.ones(n)) * 0.5).astype(dtype)
+
+
+def test_kernel_matches_reference_grid():
+    """The fused Pallas quantize-dequant equals the host reference bit for
+    bit at every tiling regime (sub-tile, exact tile, multi-tile), input
+    dtype, and quantization width — no hypothesis dependency needed for the
+    core pin."""
+    for n in (4, 64, 257, 1024, 2048):
+        for dtype in (jnp.float32, jnp.bfloat16):
+            for qmax in (127.0, 7.0):
+                x = _x(n, dtype, n)
+                u = jax.random.uniform(jax.random.key(n + 1), (n,))
+                out_k = ops.quantize_dequant(x, u, qmax)
+                out_r = ref.quantize_dequant(x, u, qmax)
+                for a, b in zip(out_k, out_r):
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+
+
+try:
+    import hypothesis  # noqa: F401
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    SHAPES = st.sampled_from([4, 64, 257, 1024, 2048])
+    DTYPES = st.sampled_from([jnp.float32, jnp.bfloat16])
+    QMAXES = st.sampled_from([127.0, 31.0, 7.0])
+
+    @given(n=SHAPES, dtype=DTYPES, qmax=QMAXES, seed=st.integers(0, 99))
+    @settings(max_examples=25, deadline=None)
+    def test_kernel_matches_reference_prop(n, dtype, qmax, seed):
+        """Property form of the kernel-vs-reference pin, plus the
+        quantization-error bound: |xhat - x| <= one step (stochastic
+        rounding moves at most one level past floor)."""
+        x = _x(n, dtype, seed)
+        u = jax.random.uniform(jax.random.key(seed + 1), (n,))
+        xh_k, q_k, s_k = ops.quantize_dequant(x, u, qmax)
+        xh_r, q_r, s_r = ref.quantize_dequant(x, u, qmax)
+        np.testing.assert_array_equal(np.asarray(xh_k), np.asarray(xh_r))
+        np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+        np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+        step = np.repeat(np.asarray(s_k), n // s_k.shape[0])
+        err = np.abs(np.asarray(xh_k) - np.asarray(x, np.float32))
+        assert (err <= step * (1 + 1e-5)).all()
+
+    @given(n=SHAPES, dtype=DTYPES, bits=st.sampled_from([8, 4]),
+           seed=st.integers(0, 99))
+    @settings(max_examples=25, deadline=None)
+    def test_quant_roundtrip_equals_encode_decode(n, dtype, bits, seed):
+        """QuantCodec.roundtrip (fused kernel) == decode(encode(x)) (host
+        wire halves) bit for bit — the codec contract."""
+        codec = QuantCodec(bits=bits)
+        x = _x(n, dtype, seed).astype(jnp.float32)
+        key = jax.random.key(seed)
+        fused, _ = codec.roundtrip(x, key)
+        wire, _ = codec.encode(x, key)
+        np.testing.assert_array_equal(np.asarray(fused),
+                                      np.asarray(codec.decode(wire)))
+
+    @given(n=SHAPES, seed=st.integers(0, 99),
+           frac=st.sampled_from([0.1, 0.25, 0.5]))
+    @settings(max_examples=25, deadline=None)
+    def test_topk_error_feedback_invariant(n, seed, frac):
+        """decode(wire) + new_residual == x + old_residual exactly: the
+        channel defers mass, never loses it."""
+        codec = TopKCodec(fraction=frac)
+        x = _x(n, jnp.float32, seed)
+        resid = jax.random.normal(jax.random.key(seed + 7), (n,)) * 0.01
+        wire, new_resid = codec.encode(x, state=resid)
+        np.testing.assert_allclose(
+            np.asarray(codec.decode(wire) + new_resid),
+            np.asarray(x + resid), rtol=1e-6, atol=1e-7)
+
+
+def test_stochastic_rounding_unbiased():
+    """E[dequant] over rounding draws approaches x (the reason int8 wires
+    survive many hops where deterministic rounding collapses)."""
+    n, reps = 256, 400
+    x = _x(n, jnp.float32, 0)
+    codec = QuantCodec(bits=8)
+    keys = jax.random.split(jax.random.key(1), reps)
+    outs = jax.vmap(lambda k: codec.roundtrip(x, k)[0])(keys)
+    mean = np.asarray(jnp.mean(outs, axis=0))
+    scale = float(jnp.max(jnp.abs(x))) / codec.qmax
+    np.testing.assert_allclose(mean, np.asarray(x), atol=0.15 * scale)
+
+
+def test_wire_bits_formulas():
+    n = 600
+    assert Fp32Codec().wire_bits(n) == 32 * n
+    assert Fp16Codec().wire_bits(n) == 16 * n
+    assert QuantCodec(bits=8).wire_bits(n) == 8 * n + 32      # one tile
+    assert QuantCodec(bits=4).wire_bits(n) == 4 * n + 32
+    assert QuantCodec(bits=8).wire_bits(2048) == 8 * 2048 + 2 * 32
+    k = TopKCodec(fraction=0.25).k_for(n)
+    assert TopKCodec(fraction=0.25).wire_bits(n) == k * (32 + 10)  # log2(600)
+    assert quant_bits_per_element(127) == 8
+    assert quant_bits_per_element(7) == 4
+
+
+def test_codec_registry():
+    assert isinstance(make_codec("int8"), QuantCodec)
+    assert make_codec("int4").bits == 4
+    assert isinstance(make_codec("topk"), TopKCodec)
+    with pytest.raises(ValueError, match="unknown codec"):
+        make_codec("zstd")
+
+
+def test_fp16_codec_roundtrip_is_half_precision():
+    x = _x(257, jnp.float32, 3)
+    out, _ = Fp16Codec().roundtrip(x)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(x, np.float16).astype(np.float32))
+
+
+# ==================================================================== privacy
+def test_gaussian_mechanism_calibration_and_clip():
+    mech = GaussianMechanism(epsilon=2.0, delta=1e-5, clip=0.5)
+    assert mech.sigma == pytest.approx(
+        0.5 * np.sqrt(2 * np.log(1.25 / 1e-5)) / 2.0)
+    x = jnp.full((64,), 10.0)          # norm 80 >> clip
+    out = mech.apply(x, jax.random.key(0))
+    assert float(jnp.min(out)) >= 0.0  # clamped (post-processing)
+    # determinism per key, fresh noise per key
+    out2 = mech.apply(x, jax.random.key(0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+    out3 = mech.apply(x, jax.random.key(1))
+    assert np.abs(np.asarray(out) - np.asarray(out3)).max() > 0
+
+
+def test_gaussian_mechanism_validation():
+    for bad in (dict(epsilon=0.0), dict(delta=0.0), dict(delta=1.5),
+                dict(clip=-1.0)):
+        with pytest.raises(ValueError):
+            GaussianMechanism(**bad)
+
+
+def test_privacy_accountant_composition():
+    mech = GaussianMechanism(epsilon=0.5, delta=1e-6)
+    acct = PrivacyAccountant()
+    for _ in range(3):
+        acct.record("agent0")
+    acct.record("agent1")
+    assert acct.spent("agent0", mech) == pytest.approx((1.5, 3e-6))
+    assert acct.spent("agent2", mech) == (0.0, 0.0)
+    rep = acct.report(mech)
+    assert list(rep) == ["agent0", "agent1"]          # deterministic order
+    assert rep["agent0"]["releases"] == 3
+
+
+# ===================================================================== budget
+def test_budget_spec_validation():
+    with pytest.raises(ValueError, match="at least one"):
+        BudgetSpec(ladder=())
+    with pytest.raises(ValueError, match="stateless"):
+        BudgetSpec(ladder=(TopKCodec(),))
+    with pytest.raises(ValueError, match="positive"):
+        BudgetSpec(session_bits=0)
+
+
+def test_budget_choose_rule():
+    spec = BudgetSpec(session_bits=10 ** 9)
+    n = 100
+    costs = spec.hop_costs(n)
+    assert costs[0] == 32 * n + MODEL_WEIGHT_BITS
+    assert list(costs) == sorted(costs, reverse=True)   # ladder degrades
+    assert spec.choose(n, float("inf"), float("inf")) == 0
+    # only the cheapest rung affordable
+    assert spec.choose(n, costs[-1], float("inf")) == len(costs) - 1
+    # nothing affordable -> skip
+    assert spec.choose(n, costs[-1] - 1, float("inf")) is None
+    # the link cap binds too
+    assert spec.choose(n, float("inf"), costs[-1]) == len(costs) - 1
+
+
+# =============================================================== TransportLog
+def test_transport_log_rejects_bad_counts():
+    log = TransportLog()
+    with pytest.raises(ValueError, match=">= 0"):
+        log.send("a", "b", "ignorance", -1)
+    with pytest.raises(TypeError, match="integer"):
+        log.send("a", "b", "ignorance", 2.5)
+    with pytest.raises(TypeError, match="integer"):
+        log.send("a", "b", "ignorance", True)
+    with pytest.raises(ValueError, match=">= 0"):
+        log.send_bits("a", "b", "ignorance", -8)
+    with pytest.raises(TypeError, match="integer"):
+        log.send_bits("a", "b", "ignorance", 8.0)
+    assert log.entries == []                  # nothing booked on rejection
+    log.send("a", "b", "ignorance", np.int64(4), 32)   # np ints are fine
+    assert log.total_bits == 128
+
+
+def test_transport_log_bits_by_kind_deterministic_order():
+    log = TransportLog()
+    log.send("a", "b", "score_block", 2)
+    log.send("a", "b", "ignorance", 4)
+    log.send_bits("a", "b", "model_weight", 32)
+    log.send("a", "b", "ignorance", 1)
+    kinds = log.bits_by_kind()
+    assert list(kinds) == sorted(kinds)       # name-ordered, JSON-diff-stable
+    assert kinds["ignorance"] == 5 * 32
+    assert sum(kinds.values()) == log.total_bits
