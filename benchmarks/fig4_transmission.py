@@ -23,7 +23,7 @@ from repro.comm import (BudgetSpec, BudgetedTransport, GaussianMechanism,
 from repro.core.engine import (MeteredTransport, Protocol, SessionConfig,
                                endpoints_for)
 from repro.core.protocol import ASCIIConfig, fit_single_agent_adaboost
-from repro.core.transport import oracle_bits
+from repro.core.transport import oracle_bits, oracle_bits_codec
 from repro.data import synthetic
 from repro.data.synthetic import gaussian_blobs
 from repro.learners.forest import RandomForest
@@ -81,6 +81,12 @@ def run(quick: bool = True) -> list[dict]:
             "rounds_to_90pct": reached,
             "ascii_bits": bits_at_target or log.total_bits + setup_bits,
             "oracle_bits": o_bits,
+            # codec'd-oracle baselines: the raw feature matrix shipped
+            # through the same wire codecs ASCII uses — the tighter
+            # comparison ROADMAP asked for
+            "oracle_bits_by_codec": {
+                c: oracle_bits_codec(n, sum(ds.splits[1:]), make_codec(c))
+                for c in ("fp16", "int8", "int4")},
             "cost_ratio": (o_bits / bits_at_target) if bits_at_target else
                           float("nan"),
         })
@@ -105,18 +111,25 @@ def _two_agent_cohort(*, n: int, num_classes: int = 8, feats: int = 8,
 
 def _frontier_point(name, transport, Xtr, ctr, Xte, cte, k, *, rounds,
                     steps, backend="compiled"):
-    fitted = Protocol(
+    engine = Protocol(
         SessionConfig(num_classes=k, max_rounds=rounds),
-        transport=transport, backend=backend).fit(
+        transport=transport, backend=backend)
+    fitted = engine.fit(
         jax.random.key(2),
         endpoints_for([LogisticRegression(steps=steps) for _ in Xtr], Xtr),
         ctr)
+    train_kinds = transport.bits_by_kind()
+    # serve axis: distributed prediction over the test cohort through the
+    # same transport channel — the O(nK) ScoreBlockMsg traffic, encoded
+    serve_preds = engine.predict_distributed(Xte)
     kinds = transport.bits_by_kind()
     row = {
         "point": name,
         "acc": acc(fitted.predict(Xte), cte),
-        "interchange_bits": (kinds.get("ignorance", 0)
-                             + kinds.get("model_weight", 0)),
+        "interchange_bits": (train_kinds.get("ignorance", 0)
+                             + train_kinds.get("model_weight", 0)),
+        "serve_acc": acc(serve_preds, cte),
+        "serve_bits": kinds.get("score_block", 0),
         "total_bits": transport.total_bits,
         "bits_by_kind": kinds,
         "rounds": fitted.num_rounds,
@@ -130,13 +143,20 @@ def _frontier_point(name, transport, Xtr, ctr, Xte, cte, k, *, rounds,
 
 
 def frontier(quick: bool = True, smoke: bool = False,
-             out: str | None = "BENCH_comm.json") -> dict:
-    """Accuracy vs encoded interchange bits across wire codecs, plus DP and
-    budget points.  Deterministic (fixed keys), so the derived headline —
-    int8 cutting interchange bits >= 3x vs fp32 at <= 1 point accuracy
-    loss — is asserted by the CI benchmark-smoke job, not eyeballed."""
-    if smoke:
-        n, rounds, steps = 200, 4, 30
+             out: str | None = "BENCH_comm.json",
+             sizes: tuple | None = None) -> dict:
+    """Accuracy vs encoded bits across wire codecs — train-bits AND
+    serve-bits axes — plus DP and budget points.  Deterministic (fixed
+    keys), so the derived headlines — int8 cutting interchange bits >= 3x
+    vs fp32 at <= 1 point accuracy loss, and the same invariant on the
+    serve-path ScoreBlockMsg bits — are asserted by the CI benchmark-smoke
+    job, not eyeballed.  ``sizes`` overrides (n, rounds, steps) for tests."""
+    if sizes is not None:
+        n, rounds, steps = sizes
+    elif smoke:
+        # 120 test rows: fine enough acc granularity for the <=1pt serve
+        # invariant (one argmax flip = 0.83pt)
+        n, rounds, steps = 400, 6, 50
     elif quick:
         n, rounds, steps = 600, 10, 100
     else:
@@ -166,9 +186,25 @@ def frontier(quick: bool = True, smoke: bool = False,
         r["bits_ratio_vs_fp32"] = (base["interchange_bits"]
                                    / max(r["interchange_bits"], 1))
         r["acc_drop_vs_fp32"] = base["acc"] - r["acc"]
+        # null, not a huge number, when every serve block was skipped:
+        # head-only fallback ships zero bits — there is no compression
+        # ratio to report
+        r["serve_bits_ratio_vs_fp32"] = (base["serve_bits"]
+                                         / r["serve_bits"]
+                                         if r["serve_bits"] else None)
+        r["serve_acc_drop_vs_fp32"] = base["serve_acc"] - r["serve_acc"]
+    n_te = Xte[0].shape[0]
+    feats_remote = Xte[1].shape[1]
     result = {"config": {"n": n, "rounds": rounds, "steps": steps,
                          "agents": 2, "num_classes": k,
                          "learner": "logistic", "backend": "compiled"},
+              # serve-time oracle: shipping agent B's raw test features,
+              # raw and through each codec — the quantized-oracle baseline
+              # the serve frontier compares against
+              "oracle_serve_bits": {
+                  "fp32": oracle_bits(n_te, feats_remote),
+                  **{c: oracle_bits_codec(n_te, feats_remote, make_codec(c))
+                     for c in ("fp16", "int8", "int4")}},
               "rows": rows}
     if out:
         with open(out, "w") as f:
@@ -190,10 +226,14 @@ def main():
     if args.frontier or args.smoke:
         res = frontier(quick=not args.full, smoke=args.smoke, out=args.out)
         for r in res["rows"]:
+            sr = r["serve_bits_ratio_vs_fp32"]
             print(f"comm_{r['point']},acc={r['acc']:.4f},"
                   f"interchange_bits={r['interchange_bits']},"
                   f"ratio_vs_fp32={r['bits_ratio_vs_fp32']:.2f}x,"
-                  f"acc_drop={r['acc_drop_vs_fp32']:+.4f}")
+                  f"acc_drop={r['acc_drop_vs_fp32']:+.4f},"
+                  f"serve_bits={r['serve_bits']},"
+                  f"serve_ratio={'n/a' if sr is None else f'{sr:.2f}x'},"
+                  f"serve_acc_drop={r['serve_acc_drop_vs_fp32']:+.4f}")
         print(f"(written to {args.out})")
         return
     for r in run(quick=not args.full):

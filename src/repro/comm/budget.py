@@ -69,16 +69,28 @@ class BudgetSpec:
         IgnoranceMsg plus the scalar ModelWeightMsg."""
         return tuple(c.wire_bits(n) + MODEL_WEIGHT_BITS for c in self.ladder)
 
-    def choose(self, n: int, remaining_session: float,
-               remaining_link: float) -> int | None:
+    def serve_costs(self, shape) -> tuple:
+        """Per-ladder-rung cost of one prediction-time ScoreBlockMsg for an
+        [n, K] block — no accompanying ModelWeightMsg on the serve path."""
+        return tuple(c.wire_bits(shape) for c in self.ladder)
+
+    def choose_costs(self, costs, remaining_session: float,
+                     remaining_link: float) -> int | None:
         """First ladder index affordable under both remaining budgets, or
         None when the hop must be skipped — the single decision rule both
-        engine backends implement."""
+        engine backends implement, for training hops and serve blocks
+        alike."""
         remaining = min(remaining_session, remaining_link)
-        for i, cost in enumerate(self.hop_costs(n)):
+        for i, cost in enumerate(costs):
             if cost <= remaining:
                 return i
         return None
+
+    def choose(self, n: int, remaining_session: float,
+               remaining_link: float) -> int | None:
+        """:meth:`choose_costs` over the training-hop cost table."""
+        return self.choose_costs(self.hop_costs(n), remaining_session,
+                                 remaining_link)
 
 
 class BudgetedTransport(MeteredTransport):
@@ -120,3 +132,28 @@ class BudgetedTransport(MeteredTransport):
         return super().interchange(src, dst, w, r, alpha, reweight,
                                    standard, key=key,
                                    codec_state=codec_state)
+
+    def serve_block(self, src, dst, block, *, key=None):
+        """Budgeted serve hop: the same degrade-then-skip ladder walk as
+        :meth:`interchange`, applied to the [n, K] ScoreBlockMsg.  A skipped
+        block is simply not delivered — the head agent predicts without this
+        agent's votes (head-only degradation) and no bits are booked; a
+        session-budget skip flips ``exhausted`` exactly like a training
+        hop."""
+        shape = tuple(block.shape)
+        costs = self.budget.serve_costs(shape)
+        link = (src.name, dst.name)
+        rem_s = (math.inf if self.budget.session_bits is None
+                 else self.budget.session_bits - self.log.total_bits
+                 - self.carryover_bits)
+        rem_l = (math.inf if self.budget.link_bits is None
+                 else self.budget.link_bits - self.link_spent.get(link, 0))
+        idx = self.budget.choose_costs(costs, rem_s, rem_l)
+        if idx is None:
+            if rem_s < min(costs):
+                self.exhausted = True
+            self.skipped.append(link)
+            return None
+        self.codec = self.budget.ladder[idx]           # degrade precision
+        self.link_spent[link] = self.link_spent.get(link, 0) + costs[idx]
+        return super().serve_block(src, dst, block, key=key)

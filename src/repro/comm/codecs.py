@@ -51,23 +51,43 @@ import jax.numpy as jnp
 COMM_FOLD = 0x434F4D        # "COM"
 PRIVACY_FOLD = 0
 CODEC_FOLD = 1
+# serve-path fold tag: prediction-time ScoreBlockMsg channel keys derive as
+# fold_in(fit_key, SERVE_FOLD) then fold_in(., agent_index) — again no PRNG
+# state consumed, so serving never shifts the fit stream, and both engine
+# backends derive identical serve draws.
+SERVE_FOLD = 0x535256       # "SRV"
 
 SCALE_BITS = 32             # one fp32 scale per quantization tile
 
 
+def numel(shape) -> int:
+    """Element count of a wire payload shape: codecs accept either an int n
+    (the PR-3 length-n ignorance vector) or a shape tuple (the [n, K]
+    prediction-time score block)."""
+    if isinstance(shape, (tuple, list)):
+        out = 1
+        for s in shape:
+            out *= int(s)
+        return out
+    return int(shape)
+
+
 @dataclass(frozen=True)
 class Codec(abc.ABC):
-    """A pure encode/decode pair over length-n float arrays."""
+    """A pure encode/decode pair over float arrays: length-n ignorance
+    vectors (training interchange) and [n, K] score blocks (prediction
+    serve traffic) alike — every method is shape-generic."""
 
     #: Codecs with per-link state (error-feedback residuals) return it from
     #: ``init_state``; stateless codecs leave this False and pass None.
     stateful = False
 
     @abc.abstractmethod
-    def wire_bits(self, n: int) -> int:
-        """Encoded size in bits of a length-n vector (static)."""
+    def wire_bits(self, shape) -> int:
+        """Encoded size in bits of a payload (static).  ``shape`` is an int
+        n (length-n vector) or a shape tuple like (n, K)."""
 
-    def init_state(self, n: int):
+    def init_state(self, shape):
         """Fresh per-link codec state (None for stateless codecs)."""
         return None
 
@@ -90,8 +110,8 @@ class Codec(abc.ABC):
 class Fp32Codec(Codec):
     """Passthrough: the PR-1 wire format, 32 bits per element."""
 
-    def wire_bits(self, n: int) -> int:
-        return 32 * n
+    def wire_bits(self, shape) -> int:
+        return 32 * numel(shape)
 
     def encode(self, x, key=None, state=None):
         return x.astype(jnp.float32), state
@@ -104,8 +124,8 @@ class Fp32Codec(Codec):
 class Fp16Codec(Codec):
     """IEEE half precision: 2x cheaper, ~3 decimal digits kept."""
 
-    def wire_bits(self, n: int) -> int:
-        return 16 * n
+    def wire_bits(self, shape) -> int:
+        return 16 * numel(shape)
 
     def encode(self, x, key=None, state=None):
         return x.astype(jnp.float16), state
@@ -133,12 +153,16 @@ class QuantCodec(Codec):
     def qmax(self) -> float:
         return float(2 ** (self.bits - 1) - 1)
 
-    def _tiles(self, n: int) -> int:
-        from repro.kernels.quantize import tile_for
+    def _tiles(self, shape) -> int:
+        from repro.kernels.quantize import rows_for, tile_for
+        if isinstance(shape, (tuple, list)) and len(shape) == 2:
+            n, k = int(shape[0]), int(shape[1])
+            return n // rows_for(n, k, self.bn)
+        n = numel(shape)
         return n // tile_for(n, self.bn)
 
-    def wire_bits(self, n: int) -> int:
-        return self.bits * n + SCALE_BITS * self._tiles(n)
+    def wire_bits(self, shape) -> int:
+        return self.bits * numel(shape) + SCALE_BITS * self._tiles(shape)
 
     def _u(self, x, key):
         if self.stochastic:
@@ -149,19 +173,24 @@ class QuantCodec(Codec):
 
     def roundtrip(self, x, key=None, state=None, qmax=None):
         from repro.kernels import ops
-        xhat, _, _ = ops.quantize_dequant(
-            x, self._u(x, key), self.qmax if qmax is None else qmax,
-            bn=self.bn)
+        qd = ops.quantize_dequant_block if x.ndim == 2 else ops.quantize_dequant
+        xhat, _, _ = qd(x, self._u(x, key),
+                        self.qmax if qmax is None else qmax, bn=self.bn)
         return xhat, state
 
     def encode(self, x, key=None, state=None):
         from repro.kernels import ref
-        _, q, scales = ref.quantize_dequant(x, self._u(x, key), self.qmax,
-                                            bn=self.bn)
+        qd = ref.quantize_dequant_block if x.ndim == 2 else ref.quantize_dequant
+        _, q, scales = qd(x, self._u(x, key), self.qmax, bn=self.bn)
         return (q, scales), state
 
     def decode(self, wire):
         q, scales = wire
+        if q.ndim == 2:
+            n, k = q.shape
+            br = n // scales.shape[0]
+            return (q.astype(jnp.float32).reshape(-1, br, k)
+                    * scales[:, None, None]).reshape(n, k)
         n = q.shape[0]
         bn = n // scales.shape[0]
         return (q.astype(jnp.float32).reshape(-1, bn)
@@ -185,28 +214,36 @@ class TopKCodec(Codec):
     stateful = True
 
     def k_for(self, n: int) -> int:
-        return max(1, int(math.ceil(self.fraction * n)))
+        """Entries shipped for an n-element payload (n = numel of the
+        shape: rows for a vector, rows x classes for a score block)."""
+        return max(1, int(math.ceil(self.fraction * numel(n))))
 
-    def wire_bits(self, n: int) -> int:
-        idx_bits = max(1, math.ceil(math.log2(max(n, 2))))
-        return self.k_for(n) * (32 + idx_bits)
+    def wire_bits(self, shape) -> int:
+        m = numel(shape)
+        idx_bits = max(1, math.ceil(math.log2(max(m, 2))))
+        return self.k_for(m) * (32 + idx_bits)
 
-    def init_state(self, n: int):
-        return jnp.zeros((n,), jnp.float32)
+    def init_state(self, shape):
+        if isinstance(shape, (tuple, list)):
+            return jnp.zeros(tuple(int(s) for s in shape), jnp.float32)
+        return jnp.zeros((int(shape),), jnp.float32)
 
     def encode(self, x, key=None, state=None):
-        n = x.shape[0]
+        shape = tuple(x.shape)
         if state is None:
-            state = self.init_state(n)
-        y = x.astype(jnp.float32) + state
-        _, idx = jax.lax.top_k(jnp.abs(y), self.k_for(n))
+            state = self.init_state(shape)
+        y = (x.astype(jnp.float32) + state).reshape(-1)
+        m = y.shape[0]
+        _, idx = jax.lax.top_k(jnp.abs(y), self.k_for(m))
         vals = y[idx]
-        dense = jnp.zeros((n,), jnp.float32).at[idx].set(vals)
-        return (vals, idx, n), y - dense
+        dense = jnp.zeros((m,), jnp.float32).at[idx].set(vals)
+        return (vals, idx, shape), (y - dense).reshape(shape)
 
     def decode(self, wire):
-        vals, idx, n = wire
-        return jnp.zeros((n,), jnp.float32).at[idx].set(vals)
+        vals, idx, shape = wire
+        m = numel(shape)
+        dense = jnp.zeros((m,), jnp.float32).at[idx].set(vals)
+        return dense.reshape(shape)
 
 
 CODECS = {

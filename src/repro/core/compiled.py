@@ -96,6 +96,10 @@ class SessionPlan:
     codec: Any = None
     privacy: Any = None
     budget: Any = None
+    # Serve-path codec override: prediction-time ScoreBlockMsg traffic
+    # (the traced serve step below) encodes with this codec when set, else
+    # with ``codec`` — mirroring Transport.serve_codec.
+    serve_codec: Any = None
 
     @property
     def num_agents(self) -> int:
@@ -108,6 +112,16 @@ class SessionPlan:
         if self.budget is not None:
             return self.budget.ladder
         return (self.codec,)
+
+    @property
+    def serve_ladder(self) -> tuple:
+        """The rungs the traced serve step evaluates for [n, K] score
+        blocks: the budget ladder, or the single serve codec (falling back
+        to the training codec; a None rung ships raw fp32)."""
+        if self.budget is not None:
+            return self.budget.ladder
+        return (self.serve_codec if self.serve_codec is not None
+                else self.codec,)
 
     @property
     def has_channel(self) -> bool:
@@ -150,7 +164,8 @@ def plan_for(learners: Sequence, num_classes: int, *, max_rounds: int = 20,
              alpha_cap: float = 20.0, exact_reweight: bool = False,
              use_kernel: bool = True,
              kernel_interpret: bool | None = None,
-             codec=None, privacy=None, budget=None) -> SessionPlan:
+             codec=None, privacy=None, budget=None,
+             serve_codec=None) -> SessionPlan:
     """Build a SessionPlan from eager Learners (they must all be
     ``functional`` — have a LearnerCore)."""
     cores = []
@@ -170,7 +185,8 @@ def plan_for(learners: Sequence, num_classes: int, *, max_rounds: int = 20,
                        alpha_cap=alpha_cap, exact_reweight=exact_reweight,
                        use_kernel=use_kernel,
                        kernel_interpret=kernel_interpret,
-                       codec=codec, privacy=privacy, budget=budget)
+                       codec=codec, privacy=privacy, budget=budget,
+                       serve_codec=serve_codec)
 
 
 # ==================================================================== lowering
@@ -429,6 +445,170 @@ def fleet_run(plan: SessionPlan, keys: jax.Array, Xs: Sequence[jnp.ndarray],
         keys, Xs, classes)
 
 
+# =================================================================== serve step
+class ServeResult(NamedTuple):
+    """Fixed-shape output of the traced distributed-prediction step.
+
+    ``preds`` [n] is the head agent's argmax; ``blocks`` [M, n, K] the
+    decoded per-agent score blocks as shipped (slot 0 = the head's own raw
+    block, which never crosses the wire); ``sent`` [M] marks blocks that
+    actually shipped (head False; budget skips False), ``codec_idx`` [M]
+    the serve-ladder rung each shipped with (-1 = raw / not sent), and
+    ``exhausted`` whether the session bit budget died mid-predict —
+    together they let ``Protocol._replay_serve`` book a byte-identical
+    serve ledger.
+    """
+    preds: jnp.ndarray
+    blocks: jnp.ndarray
+    sent: jnp.ndarray
+    codec_idx: jnp.ndarray
+    exhausted: jnp.ndarray
+
+
+def make_serve_fn(plan: SessionPlan, feature_shapes: tuple,
+                  qmax_arg: bool = False):
+    """Lower ``plan``'s serve path into a pure callable
+
+        serve_fn(key, Xs, params, alphas, valid, rem_session, rem_link)
+            -> ServeResult
+
+    — the traced twin of ``Session.predict_distributed``.  Each agent's
+    [n, K] block is its alpha-weighted coded votes over its own components,
+    accumulated by a ``lax.scan`` over rounds so float addition order
+    matches the eager ``AgentEndpoint.score_block`` bit for bit; non-head
+    blocks then cross the serve channel — DP noise, budget rung choice via
+    the same ladder walk as ``BudgetSpec.choose_costs``, codec roundtrip —
+    before the head sums and argmaxes.  ``rem_session`` / ``rem_link`` [M]
+    are the remaining-budget counters (int32) the walk starts from; ignored
+    by unbudgeted plans.  ``qmax_arg`` re-parameterizes a QuantCodec serve
+    channel's clipping level as a traced trailing argument for codec sweeps
+    (:func:`quant_sweep_run`).
+    """
+    if len(feature_shapes) != plan.num_agents:
+        raise ValueError(f"{plan.num_agents} cores but "
+                         f"{len(feature_shapes)} feature shapes")
+    from repro.core.encoding import encode_labels
+    k = plan.num_classes
+    cores = plan.cores
+    privacy, budget = plan.privacy, plan.budget
+    ladder = plan.serve_ladder
+    if qmax_arg:
+        from repro.comm.codecs import QuantCodec
+        if budget is not None or not isinstance(ladder[0], QuantCodec):
+            raise ValueError("qmax_arg sweeps need a plain QuantCodec plan")
+
+    def serve_fn(key, Xs, params, alphas, valid, rem_session, rem_link,
+                 qmax=None) -> ServeResult:
+        from repro.comm.codecs import channel_apply
+        n = int(Xs[0].shape[0])
+        shape = (n, k)
+        if budget is not None:
+            costs = budget.serve_costs(shape)
+            if max(costs) >= _INT32_MAX:
+                raise ValueError(f"serve block costs must fit int32 (the "
+                                 f"budget counters), got {max(costs)}")
+            min_cost = min(costs)
+            rem_s = jnp.asarray(rem_session, jnp.int32)
+        total = None
+        blocks, sent_l, rung_l = [], [], []
+        exhausted = jnp.zeros((), bool)
+        for j, core in enumerate(cores):
+            X = Xs[j]
+            a_j = alphas[:, j].astype(jnp.float32)
+            v_j = valid[:, j]
+
+            def body(acc, sl, _core=core, _X=X):
+                p, a, v = sl
+                pred = _core.predict(p, _X)
+                return acc + jnp.where(v, a, 0.0) * encode_labels(pred, k), None
+
+            block, _ = jax.lax.scan(
+                body, jnp.zeros((n, k), jnp.float32), (params[j], a_j, v_j))
+            if j == 0:
+                # the head agent's own block never crosses the wire
+                blocks.append(block)
+                sent_l.append(jnp.zeros((), bool))
+                rung_l.append(jnp.asarray(-1, jnp.int32))
+                total = block
+                continue
+            sub = jax.random.fold_in(key, j)
+            if budget is not None:
+                # privacy noise is rung-independent: apply once, then
+                # codec-only roundtrips per rung — bit-identical to the
+                # eager fused channel (see the round_body note above)
+                noised, _ = channel_apply(None, privacy, block, sub, None)
+                rem = jnp.minimum(rem_s, rem_link[j])
+                rung = jnp.asarray(-1, jnp.int32)
+                for i in reversed(range(len(ladder))):
+                    rung = jnp.where(jnp.asarray(costs[i], jnp.int32) <= rem,
+                                     jnp.asarray(i, jnp.int32), rung)
+                sendable = rung >= 0
+                exhausted = exhausted | (jnp.logical_not(sendable)
+                                         & (rem_s < min_cost))
+                pairs = [channel_apply(c, None, noised, sub, None)[0]
+                         for c in ladder]
+                blk = (pairs[0] if len(pairs) == 1 else
+                       jnp.select([rung == i for i in range(len(ladder))],
+                                  pairs, block))
+                cost = jnp.select([rung == i for i in range(len(ladder))],
+                                  [jnp.asarray(c, jnp.int32) for c in costs],
+                                  jnp.asarray(0, jnp.int32))
+                rem_s = rem_s - jnp.where(sendable, cost, 0)
+                contrib = jnp.where(sendable, blk, jnp.zeros_like(blk))
+            else:
+                blk, _ = channel_apply(ladder[0], privacy, block, sub, None,
+                                       qmax=qmax)
+                sendable = jnp.ones((), bool)
+                rung = jnp.asarray(0 if ladder[0] is not None else -1,
+                                   jnp.int32)
+                contrib = blk
+            blocks.append(blk)
+            sent_l.append(sendable)
+            rung_l.append(jnp.where(sendable, rung, -1))
+            total = total + contrib
+        return ServeResult(preds=jnp.argmax(total, axis=-1),
+                           blocks=jnp.stack(blocks, axis=0),
+                           sent=jnp.stack(sent_l),
+                           codec_idx=jnp.stack(rung_l),
+                           exhausted=exhausted)
+
+    if not qmax_arg:
+        return (lambda key, Xs, params, alphas, valid, rem_s, rem_l:
+                serve_fn(key, Xs, params, alphas, valid, rem_s, rem_l))
+    return serve_fn
+
+
+@functools.lru_cache(maxsize=64)
+def _serve_program(plan: SessionPlan, feature_shapes: tuple):
+    return jax.jit(make_serve_fn(plan, feature_shapes))
+
+
+def serve_session(plan: SessionPlan, result: SessionResult, key,
+                  Xs: Sequence[jnp.ndarray], *, valid=None,
+                  rem_session=None, rem_link=None) -> ServeResult:
+    """Run the traced serve step for one completed compiled session: the
+    one-program distributed prediction over ``Xs`` (per-agent serve-time
+    feature blocks).  ``valid`` optionally overrides ``result.valid`` (e.g.
+    masked by ``max_round``); ``rem_session``/``rem_link`` seed the budget
+    counters from the live transport state (None = uncapped)."""
+    Xs = tuple(jnp.asarray(x) for x in Xs)
+    shapes = tuple(x.shape[1:] for x in Xs)
+    num = plan.num_agents
+    valid = result.valid if valid is None else valid
+    if rem_session is None:
+        rem_session = _INT32_MAX
+    if rem_link is None:
+        rem_link = (_INT32_MAX,) * num
+    if key is None:
+        key = jax.random.key(0)        # unused by a channel-less serve
+    rem_s = jnp.asarray(min(int(rem_session), _INT32_MAX), jnp.int32)
+    rem_l = jnp.asarray([min(int(r), _INT32_MAX) for r in rem_link],
+                        jnp.int32)
+    return _serve_program(plan, shapes)(
+        key, Xs, result.params, result.alphas, jnp.asarray(valid),
+        rem_s, rem_l)
+
+
 # ================================================================= codec sweep
 @functools.lru_cache(maxsize=64)
 def _sweep_program(plan: SessionPlan, feature_shapes: tuple):
@@ -436,9 +616,27 @@ def _sweep_program(plan: SessionPlan, feature_shapes: tuple):
     return jax.jit(jax.vmap(fn, in_axes=(0, None, None, 0)))
 
 
+@functools.lru_cache(maxsize=64)
+def _sweep_serve_program(plan: SessionPlan, feature_shapes: tuple):
+    sess = make_session_fn(plan, feature_shapes, qmax_arg=True)
+    srv = make_serve_fn(plan, feature_shapes, qmax_arg=True)
+    num = plan.num_agents
+
+    def run_one(key, Xs, classes, qmax, serve_Xs):
+        from repro.comm.codecs import SERVE_FOLD
+        res = sess(key, Xs, classes, qmax)
+        serve = srv(jax.random.fold_in(key, SERVE_FOLD), serve_Xs,
+                    res.params, res.alphas, res.valid,
+                    jnp.asarray(_INT32_MAX, jnp.int32),
+                    jnp.full((num,), _INT32_MAX, jnp.int32), qmax)
+        return res, serve
+
+    return jax.jit(jax.vmap(run_one, in_axes=(0, None, None, 0, None)))
+
+
 def quant_sweep_run(plan: SessionPlan, keys: jax.Array,
                     Xs: Sequence[jnp.ndarray], classes: jnp.ndarray,
-                    qmaxes: jnp.ndarray) -> SessionResult:
+                    qmaxes: jnp.ndarray, serve_Xs=None):
     """Sweep quantization levels across a session fleet in ONE XLA program.
 
     The plan's :class:`~repro.comm.codecs.QuantCodec` clipping level becomes
@@ -449,11 +647,22 @@ def quant_sweep_run(plan: SessionPlan, keys: jax.Array,
     are fixed-shape pure functions, the whole accuracy-vs-precision frontier
     vmaps instead of re-running per config.  Wire bits per session follow
     from :func:`repro.comm.codecs.quant_bits_per_element`.
+
+    With ``serve_Xs`` (per-agent serve-time feature blocks) the sweep gains
+    a serve axis: each swept session also runs the traced serve step at its
+    qmax (serve key folded off the session key with the SERVE tag, matching
+    ``Protocol.predict_distributed``) and the call returns a
+    ``(SessionResult, ServeResult)`` pair, both with a leading sweep axis —
+    train-bits vs serve-bits vs accuracy from one XLA program.
     """
     Xs = tuple(jnp.asarray(x) for x in Xs)
     shapes = tuple(x.shape[1:] for x in Xs)
-    return _sweep_program(plan, shapes)(
-        keys, Xs, classes, jnp.asarray(qmaxes, jnp.float32))
+    if serve_Xs is None:
+        return _sweep_program(plan, shapes)(
+            keys, Xs, classes, jnp.asarray(qmaxes, jnp.float32))
+    serve_Xs = tuple(jnp.asarray(x) for x in serve_Xs)
+    return _sweep_serve_program(plan, shapes)(
+        keys, Xs, classes, jnp.asarray(qmaxes, jnp.float32), serve_Xs)
 
 
 # ============================================================= host extraction

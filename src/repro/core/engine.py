@@ -131,8 +131,12 @@ class ModelWeightMsg(Message):
 class ScoreBlockMsg(Message):
     """An [n, K] coded score block: an agent's alpha-weighted votes for the
     collated samples — the O(nK) prediction-time traffic of Algorithm 1
-    line 12 (raw features never move)."""
+    line 12 (raw features never move).
+
+    ``scores`` is the *decoded* payload the head agent sums; ``wire_bits``
+    the encoded size when the serve channel ran a codec."""
     scores: jnp.ndarray = None
+    wire_bits: int | None = None
 
     kind = "score_block"
 
@@ -182,10 +186,14 @@ class Transport(abc.ABC):
     vector, per-agent epsilon tallied in ``accountant``).
     """
 
-    def __init__(self, codec=None, privacy=None) -> None:
+    def __init__(self, codec=None, privacy=None, serve_codec=None) -> None:
         self._endpoints: dict[str, "AgentEndpoint"] = {}
         self.codec = codec
         self.privacy = privacy
+        # serve-path codec override: prediction-time ScoreBlockMsg traffic
+        # encodes with this codec when set, else with ``codec`` (so one
+        # codec serves both payload types by default)
+        self.serve_codec = serve_codec
         self.accountant = None
         if privacy is not None:
             from repro.comm.privacy import PrivacyAccountant
@@ -194,6 +202,14 @@ class Transport(abc.ABC):
     @property
     def has_channel(self) -> bool:
         return self.codec is not None or self.privacy is not None
+
+    @property
+    def effective_serve_codec(self):
+        return self.serve_codec if self.serve_codec is not None else self.codec
+
+    @property
+    def has_serve_channel(self) -> bool:
+        return self.effective_serve_codec is not None or self.privacy is not None
 
     def bind(self, endpoints: Sequence["AgentEndpoint"]) -> None:
         self._endpoints = {ep.name: ep for ep in endpoints}
@@ -242,6 +258,32 @@ class Transport(abc.ABC):
         self.send(ModelWeightMsg(src.name, dst.name, float(alpha)))
         return w_next, codec_state
 
+    def serve_block(self, src: "AgentEndpoint", dst: "AgentEndpoint",
+                    block: jnp.ndarray, *, key=None):
+        """One prediction-time hop: ship ``src``'s [n, K] score block to
+        ``dst`` (the head agent) through the serve channel — DP noise, then
+        codec encode/decode — priced at its *encoded* size.
+
+        Returns the decoded block the head agent sums (the serve-path
+        analogue of :meth:`interchange`'s decoded score), or ``None`` when a
+        budgeted transport drops the block (see
+        :class:`repro.comm.budget.BudgetedTransport`).  ``key`` is the
+        per-block serve subkey; stateful codecs run with a fresh residual —
+        serve calls are independent, there is no next hop to defer mass to.
+        """
+        codec = self.effective_serve_codec
+        wire_bits = None
+        if codec is not None or self.privacy is not None:
+            from repro.comm.codecs import jitted_channel
+            block, _ = jitted_channel(codec, self.privacy)(block, key, None)
+            if self.privacy is not None:
+                self.accountant.record(src.name)
+            if codec is not None:
+                wire_bits = int(codec.wire_bits(tuple(block.shape)))
+        self.send(ScoreBlockMsg(src.name, dst.name, block,
+                                wire_bits=wire_bits))
+        return block
+
 
 class InProcessTransport(Transport):
     """Direct in-memory delivery; the plain single-host path."""
@@ -254,8 +296,9 @@ class MeteredTransport(Transport):
     attached the ledger books *encoded* bits."""
 
     def __init__(self, log: TransportLog | None = None, codec=None,
-                 privacy=None) -> None:
-        super().__init__(codec=codec, privacy=privacy)
+                 privacy=None, serve_codec=None) -> None:
+        super().__init__(codec=codec, privacy=privacy,
+                         serve_codec=serve_codec)
         self.log = log if log is not None else TransportLog()
 
     def _on_send(self, msg: Message) -> None:
@@ -289,8 +332,9 @@ class MeshRingTransport(Transport):
     def __init__(self, mesh=None, *, agent_axis: str = "agent",
                  data_axis: str = "data",
                  interpret: bool | None = None, codec=None,
-                 privacy=None) -> None:
-        super().__init__(codec=codec, privacy=privacy)
+                 privacy=None, serve_codec=None) -> None:
+        super().__init__(codec=codec, privacy=privacy,
+                         serve_codec=serve_codec)
         self.mesh = mesh
         self.agent_axis = agent_axis
         self.data_axis = data_axis
@@ -798,11 +842,24 @@ class Session:
                            self.cfg.num_classes, self.state.history)
 
     def predict_distributed(self, Xs: Sequence[jnp.ndarray] | None = None,
-                            max_round: int | None = None) -> jnp.ndarray:
+                            max_round: int | None = None, *,
+                            key=None) -> jnp.ndarray:
         """Prediction as the protocol actually runs it: every endpoint ships
         its [n, K] ScoreBlockMsg to the head agent, which sums and argmaxes.
-        Metered transports book this O(nK) traffic."""
+
+        The blocks travel through the transport's wire channel
+        (:meth:`Transport.serve_block`): DP-noised, codec-encoded, booked at
+        their *encoded* size, and — on a budgeted transport — walked down
+        the same degrade-then-skip ladder as training hops.  A skipped block
+        degrades the answer toward head-only prediction instead of booking
+        bits the budget cannot afford.  ``key`` seeds the serve channel
+        (stochastic rounding / DP noise); by default it folds off the
+        session's current PRNG key with the SERVE tag, so serving never
+        perturbs the fit stream and resumed sessions serve identically."""
         head = self.endpoints[0]
+        if key is None and self.transport.has_serve_channel:
+            from repro.comm.codecs import SERVE_FOLD
+            key = jax.random.fold_in(self.state.key, SERVE_FOLD)
         total = None
         for i, ep in enumerate(self.endpoints):
             X = None if Xs is None else Xs[i]
@@ -812,8 +869,10 @@ class Session:
             if ep is head:
                 contrib = block
             else:
-                self.transport.send(ScoreBlockMsg(ep.name, head.name, block))
-                contrib = head.latest("score_block").scores
+                sub = None if key is None else jax.random.fold_in(key, i)
+                contrib = self.transport.serve_block(ep, head, block, key=sub)
+                if contrib is None:
+                    continue           # budget skip: head-only fallback
             total = contrib if total is None else total + contrib
         return jnp.argmax(total, axis=-1)
 
@@ -892,6 +951,11 @@ class Protocol:
         self.scheduler = scheduler if scheduler is not None else SequentialScheduler()
         self.transport = transport if transport is not None else InProcessTransport()
         self.backend = backend
+        # last fit() context, so predict_distributed works on both backends:
+        # the eager session, or the compiled (endpoints, plan, result)
+        self._fit_key = None
+        self._session: Session | None = None
+        self._compiled_ctx = None
 
     def start(self, key: jax.Array, endpoints: Sequence[AgentEndpoint],
               classes: jnp.ndarray,
@@ -925,10 +989,12 @@ class Protocol:
 
     def fit(self, key: jax.Array, endpoints: Sequence[AgentEndpoint],
             classes: jnp.ndarray, validation=None) -> FittedASCII:
+        self._fit_key = key
         if self.backend == "compiled":
             return self._fit_compiled(key, endpoints, classes, validation)
         session = self.start(key, endpoints, classes, validation=validation)
         session.run()
+        self._session = session
         return session.fitted()
 
     # ---- compiled backend ---------------------------------------------------
@@ -966,12 +1032,14 @@ class Protocol:
             # objects the eager transport holds, so the traced channel and
             # the rung-choice rule are shared, not re-implemented
             codec=self.transport.codec, privacy=self.transport.privacy,
-            budget=getattr(self.transport, "budget", None))
+            budget=getattr(self.transport, "budget", None),
+            serve_codec=self.transport.serve_codec)
         result = compiled.compiled_session(
             plan, key, tuple(ep.X for ep in endpoints), classes)
         fitted = compiled.fitted_from_result(
             plan, result, [ep.learner for ep in endpoints])
         self._replay_traffic(endpoints, classes, result, plan)
+        self._compiled_ctx = (tuple(endpoints), plan, result)
         return fitted
 
     def _replay_traffic(self, endpoints: Sequence[AgentEndpoint],
@@ -1022,6 +1090,113 @@ class Protocol:
                         self.transport.link_spent.get(link, 0) + cost
         if budgeted:
             self.transport.exhausted = bool(result.exhausted)
+
+    # ---- serve path ---------------------------------------------------------
+    def predict_distributed(self, Xs: Sequence[jnp.ndarray] | None = None,
+                            max_round: int | None = None, *,
+                            key=None) -> jnp.ndarray:
+        """Distributed prediction after :meth:`fit`, on either backend:
+        every endpoint ships its [n, K] ScoreBlockMsg to the head agent
+        through the transport's serve channel (codec, DP noise, budget
+        ladder).  The compiled backend runs the traced serve step
+        (:func:`repro.core.compiled.serve_session`) and replays the exact
+        encoded-bit ledger the eager path books — predictions and ledgers
+        are pinned bit-identical across backends per codec.
+
+        The default serve ``key`` is the same on both backends: the
+        session's *evolved* PRNG key (post-run ``state.key``) folded with
+        the SERVE tag — the only derivation a resumed session can also
+        reproduce, since it no longer knows the original fit key."""
+        if self.backend == "eager":
+            if self._session is None:
+                raise RuntimeError("predict_distributed needs a completed "
+                                   "fit() on this Protocol (or use "
+                                   "Session.predict_distributed directly)")
+            # key=None: the Session derives the default from its evolved
+            # state.key, matching the compiled branch below
+            return self._session.predict_distributed(Xs, max_round, key=key)
+        from repro.core import compiled
+        if self._compiled_ctx is None:
+            raise RuntimeError("predict_distributed needs a completed fit()")
+        endpoints, plan, result = self._compiled_ctx
+        if key is None and self.transport.has_serve_channel:
+            from repro.comm.codecs import SERVE_FOLD
+            key = jax.random.fold_in(self._evolved_key(result), SERVE_FOLD)
+        Xs_serve = (tuple(ep.X for ep in endpoints) if Xs is None
+                    else tuple(jnp.asarray(x) for x in Xs))
+        valid = result.valid
+        if max_round is not None:
+            mask = (jnp.arange(valid.shape[0]) <= max_round)[:, None]
+            valid = jnp.logical_and(valid, mask)
+        shape = (int(Xs_serve[0].shape[0]), self.cfg.num_classes)
+        rem_session, rem_link = self._serve_remaining(endpoints, shape, plan)
+        serve = compiled.serve_session(plan, result, key, Xs_serve,
+                                       valid=valid, rem_session=rem_session,
+                                       rem_link=rem_link)
+        self._replay_serve(endpoints, serve, shape, plan)
+        return serve.preds
+
+    def _evolved_key(self, result):
+        """The eager session's post-run ``state.key``, reconstructed from
+        the fit key: the eager loop splits once per fit slot it reaches,
+        and the compiled scan's key chain agrees with it on every executed
+        slot (post-stop splits are masked out), so ``executed.sum()``
+        splits land on the identical key."""
+        k = self._fit_key
+        for _ in range(int(np.asarray(result.executed).sum())):
+            k, _ = jax.random.split(k)
+        return k
+
+    def _serve_remaining(self, endpoints, shape, plan):
+        """Host-side remaining-budget snapshot the traced serve step starts
+        from (the compiled analogue of BudgetedTransport's per-hop reads)."""
+        num = len(endpoints)
+        if plan.budget is None or not hasattr(self.transport, "link_spent"):
+            return None, None
+        t, budget = self.transport, plan.budget
+        rem_s = (np.iinfo(np.int32).max if budget.session_bits is None
+                 else budget.session_bits - t.log.total_bits
+                 - t.carryover_bits)
+        head = endpoints[0].name
+        rem_l = []
+        for ep in endpoints:
+            link = (ep.name, head)
+            rem_l.append(np.iinfo(np.int32).max if budget.link_bits is None
+                         else budget.link_bits - t.link_spent.get(link, 0))
+        return int(rem_s), tuple(int(r) for r in rem_l)
+
+    def _replay_serve(self, endpoints, serve, shape, plan) -> None:
+        """Book the serve-path message ledger the eager path would have
+        produced: one ScoreBlockMsg per shipped block at the encoded size of
+        the rung the traced serve step chose, skipped links recorded, DP
+        releases tallied, budget state advanced — byte-identical to eager
+        ``Session.predict_distributed``."""
+        head = endpoints[0]
+        sent = np.asarray(serve.sent)
+        rungs = np.asarray(serve.codec_idx)
+        ladder = plan.serve_ladder
+        budgeted = (plan.budget is not None
+                    and hasattr(self.transport, "link_spent"))
+        for j in range(1, len(endpoints)):
+            link = (endpoints[j].name, head.name)
+            if not sent[j]:
+                if budgeted:
+                    self.transport.skipped.append(link)
+                continue
+            codec = ladder[int(rungs[j])] if int(rungs[j]) >= 0 else None
+            wire_bits = (int(codec.wire_bits(shape))
+                         if codec is not None else None)
+            self.transport.send(ScoreBlockMsg(
+                endpoints[j].name, head.name, serve.blocks[j],
+                wire_bits=wire_bits))
+            if self.transport.privacy is not None:
+                self.transport.accountant.record(endpoints[j].name)
+            if budgeted:
+                self.transport.link_spent[link] = \
+                    self.transport.link_spent.get(link, 0) + wire_bits
+        if budgeted:
+            self.transport.exhausted = bool(self.transport.exhausted
+                                            or bool(serve.exhausted))
 
 
 def variant_setup(variant: str, seed: int = 0) -> tuple[Scheduler, bool]:

@@ -64,3 +64,11 @@ class TransportLog:
 def oracle_bits(n: int, p_remote: int, bits_per_element: int = 32) -> int:
     """Cost of the oracle: shipping the remote agents' raw features."""
     return n * p_remote * bits_per_element
+
+
+def oracle_bits_codec(n: int, p_remote: int, codec) -> int:
+    """Oracle baseline under a wire codec: the remote [n, p] raw feature
+    matrix shipped through the same codec the protocol uses — the fair
+    comparison point for the Fig. 4 frontier (a quantized ASCII run should
+    beat a *quantized* oracle, not only the raw-fp32 one)."""
+    return int(codec.wire_bits((n, p_remote)))

@@ -79,6 +79,16 @@ def quantize_dequant(x, u, qmax, *, bn: int = 1024,
     return _q.quantize_dequant_tiles(x, u, qmax, bn=bn, interpret=interp)
 
 
+def quantize_dequant_block(x, u, qmax, *, bn: int = 1024,
+                           interpret: bool | None = None):
+    """Row-major tiled quantize-dequant for [n, k] score blocks (the
+    prediction-time ScoreBlockMsg wire codec): returns (dequantized [n, k],
+    int8 wire values [n, k], per-row-tile scales)."""
+    interp = _default_interpret() if interpret is None else interpret
+    from repro.kernels import quantize as _q
+    return _q.quantize_dequant_block(x, u, qmax, bn=bn, interpret=interp)
+
+
 def flash_decode(q, k, v, pos, *, k_scale=None, v_scale=None, window=None,
                  interpret: bool | None = None):
     """Single-token flash attention vs a long (optionally int8) KV cache."""

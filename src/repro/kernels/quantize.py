@@ -34,6 +34,15 @@ def tile_for(n: int, bn: int = DEFAULT_BN) -> int:
     return bn if (n >= bn and n % bn == 0) else n
 
 
+def rows_for(n: int, k: int, bn: int = DEFAULT_BN) -> int:
+    """Row tile for an [n, k] row-major block (ScoreBlockMsg payloads):
+    keep the per-scale granularity at ~``bn`` elements by tiling
+    ``bn // k`` rows when that divides n evenly, else one global tile —
+    the same degenerate rule as :func:`tile_for`, shared with the host
+    reference so kernel and reference agree on scale boundaries."""
+    return tile_for(n, max(1, bn // k))
+
+
 def _kernel(qmax_ref, x_ref, u_ref, xhat_ref, q_ref, scale_ref):
     qmax = qmax_ref[0]
     x = x_ref[...]
@@ -77,6 +86,45 @@ def quantize_dequant_tiles(x: jnp.ndarray, u: jnp.ndarray,
         out_shape=[
             jax.ShapeDtypeStruct((n,), jnp.float32),
             jax.ShapeDtypeStruct((n,), jnp.int8),
+            jax.ShapeDtypeStruct((nt,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qmax_arr, x.astype(jnp.float32), u.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def quantize_dequant_block(x: jnp.ndarray, u: jnp.ndarray,
+                           qmax: jnp.ndarray, *, bn: int = DEFAULT_BN,
+                           interpret: bool = False):
+    """Row-major tiled quantization of an [n, k] score block.
+
+    The 2-D sibling of :func:`quantize_dequant_tiles` for prediction-time
+    ScoreBlockMsg payloads: tiles of ``rows_for(n, k, bn)`` rows share one
+    fp32 scale (per-tile absmax over the whole [rows, k] slab), reusing the
+    exact same kernel body — per-tile absmax, stochastic round, clip,
+    dequantized product in one VMEM pass.  Returns
+    ``(xhat [n, k] f32, q [n, k] int8, scales [n/rows] f32)``.
+    """
+    n, k = x.shape
+    br = rows_for(n, k, bn)
+    nt = n // br
+    qmax_arr = jnp.broadcast_to(jnp.asarray(qmax, jnp.float32), (1,))
+    return pl.pallas_call(
+        _kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),       # qmax (replicated)
+            pl.BlockSpec((br, k), lambda i: (i, 0)),
+            pl.BlockSpec((br, k), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, k), lambda i: (i, 0)),
+            pl.BlockSpec((br, k), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k), jnp.float32),
+            jax.ShapeDtypeStruct((n, k), jnp.int8),
             jax.ShapeDtypeStruct((nt,), jnp.float32),
         ],
         interpret=interpret,

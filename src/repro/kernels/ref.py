@@ -84,6 +84,28 @@ def quantize_dequant(x: jnp.ndarray, u: jnp.ndarray, qmax,
             scale)
 
 
+def quantize_dequant_block(x: jnp.ndarray, u: jnp.ndarray, qmax,
+                           bn: int = 1024):
+    """Reference row-major tiled quantize-dequant for [n, k] score blocks.
+
+    The 2-D sibling of :func:`quantize_dequant`: tiles of
+    ``quantize.rows_for(n, k, bn)`` rows share one fp32 scale (absmax over
+    the [rows, k] slab).  Returns (xhat [n, k] f32, q [n, k] int8,
+    scales [nt] f32) — bit-identical to the Pallas block kernel.
+    """
+    from repro.kernels.quantize import rows_for
+    n, k = x.shape
+    br = rows_for(n, k, bn)
+    nt = n // br
+    qmax = jnp.asarray(qmax, jnp.float32)
+    xt = x.astype(jnp.float32).reshape(nt, br * k)
+    ut = u.astype(jnp.float32).reshape(nt, br * k)
+    scale = jnp.maximum(jnp.max(jnp.abs(xt), axis=1), 1e-12) / qmax
+    q = jnp.clip(jnp.floor(xt / scale[:, None] + ut), -qmax, qmax)
+    return ((q * scale[:, None]).reshape(n, k),
+            q.astype(jnp.int8).reshape(n, k), scale)
+
+
 def flash_decode(q, k, v, pos, *, k_scale=None, v_scale=None, window=None):
     """Reference single-token attention vs a (possibly int8) cache.
 

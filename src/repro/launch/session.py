@@ -62,12 +62,26 @@ def _print_comm(transport):
             line += (f",ignorance_bits="
                      f"{transport.bits_by_kind().get('ignorance', 0)}")
         print(line)
+    if transport.serve_codec is not None:
+        print(f"serve_codec={type(transport.serve_codec).__name__}")
     if hasattr(transport, "budget"):
         print(f"budget: spent={transport.total_bits}b,"
               f"skipped_hops={len(transport.skipped)},"
               f"exhausted={transport.exhausted}")
     if getattr(transport, "privacy", None) is not None:
         print(f"dp: {json.dumps(transport.accountant.report(transport.privacy))}")
+
+
+def _print_serve(transport, preds, cte, before_bits):
+    """Serve-path summary: distributed-prediction accuracy and the encoded
+    ScoreBlockMsg bits this predict call booked."""
+    line = f"serve: acc={float(jnp.mean(preds == cte)):.3f}"
+    if isinstance(transport, MeteredTransport):
+        bits = transport.bits_by_kind().get("score_block", 0) - before_bits
+        line += f",score_block_bits={bits}"
+    if hasattr(transport, "budget"):
+        line += f",skipped_hops={len(transport.skipped)}"
+    print(line)
 
 
 def main():
@@ -93,6 +107,12 @@ def main():
                     help="wire codec for outgoing ignorance scores "
                          "(repro.comm.codecs; the ledger books encoded "
                          "bits; empty = raw fp32 messages)")
+    ap.add_argument("--serve-codec", default="",
+                    choices=["", "fp32", "fp16", "int8", "int4", "topk"],
+                    help="wire codec for prediction-time ScoreBlockMsg "
+                         "traffic (defaults to --codec when that is set; "
+                         "serve blocks are DP-noised, encoded, and booked "
+                         "at their encoded size like training hops)")
     ap.add_argument("--byte-budget", type=int, default=0,
                     help="session byte budget: the transport degrades down "
                          "the fp32>fp16>int8>int4 codec ladder, then skips "
@@ -141,6 +161,9 @@ def main():
         if args.codec:
             ap.error("--byte-budget drives codec choice through its "
                      "degradation ladder; drop --codec")
+        if args.serve_codec:
+            ap.error("--byte-budget drives the serve codec through the "
+                     "same degradation ladder; drop --serve-codec")
         if args.transport != "metered":
             ap.error("--byte-budget needs the (budgeted) metered "
                      "transport; drop --transport")
@@ -152,7 +175,10 @@ def main():
             BudgetSpec(session_bits=args.byte_budget * 8), privacy=privacy)
     else:
         codec = make_codec(args.codec) if args.codec else None
-        transport = TRANSPORTS[args.transport](codec=codec, privacy=privacy)
+        serve_codec = (make_codec(args.serve_codec) if args.serve_codec
+                       else None)
+        transport = TRANSPORTS[args.transport](codec=codec, privacy=privacy,
+                                               serve_codec=serve_codec)
     engine = Protocol(SessionConfig(num_classes=ds.num_classes,
                                     max_rounds=args.rounds,
                                     upstream=upstream),
@@ -170,6 +196,10 @@ def main():
         if isinstance(transport, MeteredTransport):
             line += f",bits={transport.total_bits}"
         print(line)
+        before = (transport.bits_by_kind().get("score_block", 0)
+                  if isinstance(transport, MeteredTransport) else 0)
+        preds = engine.predict_distributed(Xte)
+        _print_serve(transport, preds, cte, before)
         _print_comm(transport)
         return
 
@@ -177,8 +207,8 @@ def main():
     # variant/seed/dataset would silently corrupt the resumed trajectory
     run_cfg = {k: getattr(args, k)
                for k in ("dataset", "n", "variant", "learner", "depth",
-                         "steps", "seed", "codec", "byte_budget",
-                         "dp_epsilon")}
+                         "steps", "seed", "codec", "serve_codec",
+                         "byte_budget", "dp_epsilon")}
     cfg_path = os.path.join(args.ckpt_dir or ".", "cli_config.json")
     if args.resume:
         if not args.ckpt_dir:
@@ -190,7 +220,8 @@ def main():
             # (PR 3) flags existed imply the old defaults — fill, don't
             # reject
             saved = {"learner": "tree", "steps": 150, "codec": "",
-                     "byte_budget": 0, "dp_epsilon": 0.0, **saved}
+                     "serve_codec": "", "byte_budget": 0, "dp_epsilon": 0.0,
+                     **saved}
             if saved != run_cfg:
                 ap.error(f"--resume config mismatch: checkpoint was written "
                          f"with {saved}, this run is {run_cfg}")
@@ -220,6 +251,15 @@ def main():
     if isinstance(transport, MeteredTransport):
         line += f",bits={transport.total_bits}"
     print(line)
+    if not paused:
+        # serve only on the terminal run: the checkpoint above snapshots
+        # comm state *before* this point, so a paused process serving here
+        # would book budget spend and DP releases the snapshot misses —
+        # free bits and an undercounted epsilon ledger after --resume
+        before = (transport.bits_by_kind().get("score_block", 0)
+                  if isinstance(transport, MeteredTransport) else 0)
+        preds = session.predict_distributed(Xte)
+        _print_serve(transport, preds, cte, before)
     _print_comm(transport)
     if paused:
         if args.ckpt_dir:

@@ -39,6 +39,28 @@ def test_kernel_matches_reference_grid():
                                                   np.asarray(b))
 
 
+def _block(n, k, dtype, seed):
+    key = jax.random.key(seed)
+    return (jax.random.normal(key, (n, k)) * 0.5).astype(dtype)
+
+
+def test_block_kernel_matches_reference_grid():
+    """The row-major 2-D quantize-dequant (ScoreBlockMsg payloads) equals
+    the host reference bit for bit at every tiling regime — sub-tile (one
+    global scale), exact row tiles, odd row counts — input dtype, and
+    quantization width."""
+    for (n, k) in ((4, 3), (60, 8), (128, 8), (257, 5), (1024, 8)):
+        for dtype in (jnp.float32, jnp.bfloat16):
+            for qmax in (127.0, 7.0):
+                x = _block(n, k, dtype, n + k)
+                u = jax.random.uniform(jax.random.key(n + 1), (n, k))
+                out_k = ops.quantize_dequant_block(x, u, qmax)
+                out_r = ref.quantize_dequant_block(x, u, qmax)
+                for a, b in zip(out_k, out_r):
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+
+
 try:
     import hypothesis  # noqa: F401
     from hypothesis import given, settings, strategies as st
@@ -96,6 +118,74 @@ if HAVE_HYPOTHESIS:
             np.asarray(codec.decode(wire) + new_resid),
             np.asarray(x + resid), rtol=1e-6, atol=1e-7)
 
+    # -------------------------------------------- 2-D score-block properties
+    BLOCK_NS = st.sampled_from([4, 60, 128, 257, 1024])
+    BLOCK_KS = st.sampled_from([2, 3, 8])
+
+    @given(n=BLOCK_NS, k=BLOCK_KS, dtype=DTYPES, qmax=QMAXES,
+           seed=st.integers(0, 99))
+    @settings(max_examples=25, deadline=None)
+    def test_block_kernel_matches_reference_prop(n, k, dtype, qmax, seed):
+        """Property form of the 2-D kernel-vs-reference pin, plus the
+        quantization-error bound: |xhat - x| <= one step of the row-tile
+        the element lives in."""
+        x = _block(n, k, dtype, seed)
+        u = jax.random.uniform(jax.random.key(seed + 1), (n, k))
+        out_k = ops.quantize_dequant_block(x, u, qmax)
+        out_r = ref.quantize_dequant_block(x, u, qmax)
+        for a, b in zip(out_k, out_r):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        xh, _, scales = out_k
+        step = np.repeat(np.asarray(scales), n // scales.shape[0])[:, None]
+        err = np.abs(np.asarray(xh) - np.asarray(x, np.float32))
+        assert (err <= step * (1 + 1e-5)).all()
+
+    @given(n=BLOCK_NS, k=BLOCK_KS, seed=st.integers(0, 99),
+           name=st.sampled_from(["fp32", "fp16", "int8", "int4", "topk"]))
+    @settings(max_examples=25, deadline=None)
+    def test_codec_block_shape_dtype_preserved(n, k, seed, name):
+        """Every codec, fed an [n, K] block: encode/decode reconstructs to
+        the original shape in float32, and roundtrip == decode(encode(x))
+        (the serve-path codec contract)."""
+        codec = make_codec(name)
+        x = _block(n, k, jnp.float32, seed)
+        key = jax.random.key(seed)
+        wire, state = codec.encode(x, key)
+        dec = codec.decode(wire)
+        assert dec.shape == (n, k) and dec.dtype == jnp.float32
+        fused, _ = codec.roundtrip(x, key)
+        assert fused.shape == (n, k) and fused.dtype == jnp.float32
+        if not codec.stateful:          # fresh top-k state differs per call
+            np.testing.assert_array_equal(np.asarray(fused),
+                                          np.asarray(dec))
+        # int codecs: quantization error bounded by the tile step size
+        if isinstance(codec, QuantCodec):
+            q, scales = wire
+            step = np.repeat(np.asarray(scales),
+                             n // scales.shape[0])[:, None]
+            err = np.abs(np.asarray(fused) - np.asarray(x, np.float32))
+            assert (err <= step * (1 + 1e-5)).all()
+
+    @given(n=st.sampled_from([16, 60, 257]), k=BLOCK_KS,
+           seed=st.integers(0, 99), frac=st.sampled_from([0.1, 0.25]))
+    @settings(max_examples=25, deadline=None)
+    def test_topk_block_residual_carry_over_rounds(n, k, seed, frac):
+        """Error feedback telescopes across serve rounds on [n, K] blocks:
+        sum_t decode_t + final_residual == sum_t x_t + initial_residual —
+        deferred mass is carried, round after round, never dropped."""
+        codec = TopKCodec(fraction=frac)
+        keys = jax.random.split(jax.random.key(seed), 3)
+        xs = [_block(n, k, jnp.float32, seed + 11 * t) for t in range(3)]
+        resid = codec.init_state((n, k))
+        shipped = jnp.zeros((n, k), jnp.float32)
+        for t, x in enumerate(xs):
+            wire, resid = codec.encode(x, keys[t], state=resid)
+            assert resid.shape == (n, k)
+            shipped = shipped + codec.decode(wire)
+        np.testing.assert_allclose(
+            np.asarray(shipped + resid),
+            np.asarray(sum(xs)), rtol=1e-5, atol=1e-6)
+
 
 def test_stochastic_rounding_unbiased():
     """E[dequant] over rounding draws approaches x (the reason int8 wires
@@ -121,6 +211,28 @@ def test_wire_bits_formulas():
     assert TopKCodec(fraction=0.25).wire_bits(n) == k * (32 + 10)  # log2(600)
     assert quant_bits_per_element(127) == 8
     assert quant_bits_per_element(7) == 4
+
+
+def test_wire_bits_formulas_2d():
+    """Score-block wire sizes: elementwise codecs scale by n*K; the quant
+    codecs add one fp32 scale per row tile (rows_for: ~1024 elements per
+    tile when the row count divides evenly, else one global tile)."""
+    from repro.kernels.quantize import rows_for
+    shape = (600, 8)                     # 4800 elements
+    assert Fp32Codec().wire_bits(shape) == 32 * 4800
+    assert Fp16Codec().wire_bits(shape) == 16 * 4800
+    # 600 rows of k=8: 1024 // 8 = 128-row tiles don't divide 600 -> one
+    # global tile, a single fp32 scale
+    assert rows_for(600, 8) == 600
+    assert QuantCodec(bits=8).wire_bits(shape) == 8 * 4800 + 32
+    assert QuantCodec(bits=4).wire_bits(shape) == 4 * 4800 + 32
+    # 1024 rows of k=8 tile into 8 row groups of 128 -> 8 scales
+    assert rows_for(1024, 8) == 128
+    assert QuantCodec(bits=8).wire_bits((1024, 8)) == 8 * 8192 + 8 * 32
+    # top-k flattens: k_for and index width follow the element count
+    t = TopKCodec(fraction=0.25)
+    assert t.k_for(4800) == 1200
+    assert t.wire_bits(shape) == 1200 * (32 + 13)      # ceil(log2(4800))
 
 
 def test_codec_registry():
