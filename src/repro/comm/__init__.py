@@ -14,6 +14,10 @@ Sits between agents and transports (`repro.core.engine`):
 All three ride both engine backends: eager transports and the compiled
 session scan run the same traced channel, so trajectories and byte ledgers
 stay bit-identical across backends for every codec.
+
+The policy layer above this subsystem — adaptive per-hop codec selection,
+budget-aware round scheduling, RDP privacy accounting — lives in
+:mod:`repro.control`.
 """
 from repro.comm.codecs import (CODECS, Codec, Fp16Codec, Fp32Codec,
                                QuantCodec, TopKCodec, channel_apply,

@@ -75,22 +75,25 @@ class BudgetSpec:
         return tuple(c.wire_bits(shape) for c in self.ladder)
 
     def choose_costs(self, costs, remaining_session: float,
-                     remaining_link: float) -> int | None:
+                     remaining_link: float, floor: int = 0) -> int | None:
         """First ladder index affordable under both remaining budgets, or
         None when the hop must be skipped — the single decision rule both
         engine backends implement, for training hops and serve blocks
-        alike."""
+        alike.  ``floor`` is the adaptive controller's rung (the walk never
+        picks a *finer* rung than the policy asked for; the budget may
+        still degrade past it — ladder costs descend, so the floor never
+        changes when a hop is skippable)."""
         remaining = min(remaining_session, remaining_link)
-        for i, cost in enumerate(costs):
-            if cost <= remaining:
+        for i in range(floor, len(costs)):
+            if costs[i] <= remaining:
                 return i
         return None
 
     def choose(self, n: int, remaining_session: float,
-               remaining_link: float) -> int | None:
+               remaining_link: float, floor: int = 0) -> int | None:
         """:meth:`choose_costs` over the training-hop cost table."""
         return self.choose_costs(self.hop_costs(n), remaining_session,
-                                 remaining_link)
+                                 remaining_link, floor)
 
 
 class BudgetedTransport(MeteredTransport):
@@ -99,8 +102,19 @@ class BudgetedTransport(MeteredTransport):
     docstring).  ``exhausted`` flips when the session budget can no longer
     afford even the cheapest rung; the engine stops scheduling rounds."""
 
-    def __init__(self, budget: BudgetSpec, log=None, privacy=None):
-        super().__init__(log=log, codec=budget.ladder[0], privacy=privacy)
+    def __init__(self, budget: BudgetSpec, log=None, privacy=None,
+                 controller=None, accountant=None):
+        if controller is not None and \
+                tuple(controller.ladder) != tuple(budget.ladder):
+            raise ValueError(
+                "an adaptive controller on a budgeted transport must share "
+                "the budget's ladder (its rung is a floor on the same walk); "
+                f"got {controller.ladder} vs {budget.ladder}")
+        super().__init__(log=log,
+                         codec=None if controller is not None
+                         else budget.ladder[0],
+                         privacy=privacy, controller=controller,
+                         accountant=accountant)
         self.budget = budget
         self.link_spent: dict = {}      # (src, dst) -> bits
         self.skipped: list = []         # (src, dst) of dropped hops
@@ -109,9 +123,32 @@ class BudgetedTransport(MeteredTransport):
         # from SessionState.comm on resume; this process's log starts empty)
         self.carryover_bits = 0
 
+    def _choose_codec(self, w_prev, w_out) -> None:
+        # rung choice already happened in interchange (the controller floor
+        # feeds the ladder walk); the base-class per-hop hook must not run
+        # the controller a second time
+        pass
+
+    @property
+    def effective_serve_codec(self):
+        # the budget ladder drives serve codec choice: serve_block walks it
+        # and sets ``codec`` to the chosen rung before shipping.  The base
+        # property's controller bypass (serve raw under a controller) must
+        # not apply here — it would ship raw blocks at encoded prices and
+        # break eager==compiled serve parity (the compiled serve_ladder is
+        # the budget ladder too).
+        return self.serve_codec if self.serve_codec is not None else self.codec
+
     def interchange(self, src, dst, w, r, alpha, reweight,
                     standard=True, *, key=None, codec_state=None):
         n = int(w.shape[0])
+        floor, w_out = 0, None
+        if self.controller is not None:
+            # observe the hop the way the base hook would: the controller
+            # statistic reads the outgoing (post-reweight) vector, computed
+            # once here and threaded through to the base interchange
+            w_out = self._execute_update(w, r, alpha, reweight, standard)
+            floor = self._controller_rung(w, w_out)
         costs = self.budget.hop_costs(n)
         link = (src.name, dst.name)
         rem_s = (math.inf if self.budget.session_bits is None
@@ -119,7 +156,7 @@ class BudgetedTransport(MeteredTransport):
                  - self.carryover_bits)
         rem_l = (math.inf if self.budget.link_bits is None
                  else self.budget.link_bits - self.link_spent.get(link, 0))
-        idx = self.budget.choose(n, rem_s, rem_l)
+        idx = self.budget.choose(n, rem_s, rem_l, floor)
         if idx is None:
             # defer/skip: the hop is dropped, the receiver keeps its stale
             # score; a session-budget skip ends round scheduling
@@ -131,7 +168,7 @@ class BudgetedTransport(MeteredTransport):
         self.link_spent[link] = self.link_spent.get(link, 0) + costs[idx]
         return super().interchange(src, dst, w, r, alpha, reweight,
                                    standard, key=key,
-                                   codec_state=codec_state)
+                                   codec_state=codec_state, _w_out=w_out)
 
     def serve_block(self, src, dst, block, *, key=None):
         """Budgeted serve hop: the same degrade-then-skip ladder walk as

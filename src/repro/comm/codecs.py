@@ -24,7 +24,8 @@ Implemented codecs:
   ``fp32``     raw float32              32n
   ``fp16``     IEEE float16             16n
   ``int8``     int8 + fp32 tile scales  8n + 32·ceil(n/bn)
-  ``int4``     int4 (in int8 carrier)   4n + 32·ceil(n/bn)
+  ``int4``     packed int4 (two         8·ceil(n/2) + 32·ceil(n/bn)
+               nibbles per wire byte)
                + fp32 tile scales
   ``topk``     top-k values + indices   k·(32 + ceil(log2 n))
   ===========  =======================  ============================
@@ -162,7 +163,15 @@ class QuantCodec(Codec):
         return n // tile_for(n, self.bn)
 
     def wire_bits(self, shape) -> int:
-        return self.bits * numel(shape) + SCALE_BITS * self._tiles(shape)
+        m = numel(shape)
+        if self.bits == 4:
+            # real 4-bit carriers: two nibbles per int8 wire byte (odd
+            # element counts pad the trailing high nibble), so the priced
+            # payload is whole bytes, not a fictional 4·m
+            payload = 8 * ((m + 1) // 2)
+        else:
+            payload = self.bits * m
+        return payload + SCALE_BITS * self._tiles(shape)
 
     def _u(self, x, key):
         if self.stochastic:
@@ -179,13 +188,23 @@ class QuantCodec(Codec):
         return xhat, state
 
     def encode(self, x, key=None, state=None):
-        from repro.kernels import ref
+        from repro.kernels import ops, ref
         qd = ref.quantize_dequant_block if x.ndim == 2 else ref.quantize_dequant
         _, q, scales = qd(x, self._u(x, key), self.qmax, bn=self.bn)
+        if self.bits == 4:
+            # the wire array is a real 4-bit carrier: two nibbles per int8
+            # byte (the Pallas pack pass); shape rides the wire tuple so
+            # decode can unpack odd element counts exactly
+            return (ops.pack_int4(q), scales, tuple(q.shape)), state
         return (q, scales), state
 
     def decode(self, wire):
-        q, scales = wire
+        if self.bits == 4:
+            from repro.kernels import ops
+            packed, scales, shape = wire
+            q = ops.unpack_int4(packed, numel(shape)).reshape(shape)
+        else:
+            q, scales = wire
         if q.ndim == 2:
             n, k = q.shape
             br = n // scales.shape[0]

@@ -1,0 +1,37 @@
+"""Control plane: how the channel spends its resources, hop by hop.
+
+The comm subsystem (`repro.comm`) gave the interchange a *wire* — codecs,
+bit budgets, DP noise.  This package adds the *policy* layer that decides,
+per hop, how that wire is spent, running identically on both engine
+backends:
+
+  * :mod:`repro.control.adaptive`   — an entropy-adaptive codec controller:
+    a pure, traceable policy that picks the codec rung per hop from the
+    observed ignorance statistics (front-load precision while the signal is
+    still high-entropy, decay to cheap rungs as it concentrates).  Rides the
+    eager transports through a cached jit and the compiled session scan as a
+    branchless rung-index computation in the carry.
+  * :mod:`repro.control.scheduler`  — a budget-aware round scheduler that
+    reorders agents each round by remaining link budget (and optionally an
+    observed-reward EMA), so the same :class:`~repro.comm.budget.BudgetSpec`
+    caps buy more accuracy than the degrade-then-skip ladder alone.
+  * :mod:`repro.control.accounting` — Rényi-DP (moments) accounting behind
+    the :class:`~repro.comm.privacy.PrivacyAccountant` interface: releases
+    compose in RDP, conversion to (ε, δ) happens on read, and the reported
+    ε is never larger than basic additive composition on the same trace.
+
+Controller state (the entropy EMA) and accountant state (release counts)
+are part of the protocol state: they checkpoint through ``SessionState``
+(the comm snapshot) and survive pause/resume with no free bits and no ε
+resets.
+"""
+from repro.control.accounting import ACCOUNTANTS, RDPAccountant, make_accountant
+from repro.control.adaptive import (AdaptiveController, controller_rung,
+                                    jitted_controller)
+from repro.control.scheduler import BudgetAwareScheduler
+
+__all__ = [
+    "ACCOUNTANTS", "AdaptiveController", "BudgetAwareScheduler",
+    "RDPAccountant", "controller_rung", "jitted_controller",
+    "make_accountant",
+]

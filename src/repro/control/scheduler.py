@@ -1,0 +1,129 @@
+"""Budget-aware round scheduling: spend the same bits in a better order.
+
+The budget subsystem (`repro.comm.budget`) responds to scarcity per hop —
+degrade down the codec ladder, then skip — but the *order* agents act in
+each round is budget-blind: under a sequential chain the same agents always
+hit the degraded/starved tail of the round.  :class:`BudgetAwareScheduler`
+closes that gap: each round it orders the active agents by how much wire
+budget their outgoing link has left (least-spent first), so degradation and
+skips rotate across the cohort instead of starving a fixed suffix, and the
+same :class:`~repro.comm.budget.BudgetSpec` caps buy more interchange.
+
+Ordering key, ascending (all components deterministic):
+
+  1. bits already spent by the agent as a sender — per-link spend on a
+     :class:`~repro.comm.budget.BudgetedTransport` (including restored
+     carryover), else the metered ledger's per-source tally
+     (``TransportLog.bits_by_src``), else 0;
+  2. ``-reward_ema`` — an optional EMA of the agent's observed weighted
+     accuracy (``Scheduler.observe`` hook, fed by ``Session.step``), so
+     ties break toward agents whose recent components earned more;
+  3. the agent id (stability).
+
+This is a *host-side* scheduler like :class:`~repro.core.engine.
+RandomScheduler`: the round order depends on live transport state, which a
+single lowered ``lax.scan`` over heterogeneous agents cannot re-permute, so
+``backend="compiled"`` rejects it exactly as it rejects the random and
+async schedulers.  Scheduler state (the reward EMAs) checkpoints through
+``SessionState.comm`` (``state_dict``/``load_state_dict``), so a resumed
+budget-aware session replays the exact order the uninterrupted one chose.
+"""
+from __future__ import annotations
+
+from repro.core.engine import Scheduler
+
+
+class BudgetAwareScheduler(Scheduler):
+    """Order the active agents by remaining outgoing-link budget.
+
+    ``reward_smoothing`` is the EMA coefficient for the observed-reward
+    tie-break (0 = latest observation only); ``use_reward=False`` disables
+    the tie-break entirely (pure budget ordering).
+    """
+
+    def __init__(self, reward_smoothing: float = 0.5,
+                 use_reward: bool = True) -> None:
+        if not 0.0 <= reward_smoothing < 1.0:
+            raise ValueError(
+                f"need 0 <= reward_smoothing < 1, got {reward_smoothing}")
+        self.reward_smoothing = reward_smoothing
+        self.use_reward = use_reward
+        self._transport = None
+        self._reward_ema: dict[int, float] = {}
+        # per-sender spend a paused run had already booked into a plain
+        # metered ledger: the ledger itself is process-local (a resumed
+        # transport's log starts empty), so the ordering signal must cross
+        # the checkpoint through scheduler state; budgeted transports
+        # restore link_spent via the comm snapshot and need no baseline
+        self._spent_baseline: dict[str, int] = {}
+
+    # ---- engine hooks -------------------------------------------------------
+    def bind_transport(self, transport) -> None:
+        self._transport = transport
+
+    def reset(self) -> None:
+        self._reward_ema = {}
+        self._spent_baseline = {}
+
+    def observe(self, agent_id: int, acc: float) -> None:
+        if not self.use_reward:
+            return
+        prev = self._reward_ema.get(agent_id)
+        b = self.reward_smoothing
+        self._reward_ema[agent_id] = (float(acc) if prev is None
+                                      else b * prev + (1.0 - b) * float(acc))
+
+    # ---- the ordering rule --------------------------------------------------
+    def _spent_by_agent(self, active: list[int]) -> dict[int, int]:
+        """Bits each active agent has spent as a sender, from live transport
+        state: per-link budget spend when the transport enforces a budget,
+        else the metered ledger's per-source interchange tally."""
+        t = self._transport
+        if t is None:
+            return {m: 0 for m in active}
+        names = {ep.agent_id: ep.name
+                 for ep in getattr(t, "_endpoints", {}).values()}
+        by_src = self._by_src()
+        return {m: by_src.get(names.get(m, ""), 0) for m in active}
+
+    def _by_src(self) -> dict[str, int]:
+        t = self._transport
+        by_src: dict[str, int] = {}
+        if hasattr(t, "link_spent"):
+            # restored with the transport on resume: no baseline on top
+            for (src, _dst), bits in t.link_spent.items():
+                by_src[src] = by_src.get(src, 0) + int(bits)
+        elif hasattr(t, "log"):
+            by_src = dict(t.log.bits_by_src(("ignorance", "model_weight")))
+            for src, bits in self._spent_baseline.items():
+                by_src[src] = by_src.get(src, 0) + bits
+        return by_src
+
+    def round_order(self, round_idx: int, active: list[int]) -> list[int]:
+        spent = self._spent_by_agent(active)
+        return sorted(active,
+                      key=lambda m: (spent.get(m, 0),
+                                     -self._reward_ema.get(m, 0.0), m))
+
+    # ---- checkpointing ------------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-able scheduler state for the SessionState comm snapshot.
+
+        Budgeted link spend is transport state and rides the same snapshot;
+        the plain-metered fallback's per-sender tally is process-local, so
+        it is folded into scheduler state here (live ledger + any earlier
+        baseline) — a resumed session orders rounds exactly like the
+        uninterrupted one on every transport."""
+        state: dict = {"reward_ema": {str(m): v for m, v
+                                      in sorted(self._reward_ema.items())}}
+        t = self._transport
+        if t is not None and not hasattr(t, "link_spent") \
+                and hasattr(t, "log"):
+            state["spent_by_src"] = dict(sorted(self._by_src().items()))
+        return state
+
+    def load_state_dict(self, state: dict) -> None:
+        self._reward_ema = {int(m): float(v)
+                            for m, v in state.get("reward_ema", {}).items()}
+        self._spent_baseline = {s: int(b) for s, b
+                                in state.get("spent_by_src", {}).items()}

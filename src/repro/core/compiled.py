@@ -100,6 +100,12 @@ class SessionPlan:
     # (the traced serve step below) encodes with this codec when set, else
     # with ``codec`` — mirroring Transport.serve_codec.
     serve_codec: Any = None
+    # Adaptive codec controller (repro.control.adaptive): a branchless
+    # rung-index policy over its ladder, computed per hop from the carried
+    # ignorance vector's entropy EMA (the EMA scalar rides the scan carry).
+    # With a budget too, the controller's rung is a floor on the ladder
+    # walk — the same composition rule the eager BudgetedTransport applies.
+    controller: Any = None
 
     @property
     def num_agents(self) -> int:
@@ -107,10 +113,13 @@ class SessionPlan:
 
     @property
     def ladder(self) -> tuple:
-        """The codec rungs the scan must evaluate: the budget ladder, or the
-        single configured codec (None rung = privacy-only channel)."""
+        """The codec rungs the scan must evaluate: the budget (or adaptive
+        controller) ladder, or the single configured codec (None rung =
+        privacy-only channel)."""
         if self.budget is not None:
             return self.budget.ladder
+        if self.controller is not None:
+            return self.controller.ladder
         return (self.codec,)
 
     @property
@@ -126,7 +135,7 @@ class SessionPlan:
     @property
     def has_channel(self) -> bool:
         return (self.codec is not None or self.privacy is not None
-                or self.budget is not None)
+                or self.budget is not None or self.controller is not None)
 
 
 class SessionResult(NamedTuple):
@@ -165,7 +174,7 @@ def plan_for(learners: Sequence, num_classes: int, *, max_rounds: int = 20,
              use_kernel: bool = True,
              kernel_interpret: bool | None = None,
              codec=None, privacy=None, budget=None,
-             serve_codec=None) -> SessionPlan:
+             serve_codec=None, controller=None) -> SessionPlan:
     """Build a SessionPlan from eager Learners (they must all be
     ``functional`` — have a LearnerCore)."""
     cores = []
@@ -177,8 +186,8 @@ def plan_for(learners: Sequence, num_classes: int, *, max_rounds: int = 20,
                 f"(functional=False) — eager-only learners (tree/forest) "
                 f"cannot ride the compiled backend")
         cores.append(core)
-    if budget is not None:
-        codec = None                 # the budget ladder drives codec choice
+    if budget is not None or controller is not None:
+        codec = None       # the budget/controller ladder drives codec choice
     return SessionPlan(cores=tuple(cores), num_classes=num_classes,
                        max_rounds=max_rounds, upstream=upstream,
                        stop_on_negative_alpha=stop_on_negative_alpha,
@@ -186,7 +195,7 @@ def plan_for(learners: Sequence, num_classes: int, *, max_rounds: int = 20,
                        use_kernel=use_kernel,
                        kernel_interpret=kernel_interpret,
                        codec=codec, privacy=privacy, budget=budget,
-                       serve_codec=serve_codec)
+                       serve_codec=serve_codec, controller=controller)
 
 
 # ==================================================================== lowering
@@ -230,12 +239,14 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
     k = plan.num_classes
     cores = plan.cores
     codec, privacy, budget = plan.codec, plan.privacy, plan.budget
+    controller = plan.controller
     ladder = plan.ladder
     has_channel = plan.has_channel
     stateful = codec is not None and codec.stateful
     if qmax_arg:
         from repro.comm.codecs import QuantCodec
-        if budget is not None or not isinstance(codec, QuantCodec):
+        if budget is not None or controller is not None \
+                or not isinstance(codec, QuantCodec):
             raise ValueError("qmax_arg sweeps need a plain QuantCodec plan")
     if budget is not None:
         for cap in (budget.session_bits, budget.link_bits):
@@ -296,9 +307,20 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
                     rung = jnp.where(sent, 0, -1).astype(jnp.int32)
                     w = jnp.where(valid, w_upd, w)
                 else:
-                    # ---- the wire: budget rung choice, DP noise, codec —
-                    # the same decision rule and traced channel the eager
-                    # transports run (BudgetSpec.choose / channel_apply)
+                    # ---- the wire: controller/budget rung choice, DP
+                    # noise, codec — the same decision rule and traced
+                    # channel the eager transports run
+                    # (Transport._controller_rung / BudgetSpec.choose /
+                    # channel_apply)
+                    if controller is not None:
+                        # branchless adaptive rung from (receiver's stale
+                        # vector, outgoing vector); the EMA advances on
+                        # every slot the eager loop reaches an interchange
+                        # for
+                        c_rung, ctrl_new = controller.step(w, w_upd,
+                                                           carry["ctrl"])
+                        carry["ctrl"] = jnp.where(valid, ctrl_new,
+                                                  carry["ctrl"])
                     if budget is not None:
                         rem = jnp.asarray(_INT32_MAX, jnp.int32)
                         if budget.session_bits is not None:
@@ -311,9 +333,18 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
                                 - carry["link"][j])
                         rung = jnp.asarray(-1, jnp.int32)
                         for i in reversed(range(len(ladder))):
-                            rung = jnp.where(costs[i] <= rem,
-                                             jnp.asarray(i, jnp.int32), rung)
+                            ok = costs[i] <= rem
+                            if controller is not None:
+                                # the controller rung is a floor on the
+                                # walk: never finer, budget may go coarser
+                                ok = ok & (jnp.asarray(i, jnp.int32)
+                                           >= c_rung)
+                            rung = jnp.where(ok, jnp.asarray(i, jnp.int32),
+                                             rung)
                         sendable = rung >= 0
+                    elif controller is not None:
+                        rung = c_rung
+                        sendable = jnp.ones((), bool)
                     else:
                         rung = jnp.asarray(0, jnp.int32)
                         sendable = jnp.ones((), bool)
@@ -362,6 +393,8 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
         init = {"w": w0, "key": key, "stopped": jnp.zeros((), bool)}
         if stateful:
             init["resid"] = jnp.zeros((num, n), jnp.float32)
+        if controller is not None:
+            init["ctrl"] = controller.init_state()
         if budget is not None:
             init["spent"] = jnp.asarray(setup_bits, jnp.int32)
             init["link"] = jnp.zeros((num,), jnp.int32)

@@ -186,18 +186,35 @@ class Transport(abc.ABC):
     vector, per-agent epsilon tallied in ``accountant``).
     """
 
-    def __init__(self, codec=None, privacy=None, serve_codec=None) -> None:
+    def __init__(self, codec=None, privacy=None, serve_codec=None,
+                 controller=None, accountant=None) -> None:
         self._endpoints: dict[str, "AgentEndpoint"] = {}
+        if controller is not None:
+            if codec is not None:
+                raise ValueError(
+                    "an adaptive controller drives codec choice through its "
+                    "ladder; drop codec= (or pass the codec as a one-rung "
+                    "controller ladder)")
+            codec = controller.ladder[0]
         self.codec = codec
         self.privacy = privacy
         # serve-path codec override: prediction-time ScoreBlockMsg traffic
         # encodes with this codec when set, else with ``codec`` (so one
         # codec serves both payload types by default)
         self.serve_codec = serve_codec
+        # per-hop codec-rung policy (repro.control.adaptive) + its EMA state
+        self.controller = controller
+        self.ctrl_state = (None if controller is None
+                           else controller.init_state())
+        if accountant is not None and privacy is None:
+            raise ValueError("an accountant without a privacy mechanism has "
+                             "nothing to account; pass privacy= too")
         self.accountant = None
         if privacy is not None:
-            from repro.comm.privacy import PrivacyAccountant
-            self.accountant = PrivacyAccountant()
+            if accountant is None:
+                from repro.comm.privacy import PrivacyAccountant
+                accountant = PrivacyAccountant()
+            self.accountant = accountant
 
     @property
     def has_channel(self) -> bool:
@@ -205,7 +222,16 @@ class Transport(abc.ABC):
 
     @property
     def effective_serve_codec(self):
-        return self.serve_codec if self.serve_codec is not None else self.codec
+        if self.serve_codec is not None:
+            return self.serve_codec
+        if self.controller is not None:
+            # the controller is a training-interchange policy (its entropy
+            # statistic is defined on the ignorance vector, not on score
+            # blocks) and mutates ``codec`` hop by hop — serve traffic ships
+            # raw unless an explicit serve_codec is set, identically on both
+            # backends (SessionPlan.serve_ladder applies the same rule)
+            return None
+        return self.codec
 
     @property
     def has_serve_channel(self) -> bool:
@@ -227,10 +253,30 @@ class Transport(abc.ABC):
                         reweight: Callable, standard: bool) -> jnp.ndarray:
         return reweight(w, r, alpha)
 
+    def _controller_rung(self, w_prev: jnp.ndarray,
+                         w_out: jnp.ndarray) -> int:
+        """One adaptive-controller step: observe the hop (receiver's stale
+        vector, outgoing vector), advance the EMA state, return the chosen
+        ladder rung.  Runs the cached-jit controller program (the exact
+        computation the compiled session scan embeds)."""
+        from repro.control.adaptive import jitted_controller
+        rung, self.ctrl_state = jitted_controller(self.controller)(
+            w_prev, w_out, self.ctrl_state)
+        return int(rung)
+
+    def _choose_codec(self, w_prev: jnp.ndarray, w_out: jnp.ndarray) -> None:
+        """Per-hop codec selection hook: with an adaptive controller the
+        outgoing codec is the controller's rung for this hop.  Budgeted
+        transports override this as a no-op — their ladder walk consumes
+        the controller rung as a floor instead."""
+        if self.controller is not None:
+            self.codec = self.controller.ladder[
+                self._controller_rung(w_prev, w_out)]
+
     def interchange(self, src: "AgentEndpoint", dst: "AgentEndpoint",
                     w: jnp.ndarray, r: jnp.ndarray, alpha,
                     reweight: Callable, standard: bool = True, *,
-                    key=None, codec_state=None):
+                    key=None, codec_state=None, _w_out=None):
         """One hop: w' = reweight(w, r, alpha), through the wire channel
         (DP noise, then codec encode/decode), shipped src -> dst.
 
@@ -239,8 +285,13 @@ class Transport(abc.ABC):
         state (error-feedback residual; None for stateless codecs).
         ``key`` is the hop's per-fit subkey; the channel folds its own keys
         from it, so attaching a channel never shifts the fit PRNG stream.
+        ``_w_out`` lets a subclass that already ran the update (the
+        budgeted transport's controller floor) pass it through instead of
+        recomputing it.
         """
-        w_next = self._execute_update(w, r, alpha, reweight, standard)
+        w_next = (_w_out if _w_out is not None
+                  else self._execute_update(w, r, alpha, reweight, standard))
+        self._choose_codec(w, w_next)
         wire_bits = None
         if self.has_channel:
             from repro.comm.codecs import jitted_channel
@@ -296,9 +347,11 @@ class MeteredTransport(Transport):
     attached the ledger books *encoded* bits."""
 
     def __init__(self, log: TransportLog | None = None, codec=None,
-                 privacy=None, serve_codec=None) -> None:
+                 privacy=None, serve_codec=None, controller=None,
+                 accountant=None) -> None:
         super().__init__(codec=codec, privacy=privacy,
-                         serve_codec=serve_codec)
+                         serve_codec=serve_codec, controller=controller,
+                         accountant=accountant)
         self.log = log if log is not None else TransportLog()
 
     def _on_send(self, msg: Message) -> None:
@@ -332,9 +385,11 @@ class MeshRingTransport(Transport):
     def __init__(self, mesh=None, *, agent_axis: str = "agent",
                  data_axis: str = "data",
                  interpret: bool | None = None, codec=None,
-                 privacy=None, serve_codec=None) -> None:
+                 privacy=None, serve_codec=None, controller=None,
+                 accountant=None) -> None:
         super().__init__(codec=codec, privacy=privacy,
-                         serve_codec=serve_codec)
+                         serve_codec=serve_codec, controller=controller,
+                         accountant=accountant)
         self.mesh = mesh
         self.agent_axis = agent_axis
         self.data_axis = data_axis
@@ -381,6 +436,16 @@ class Scheduler(abc.ABC):
 
     def reset(self) -> None:
         """Called at session start; clears any per-run RNG state."""
+
+    def bind_transport(self, transport: "Transport") -> None:
+        """Budget-introspection hook: schedulers that order agents by live
+        channel state (repro.control.scheduler) receive the transport here;
+        stateless schedulers ignore it."""
+
+    def observe(self, agent_id: int, acc: float) -> None:
+        """Reward-observation hook: the session reports each agent's
+        weighted accuracy after its fit, for schedulers that bias order by
+        expected reward; stateless schedulers ignore it."""
 
     @abc.abstractmethod
     def round_order(self, round_idx: int, active: list[int]) -> list[int]:
@@ -684,6 +749,7 @@ class Session:
                 "host-side, so per-hop channel semantics would be fiction; "
                 "use a sequential or random scheduler")
         transport.bind(self.endpoints)
+        scheduler.bind_transport(transport)
         if _send_setup:
             self._send_setup()
 
@@ -759,6 +825,7 @@ class Session:
                                                   alpha_cap=cfg.alpha_cap)
                 rec["alphas"].append(float(a))
                 rec["accs"].append(float(rbar))
+                self.scheduler.observe(m, float(rbar))
                 if cfg.stop_on_negative_alpha and float(a) <= 0:
                     stop = True        # Algorithm 1, line 8
                     break
@@ -811,6 +878,7 @@ class Session:
         for j, (m, params, r, a, rbar) in enumerate(fits):
             rec["alphas"].append(float(a))
             rec["accs"].append(float(rbar))
+            self.scheduler.observe(m, float(rbar))
             if float(a) <= 0:
                 continue
             any_pos = True
@@ -892,6 +960,15 @@ class Session:
             snap["link_spent"] = [[s, d, int(b)]
                                   for (s, d), b in t.link_spent.items()]
             snap["exhausted"] = bool(t.exhausted)
+        if t.controller is not None:
+            # the adaptive controller's EMA (a float32 scalar — exact
+            # through the JSON float round-trip): a resumed session must
+            # pick the rungs the uninterrupted one would, not restart the
+            # policy at the uniform-entropy state
+            snap["ctrl_state"] = float(np.asarray(t.ctrl_state))
+        state_dict = getattr(self.scheduler, "state_dict", None)
+        if state_dict is not None:
+            snap["scheduler"] = state_dict()
         return snap or None
 
     def _comm_restore(self, snap: dict | None) -> None:
@@ -907,6 +984,11 @@ class Session:
             t.link_spent = {(s, d): b
                             for s, d, b in snap.get("link_spent", [])}
             t.exhausted = bool(snap.get("exhausted", False))
+        if t.controller is not None and snap.get("ctrl_state") is not None:
+            t.ctrl_state = jnp.asarray(snap["ctrl_state"], jnp.float32)
+        load_state = getattr(self.scheduler, "load_state_dict", None)
+        if load_state is not None and snap.get("scheduler") is not None:
+            load_state(snap["scheduler"])
 
     def checkpoint(self, directory: str, step: int | None = None) -> str:
         """Save the live SessionState mid-run (resumable via
@@ -1033,7 +1115,8 @@ class Protocol:
             # the rung-choice rule are shared, not re-implemented
             codec=self.transport.codec, privacy=self.transport.privacy,
             budget=getattr(self.transport, "budget", None),
-            serve_codec=self.transport.serve_codec)
+            serve_codec=self.transport.serve_codec,
+            controller=self.transport.controller)
         result = compiled.compiled_session(
             plan, key, tuple(ep.X for ep in endpoints), classes)
         fitted = compiled.fitted_from_result(

@@ -60,6 +60,17 @@ class TransportLog:
             out[e["kind"]] = out.get(e["kind"], 0) + e["bits"]
         return dict(sorted(out.items()))
 
+    def bits_by_src(self, kinds=None) -> dict:
+        """Per-sender totals (name-ordered), optionally restricted to the
+        given message kinds — the budget introspection the budget-aware
+        scheduler (repro.control.scheduler) orders rounds by."""
+        out: dict = {}
+        for e in self.entries:
+            if kinds is not None and e["kind"] not in kinds:
+                continue
+            out[e["src"]] = out.get(e["src"], 0) + e["bits"]
+        return dict(sorted(out.items()))
+
 
 def oracle_bits(n: int, p_remote: int, bits_per_element: int = 32) -> int:
     """Cost of the oracle: shipping the remote agents' raw features."""

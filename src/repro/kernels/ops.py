@@ -89,6 +89,23 @@ def quantize_dequant_block(x, u, qmax, *, bn: int = 1024,
     return _q.quantize_dequant_block(x, u, qmax, bn=bn, interpret=interp)
 
 
+def pack_int4(q, *, bn: int = 1024, interpret: bool | None = None):
+    """Pack int8-carried int4 values into real 4-bit wire bytes: two
+    sign-extended nibbles per int8 byte (flat, ceil(numel/2) long) — the
+    int4 codec's actual wire array (repro.comm.codecs)."""
+    interp = _default_interpret() if interpret is None else interpret
+    from repro.kernels import quantize as _q
+    return _q.pack_int4(q, bn=bn, interpret=interp)
+
+
+def unpack_int4(packed, n: int, *, bn: int = 1024,
+                interpret: bool | None = None):
+    """Inverse of :func:`pack_int4`: n int8-carried int4 values (flat)."""
+    interp = _default_interpret() if interpret is None else interpret
+    from repro.kernels import quantize as _q
+    return _q.unpack_int4(packed, n, bn=bn, interpret=interp)
+
+
 def flash_decode(q, k, v, pos, *, k_scale=None, v_scale=None, window=None,
                  interpret: bool | None = None):
     """Single-token flash attention vs a long (optionally int8) KV cache."""

@@ -92,6 +92,72 @@ def quantize_dequant_tiles(x: jnp.ndarray, u: jnp.ndarray,
     )(qmax_arr, x.astype(jnp.float32), u.astype(jnp.float32))
 
 
+# ------------------------------------------------------------- int4 packing
+def _pack_kernel(q_ref, p_ref):
+    # two int4 values (int8 carrier, [-8, 7]) per output byte: element 2i in
+    # the low nibble, 2i+1 in the high nibble
+    pairs = q_ref[...].reshape(-1, 2)
+    lo = pairs[:, 0] & jnp.int8(0x0F)
+    hi = pairs[:, 1] & jnp.int8(0x0F)
+    p_ref[...] = lo | (hi << 4)
+
+
+def _unpack_kernel(p_ref, q_ref):
+    p = p_ref[...]
+    lo = (p << 4) >> 4                 # arithmetic shifts sign-extend the
+    hi = p >> 4                        # nibbles back to int8 [-8, 7]
+    q_ref[...] = jnp.stack([lo, hi], axis=-1).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def pack_int4(q: jnp.ndarray, *, bn: int = DEFAULT_BN,
+              interpret: bool = False) -> jnp.ndarray:
+    """Pack int4 values carried in an int8 array into real 4-bit wire bytes.
+
+    ``q`` is any-shape int8 holding values in [-8, 7] (the int4 codec emits
+    [-7, 7]); the result is a flat int8 array of ``ceil(numel/2)`` bytes,
+    two sign-extended nibbles per byte in row-major element order (odd
+    element counts pad the trailing high nibble with 0).  The inverse is
+    :func:`unpack_int4`; the pair is pinned bit-identical to the host
+    reference (`kernels.ref.pack_int4`/``unpack_int4``) and exactly
+    round-trips every carrier value.
+    """
+    flat = q.reshape(-1).astype(jnp.int8)
+    m = flat.shape[0]
+    if m % 2:
+        flat = jnp.concatenate([flat, jnp.zeros((1,), jnp.int8)])
+    mp = flat.shape[0] // 2
+    tp = tile_for(mp, bn)
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=(mp // tp,),
+        in_specs=[pl.BlockSpec((2 * tp,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((tp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((mp,), jnp.int8),
+        interpret=interpret,
+    )(flat)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "bn", "interpret"))
+def unpack_int4(packed: jnp.ndarray, n: int, *, bn: int = DEFAULT_BN,
+                interpret: bool = False) -> jnp.ndarray:
+    """Unpack :func:`pack_int4` wire bytes back to ``n`` int8-carried int4
+    values (flat; callers reshape)."""
+    mp = packed.shape[0]
+    if mp != (n + 1) // 2:
+        raise ValueError(f"{mp} packed bytes cannot hold {n} int4 values")
+    tp = tile_for(mp, bn)
+    out = pl.pallas_call(
+        _unpack_kernel,
+        grid=(mp // tp,),
+        in_specs=[pl.BlockSpec((tp,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((2 * tp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((2 * mp,), jnp.int8),
+        interpret=interpret,
+    )(packed.astype(jnp.int8))
+    return out[:n]
+
+
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
 def quantize_dequant_block(x: jnp.ndarray, u: jnp.ndarray,
                            qmax: jnp.ndarray, *, bn: int = DEFAULT_BN,

@@ -106,6 +106,29 @@ def quantize_dequant_block(x: jnp.ndarray, u: jnp.ndarray, qmax,
             q.astype(jnp.int8).reshape(n, k), scale)
 
 
+def pack_int4(q: jnp.ndarray) -> jnp.ndarray:
+    """Reference int4 wire packing (the `quantize.pack_int4` oracle): two
+    sign-extended nibbles per int8 byte, row-major element order, odd
+    element counts padded with a 0 high nibble.  Returns a flat int8 array
+    of ceil(numel/2) bytes."""
+    flat = q.reshape(-1).astype(jnp.int8)
+    if flat.shape[0] % 2:
+        flat = jnp.concatenate([flat, jnp.zeros((1,), jnp.int8)])
+    pairs = flat.reshape(-1, 2)
+    lo = pairs[:, 0] & jnp.int8(0x0F)
+    hi = pairs[:, 1] & jnp.int8(0x0F)
+    return lo | (hi << 4)
+
+
+def unpack_int4(packed: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Reference inverse of :func:`pack_int4`: n int8-carried int4 values
+    (flat), nibbles sign-extended via arithmetic shifts."""
+    p = packed.astype(jnp.int8)
+    lo = (p << 4) >> 4
+    hi = p >> 4
+    return jnp.stack([lo, hi], axis=-1).reshape(-1)[:n]
+
+
 def flash_decode(q, k, v, pos, *, k_scale=None, v_scale=None, window=None):
     """Reference single-token attention vs a (possibly int8) cache.
 

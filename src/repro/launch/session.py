@@ -23,6 +23,9 @@ import jax.numpy as jnp
 
 from repro.comm import (BudgetSpec, BudgetedTransport, GaussianMechanism,
                         make_codec)
+from repro.control import (AdaptiveController, BudgetAwareScheduler,
+                           make_accountant)
+from repro.control.adaptive import STATS as CONTROLLER_STATS
 from repro.core.engine import (InProcessTransport, MeshRingTransport,
                                MeteredTransport, Protocol, SessionConfig,
                                endpoints_for, variant_setup)
@@ -54,8 +57,14 @@ LEARNERS = {
 }
 
 
-def _print_comm(transport):
+def _print_comm(transport, show_ema=True):
     """Wire-channel summary lines (codec ledger, budget state, DP spend)."""
+    if transport.controller is not None:
+        line = (f"controller: stat={transport.controller.stat},"
+                f"rungs={len(transport.controller.ladder)}")
+        if show_ema:        # compiled runs keep the EMA in the scan carry
+            line += f",ema={float(transport.ctrl_state):.4f}"
+        print(line)
     if transport.codec is not None:
         line = f"codec={type(transport.codec).__name__}"
         if isinstance(transport, MeteredTransport):
@@ -123,6 +132,29 @@ def main():
                     help="per-release DP epsilon: Gaussian-mechanism noise "
                          "on every outgoing ignorance vector, per-agent "
                          "epsilon accounting printed after the run")
+    ap.add_argument("--controller", default="",
+                    choices=[""] + list(CONTROLLER_STATS),
+                    help="adaptive codec controller (repro.control): pick "
+                         "the codec rung per hop from this statistic of "
+                         "the outgoing ignorance vector (resid = hop "
+                         "innovation, entropy/l2 = concentration), "
+                         "front-loading precision while the signal is "
+                         "high; replaces a fixed --codec, and floors the "
+                         "--byte-budget ladder walk when both are set")
+    ap.add_argument("--accountant", default="basic",
+                    choices=["basic", "rdp"],
+                    help="privacy accountant for --dp-epsilon releases: "
+                         "basic additive composition, or Renyi-DP "
+                         "(moments) composition converted to (eps, delta) "
+                         "on read — tighter for long sessions, never "
+                         "looser")
+    ap.add_argument("--scheduler", default="",
+                    choices=["", "budget-aware"],
+                    help="round-order override (repro.control.scheduler): "
+                         "budget-aware reorders agents each round by "
+                         "remaining link budget so degradation rotates "
+                         "instead of starving a fixed tail (eager backend, "
+                         "sequential variants)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="",
                     help="checkpoint SessionState here after the run "
@@ -153,10 +185,12 @@ def main():
             ap.error("--backend compiled supports sequential scheduling "
                      "only (--variant ascii|simple)")
     if args.variant == "async" and (args.codec or args.byte_budget
-                                    or args.dp_epsilon > 0):
+                                    or args.dp_epsilon > 0
+                                    or args.controller):
         ap.error("--variant async has no per-hop wire semantics (its "
                  "barrier merge is host-side); --codec/--byte-budget/"
-                 "--dp-epsilon need a sequential or random variant")
+                 "--dp-epsilon/--controller need a sequential or random "
+                 "variant")
     if args.byte_budget > 0:
         if args.codec:
             ap.error("--byte-budget drives codec choice through its "
@@ -167,18 +201,40 @@ def main():
         if args.transport != "metered":
             ap.error("--byte-budget needs the (budgeted) metered "
                      "transport; drop --transport")
+    if args.controller and args.codec:
+        ap.error("--controller drives codec choice through its ladder; "
+                 "drop --codec")
+    if args.accountant != "basic" and args.dp_epsilon <= 0:
+        ap.error(f"--accountant {args.accountant} accounts --dp-epsilon "
+                 f"releases; set --dp-epsilon too")
+    if args.scheduler == "budget-aware":
+        if args.backend == "compiled":
+            ap.error("--scheduler budget-aware reorders rounds from live "
+                     "transport state; that needs the eager backend")
+        if args.variant not in ("ascii", "simple"):
+            ap.error("--scheduler budget-aware replaces the round order; "
+                     "use a sequential variant (ascii|simple)")
     scheduler, upstream = variant_setup(args.variant, args.seed)
+    if args.scheduler == "budget-aware":
+        scheduler = BudgetAwareScheduler()
     privacy = (GaussianMechanism(epsilon=args.dp_epsilon)
                if args.dp_epsilon > 0 else None)
+    accountant = (make_accountant(args.accountant) if privacy is not None
+                  else None)
+    controller = (AdaptiveController(stat=args.controller)
+                  if args.controller else None)
     if args.byte_budget > 0:
         transport = BudgetedTransport(
-            BudgetSpec(session_bits=args.byte_budget * 8), privacy=privacy)
+            BudgetSpec(session_bits=args.byte_budget * 8), privacy=privacy,
+            controller=controller, accountant=accountant)
     else:
         codec = make_codec(args.codec) if args.codec else None
         serve_codec = (make_codec(args.serve_codec) if args.serve_codec
                        else None)
         transport = TRANSPORTS[args.transport](codec=codec, privacy=privacy,
-                                               serve_codec=serve_codec)
+                                               serve_codec=serve_codec,
+                                               controller=controller,
+                                               accountant=accountant)
     engine = Protocol(SessionConfig(num_classes=ds.num_classes,
                                     max_rounds=args.rounds,
                                     upstream=upstream),
@@ -200,7 +256,7 @@ def main():
                   if isinstance(transport, MeteredTransport) else 0)
         preds = engine.predict_distributed(Xte)
         _print_serve(transport, preds, cte, before)
-        _print_comm(transport)
+        _print_comm(transport, show_ema=False)
         return
 
     # the run config that must match across pause/resume: a different
@@ -208,7 +264,8 @@ def main():
     run_cfg = {k: getattr(args, k)
                for k in ("dataset", "n", "variant", "learner", "depth",
                          "steps", "seed", "codec", "serve_codec",
-                         "byte_budget", "dp_epsilon")}
+                         "byte_budget", "dp_epsilon", "controller",
+                         "accountant", "scheduler")}
     cfg_path = os.path.join(args.ckpt_dir or ".", "cli_config.json")
     if args.resume:
         if not args.ckpt_dir:
@@ -216,12 +273,13 @@ def main():
         if os.path.exists(cfg_path):
             with open(cfg_path) as f:
                 saved = json.load(f)
-            # manifests written before the learner/steps (PR 2) or comm
-            # (PR 3) flags existed imply the old defaults — fill, don't
-            # reject
+            # manifests written before the learner/steps (PR 2), comm
+            # (PR 3), or control-plane (PR 5) flags existed imply the old
+            # defaults — fill, don't reject
             saved = {"learner": "tree", "steps": 150, "codec": "",
                      "serve_codec": "", "byte_budget": 0, "dp_epsilon": 0.0,
-                     **saved}
+                     "controller": "", "accountant": "basic",
+                     "scheduler": "", **saved}
             if saved != run_cfg:
                 ap.error(f"--resume config mismatch: checkpoint was written "
                          f"with {saved}, this run is {run_cfg}")

@@ -158,9 +158,16 @@ if HAVE_HYPOTHESIS:
         if not codec.stateful:          # fresh top-k state differs per call
             np.testing.assert_array_equal(np.asarray(fused),
                                           np.asarray(dec))
-        # int codecs: quantization error bounded by the tile step size
+        # int codecs: quantization error bounded by the tile step size; the
+        # int4 wire is a packed 4-bit carrier (plus the original shape)
         if isinstance(codec, QuantCodec):
-            q, scales = wire
+            if codec.bits == 4:
+                packed, scales, shape = wire
+                assert shape == (n, k)
+                assert packed.shape[0] == (n * k + 1) // 2
+                assert packed.dtype == jnp.int8
+            else:
+                q, scales = wire
             step = np.repeat(np.asarray(scales),
                              n // scales.shape[0])[:, None]
             err = np.abs(np.asarray(fused) - np.asarray(x, np.float32))
@@ -187,6 +194,56 @@ if HAVE_HYPOTHESIS:
             np.asarray(sum(xs)), rtol=1e-5, atol=1e-6)
 
 
+def test_pack_int4_kernel_matches_reference_grid():
+    """The int4 pack/unpack Pallas pass equals the host reference bit for
+    bit and round-trips exactly — at even sizes, odd sizes (padded high
+    nibble), multi-tile sizes, and the full nibble range [-8, 7]."""
+    rng = np.random.default_rng(0)
+    for n in (2, 7, 64, 257, 1024, 2048, 4096):
+        q = jnp.asarray(rng.integers(-8, 8, n), jnp.int8)
+        p_k = ops.pack_int4(q)
+        p_r = ref.pack_int4(q)
+        np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+        assert p_k.shape == ((n + 1) // 2,) and p_k.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(ops.unpack_int4(p_k, n)),
+                                      np.asarray(q))
+        np.testing.assert_array_equal(np.asarray(ref.unpack_int4(p_r, n)),
+                                      np.asarray(q))
+    # every nibble value survives the trip
+    q = jnp.asarray(np.arange(-8, 8), jnp.int8)
+    np.testing.assert_array_equal(
+        np.asarray(ops.unpack_int4(ops.pack_int4(q), 16)), np.asarray(q))
+    # 2-D payloads flatten row-major
+    q2 = jnp.asarray(rng.integers(-8, 8, (60, 3)), jnp.int8)
+    np.testing.assert_array_equal(
+        np.asarray(ops.unpack_int4(ops.pack_int4(q2), 180).reshape(60, 3)),
+        np.asarray(q2))
+    with pytest.raises(ValueError, match="cannot hold"):
+        ops.unpack_int4(jnp.zeros((3,), jnp.int8), 100)
+
+
+def test_int4_codec_wire_is_packed():
+    """The int4 codec's wire array is a real 4-bit carrier: ceil(m/2) int8
+    bytes, decode unpacks losslessly, and decode(encode(x)) still equals
+    the fused kernel roundtrip."""
+    codec = QuantCodec(bits=4)
+    for n in (64, 257, 600):
+        x = _x(n, jnp.float32, n)
+        key = jax.random.key(n)
+        (packed, scales, shape), _ = codec.encode(x, key)
+        assert packed.shape == ((n + 1) // 2,) and packed.dtype == jnp.int8
+        assert shape == (n,)
+        fused, _ = codec.roundtrip(x, key)
+        np.testing.assert_array_equal(
+            np.asarray(fused),
+            np.asarray(codec.decode((packed, scales, shape))))
+    # int8 stays an unpacked (q, scales) wire
+    wire8, _ = QuantCodec(bits=8).encode(_x(64, jnp.float32, 1),
+                                         jax.random.key(0))
+    q8, _ = wire8
+    assert q8.shape == (64,)
+
+
 def test_stochastic_rounding_unbiased():
     """E[dequant] over rounding draws approaches x (the reason int8 wires
     survive many hops where deterministic rounding collapses)."""
@@ -207,6 +264,10 @@ def test_wire_bits_formulas():
     assert QuantCodec(bits=8).wire_bits(n) == 8 * n + 32      # one tile
     assert QuantCodec(bits=4).wire_bits(n) == 4 * n + 32
     assert QuantCodec(bits=8).wire_bits(2048) == 8 * 2048 + 2 * 32
+    # int4 prices whole packed wire bytes: odd element counts round up to
+    # the padded nibble, even counts reduce to the nominal 4 bits/element
+    assert QuantCodec(bits=4).wire_bits(257) == 8 * 129 + 32
+    assert QuantCodec(bits=8).wire_bits(257) == 8 * 257 + 32
     k = TopKCodec(fraction=0.25).k_for(n)
     assert TopKCodec(fraction=0.25).wire_bits(n) == k * (32 + 10)  # log2(600)
     assert quant_bits_per_element(127) == 8

@@ -380,7 +380,7 @@ def test_fig4_frontier_json_schema(tmp_path):
                       "bits_ratio_vs_fp32", "acc_drop_vs_fp32",
                       "serve_bits_ratio_vs_fp32", "serve_acc_drop_vs_fp32"):
             assert field in r, (r["point"], field)
-        if r["point"] != "budget50pct":
+        if not r["point"].startswith("budget50pct"):
             assert r["serve_bits"] == r["bits_by_kind"].get("score_block", 0)
             assert r["serve_bits"] > 0
         # a fully-skipped serve (head-only fallback, zero bits) reports a
@@ -395,3 +395,15 @@ def test_fig4_frontier_json_schema(tmp_path):
     assert oracle["fp32"] > oracle["fp16"] > oracle["int8"] > oracle["int4"]
     budget = next(r for r in res["rows"] if r["point"] == "budget50pct")
     assert "skipped_hops" in budget and "exhausted" in budget
+    # control-plane points: the adaptive controller and the RDP-accounted
+    # DP trace ride the same schema
+    assert "adaptive" in points
+    rdp = next(r for r in res["rows"] if r["point"] == "int8+dp1+rdp")
+    for agent, entry in rdp["dp"].items():
+        assert entry["epsilon"] <= entry["epsilon_additive"] + 1e-9
+    # scheduler demo: same link caps, both round orders, full schema
+    demo = res["scheduler_demo"]
+    assert demo["agents"] >= 3          # 2 agents cannot distinguish orders
+    for order in ("sequential", "budget_aware"):
+        for field in ("acc", "skipped_hops", "interchange_bits"):
+            assert field in demo[order], (order, field)
