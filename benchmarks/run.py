@@ -59,6 +59,19 @@ def main() -> None:
     print(f"fleet_speedup,0,fleet_vs_eager="
           f"{fr['speedup_fleet_vs_eager']:.1f}x (BENCH_fleet.json)")
 
+    _section("serve (continuous batching vs per-request dispatch)")
+    from benchmarks import serve_bench
+    sr = serve_bench.run(sessions=8, requests=128 if args.full else 48,
+                         steps=80 if args.full else 40,
+                         verify=True, out="BENCH_serve.json")
+    for mode in ("sequential", "batched"):
+        print(f"serve_{mode},{sr[mode]['seconds'] * 1e6:.0f},"
+              f"qps={sr[mode]['qps']:.1f};p50_ms={sr[mode]['p50_ms']:.2f};"
+              f"p99_ms={sr[mode]['p99_ms']:.2f}")
+    print(f"serve_speedup,0,batched_vs_sequential="
+          f"{sr['speedup_batched_vs_sequential']:.2f}x;"
+          f"verified={sr['verified_bit_identical']} (BENCH_serve.json)")
+
     _section("kernels (Pallas interpret vs jnp oracle)")
     from benchmarks import kernels_bench
     for r in kernels_bench.run():

@@ -21,21 +21,22 @@ budget-aware round scheduling, RDP privacy accounting — lives in
 """
 from repro.comm.codecs import (CODECS, Codec, Fp16Codec, Fp32Codec,
                                QuantCodec, TopKCodec, channel_apply,
-                               jitted_channel, make_codec)
+                               jitted_channel, make_codec, serve_key)
 from repro.comm.privacy import GaussianMechanism, PrivacyAccountant
 
 __all__ = [
     "CODECS", "Codec", "Fp16Codec", "Fp32Codec", "QuantCodec", "TopKCodec",
-    "channel_apply", "jitted_channel", "make_codec",
+    "channel_apply", "jitted_channel", "make_codec", "serve_key",
     "GaussianMechanism", "PrivacyAccountant",
     # lazy (avoids importing the engine on package import):
     "BudgetSpec", "BudgetedTransport", "DEFAULT_LADDER", "MODEL_WEIGHT_BITS",
+    "TenantBudget",
 ]
 
 
 def __getattr__(name):      # PEP 562: budget pulls in the engine; keep lazy
     if name in ("BudgetSpec", "BudgetedTransport", "DEFAULT_LADDER",
-                "MODEL_WEIGHT_BITS"):
+                "MODEL_WEIGHT_BITS", "TenantBudget"):
         from repro.comm import budget
         return getattr(budget, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -96,6 +96,41 @@ class BudgetSpec:
                                  remaining_link, floor)
 
 
+@dataclass
+class TenantBudget:
+    """A per-tenant view of serve-traffic spend: one running bit ledger per
+    tenant against an optional cap, shared across every session and request
+    that tenant submits.
+
+    :class:`BudgetSpec` caps one *session*; a serve fleet fields a stream
+    of requests from many tenants against many sessions, and the admission
+    layer (:mod:`repro.serve.admission`) needs a per-tenant aggregate to
+    gate on *before* any work is done.  ``charge`` books the encoded bits a
+    request actually shipped (the same numbers the transport ledger prices),
+    so the view and the ledger can never drift."""
+    bits: int | None = None         # cap; None = uncapped
+    spent: int = 0
+
+    def __post_init__(self):
+        if self.bits is not None and self.bits <= 0:
+            raise ValueError(f"tenant bit cap must be positive, got "
+                             f"{self.bits}")
+
+    @property
+    def remaining(self) -> float:
+        return math.inf if self.bits is None else self.bits - self.spent
+
+    def affordable(self, cost: int) -> bool:
+        return cost <= self.remaining
+
+    def charge(self, bits: int) -> None:
+        if isinstance(bits, bool) or not isinstance(bits, int):
+            raise TypeError(f"bits must be an integer, got {bits!r}")
+        if bits < 0:
+            raise ValueError(f"bits must be >= 0, got {bits}")
+        self.spent += bits
+
+
 class BudgetedTransport(MeteredTransport):
     """Byte-metered transport that *enforces* a :class:`BudgetSpec` —
     degrade down the codec ladder, then defer/skip hops (see module
@@ -103,18 +138,25 @@ class BudgetedTransport(MeteredTransport):
     afford even the cheapest rung; the engine stops scheduling rounds."""
 
     def __init__(self, budget: BudgetSpec, log=None, privacy=None,
-                 controller=None, accountant=None):
+                 controller=None, accountant=None, serve_controller=None):
         if controller is not None and \
                 tuple(controller.ladder) != tuple(budget.ladder):
             raise ValueError(
                 "an adaptive controller on a budgeted transport must share "
                 "the budget's ladder (its rung is a floor on the same walk); "
                 f"got {controller.ladder} vs {budget.ladder}")
+        if serve_controller is not None and \
+                tuple(serve_controller.ladder) != tuple(budget.ladder):
+            raise ValueError(
+                "a serve controller on a budgeted transport must share the "
+                "budget's ladder (its rung is a floor on the serve walk); "
+                f"got {serve_controller.ladder} vs {budget.ladder}")
         super().__init__(log=log,
                          codec=None if controller is not None
                          else budget.ladder[0],
                          privacy=privacy, controller=controller,
-                         accountant=accountant)
+                         accountant=accountant,
+                         serve_controller=serve_controller)
         self.budget = budget
         self.link_spent: dict = {}      # (src, dst) -> bits
         self.skipped: list = []         # (src, dst) of dropped hops
@@ -179,13 +221,20 @@ class BudgetedTransport(MeteredTransport):
         hop."""
         shape = tuple(block.shape)
         costs = self.budget.serve_costs(shape)
+        floor = 0
+        if self.serve_controller is not None:
+            # the serve policy's rung floors the walk, exactly like the
+            # training controller on interchange hops: the budget may
+            # degrade coarser than the policy asked for, never finer
+            from repro.control.adaptive import jitted_serve_controller
+            floor = int(jitted_serve_controller(self.serve_controller)(block))
         link = (src.name, dst.name)
         rem_s = (math.inf if self.budget.session_bits is None
                  else self.budget.session_bits - self.log.total_bits
                  - self.carryover_bits)
         rem_l = (math.inf if self.budget.link_bits is None
                  else self.budget.link_bits - self.link_spent.get(link, 0))
-        idx = self.budget.choose_costs(costs, rem_s, rem_l)
+        idx = self.budget.choose_costs(costs, rem_s, rem_l, floor)
         if idx is None:
             if rem_s < min(costs):
                 self.exhausted = True

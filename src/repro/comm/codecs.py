@@ -281,6 +281,24 @@ def make_codec(name: str, **kw) -> Codec:
     return CODECS[name](**kw)
 
 
+def serve_key(state_key, request=None):
+    """The serve-channel key for one prediction call: the session's (evolved)
+    PRNG key folded with the SERVE tag, then — for request-keyed serving
+    (the serve engine's stream of independent queries against one resident
+    session) — with the integer request tag.  Pure fold_ins: no PRNG state
+    is consumed, so serving never shifts the fit stream, repeated serves of
+    the same request are deterministic, and distinct requests draw
+    independent channel noise.  Both engine backends and the batched serve
+    engine derive their keys here, which is what makes a batched slot
+    bit-identical to a standalone ``predict_distributed(request=...)``."""
+    key = jax.random.fold_in(state_key, SERVE_FOLD)
+    if request is not None:
+        if not isinstance(request, jax.Array):
+            request = int(request)      # trace-safe: tracers pass through
+        key = jax.random.fold_in(key, request)
+    return key
+
+
 # ===================================================================== channel
 def channel_apply(codec, privacy, w, hop_key, state, qmax=None):
     """One hop through the wire: DP noise on the outgoing vector, then the

@@ -26,12 +26,13 @@ are part of the protocol state: they checkpoint through ``SessionState``
 resets.
 """
 from repro.control.accounting import ACCOUNTANTS, RDPAccountant, make_accountant
-from repro.control.adaptive import (AdaptiveController, controller_rung,
-                                    jitted_controller)
+from repro.control.adaptive import (AdaptiveController, ServeController,
+                                    controller_rung, jitted_controller,
+                                    jitted_serve_controller)
 from repro.control.scheduler import BudgetAwareScheduler
 
 __all__ = [
     "ACCOUNTANTS", "AdaptiveController", "BudgetAwareScheduler",
-    "RDPAccountant", "controller_rung", "jitted_controller",
-    "make_accountant",
+    "RDPAccountant", "ServeController", "controller_rung",
+    "jitted_controller", "jitted_serve_controller", "make_accountant",
 ]

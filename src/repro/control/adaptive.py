@@ -167,6 +167,111 @@ class AdaptiveController:
         return rung, ema
 
 
+SERVE_STATS = ("margin", "entropy")
+
+#: Per-statistic default threshold ladders for the 4-rung DEFAULT_LADDER on
+#: the serve path (descending).  Margin-derived uncertainty on a trained
+#: ensemble's score blocks concentrates low, so the cuts sit well below the
+#: training-path resid cuts; an unsure block (many near-tied rows) buys
+#: fp32/fp16, a confident one degrades to int8/int4 — coarse rounding
+#: cannot flip an argmax that top-2 margins already separate.
+DEFAULT_SERVE_THRESHOLDS = {
+    "margin": (0.8, 0.5, 0.2),
+    "entropy": (0.9, 0.6, 0.3),
+}
+
+
+@dataclass(frozen=True)
+class ServeController:
+    """Per-block codec-rung policy for prediction-time ScoreBlockMsg traffic.
+
+    The training controller (:class:`AdaptiveController`) reads the hop
+    innovation of the ignorance vector; serve traffic has no analogous
+    recurrence — each [n, K] score block is an independent release — so the
+    serve policy is *stateless*: observe one scalar uncertainty statistic of
+    the outgoing block, map it through descending thresholds to a ladder
+    rung.  Two statistics, both in [0, 1], higher = more precision:
+
+      * ``"margin"`` (default) — 1 minus the mean per-row top-2 margin of
+        the row-normalized block: near-tied votes (the rows where coarse
+        quantization could flip the argmax) read as high uncertainty.
+      * ``"entropy"`` — mean per-row entropy H(p)/log K of the normalized
+        block: spread vote mass buys precision, collapsed mass degrades.
+
+    Pure fixed-shape functions of the raw (pre-noise) block: the eager
+    transports route through :func:`jitted_serve_controller`, the compiled
+    serve step (``core.compiled.make_serve_fn``) embeds :meth:`rung_for`
+    branchlessly — both backends pick identical rungs per block.  Under a
+    bit budget the rung floors the degrade-then-skip ladder walk, exactly
+    like the training controller (``BudgetSpec.choose_costs(floor=)``).
+    """
+    ladder: tuple = DEFAULT_LADDER
+    thresholds: tuple | None = None
+    stat: str = "margin"
+
+    def __post_init__(self):
+        if not self.ladder:
+            raise ValueError("serve-controller ladder must hold at least "
+                             "one codec")
+        for c in self.ladder:
+            if not isinstance(c, Codec) or c.stateful:
+                raise ValueError(
+                    f"serve-controller ladder entries must be stateless "
+                    f"Codecs, got {c!r} (serve hops have no next call to "
+                    f"defer error-feedback state to)")
+        if self.stat not in SERVE_STATS:
+            raise ValueError(f"unknown serve stat {self.stat!r}; expected "
+                             f"{SERVE_STATS}")
+        if self.thresholds is None:
+            cuts = DEFAULT_SERVE_THRESHOLDS[self.stat][:len(self.ladder) - 1]
+            object.__setattr__(self, "thresholds", tuple(cuts))
+        if len(self.thresholds) != len(self.ladder) - 1:
+            raise ValueError(
+                f"need len(ladder) - 1 = {len(self.ladder) - 1} thresholds "
+                f"(one per rung boundary), got {len(self.thresholds)}")
+        if list(self.thresholds) != sorted(self.thresholds, reverse=True):
+            raise ValueError(
+                f"thresholds must descend (rung 0 is the best codec), got "
+                f"{self.thresholds}")
+
+    def observe(self, block: jnp.ndarray) -> jnp.ndarray:
+        """The block's uncertainty statistic, in [0, 1] (higher = finer
+        rung).  ``block`` is the raw outgoing [n, K] score block — observed
+        before DP noise, so the policy reads the sender's own signal."""
+        k = int(block.shape[-1])
+        # row-normalize the coded-vote mass into a distribution: shift each
+        # row to nonnegative (coded votes carry -1/(K-1) off-class terms),
+        # then divide by the row sum
+        b = block.astype(jnp.float32)
+        b = b - jnp.min(b, axis=-1, keepdims=True)
+        p = b / jnp.maximum(jnp.sum(b, axis=-1, keepdims=True), 1e-12)
+        if self.stat == "margin":
+            top2 = jax.lax.top_k(p, min(2, k))[0]
+            gap = (top2[..., 0] - top2[..., 1]) if k > 1 \
+                else jnp.ones(p.shape[:-1], jnp.float32)
+            return 1.0 - jnp.mean(gap)
+        h = -jnp.sum(jnp.where(p > 0, p * jnp.log(jnp.maximum(p, 1e-30)),
+                               0.0), axis=-1)
+        return jnp.mean(h) / math.log(max(k, 2))
+
+    def rung_for(self, block: jnp.ndarray) -> jnp.ndarray:
+        """The chosen ladder rung (int32) for one outgoing block —
+        branchless (``sum(stat < thresholds)``), so it traces into the
+        compiled serve program with no control flow."""
+        s = self.observe(block)
+        cuts = jnp.asarray(self.thresholds, jnp.float32)
+        return jnp.sum((s < cuts).astype(jnp.int32))
+
+
+@functools.lru_cache(maxsize=64)
+def jitted_serve_controller(controller: ServeController):
+    """Cached jit of :meth:`ServeController.rung_for` — the eager
+    ``Transport.serve_block`` routes rung choice through this so both
+    backends run the exact same XLA computation (a last-ulp statistic
+    difference at a threshold boundary would flip a rung)."""
+    return jax.jit(controller.rung_for)
+
+
 def controller_rung(controller: AdaptiveController, w_prev, w_out, ema):
     """Functional alias of :meth:`AdaptiveController.step` (sweep-friendly
     entry point for tests and benchmarks)."""

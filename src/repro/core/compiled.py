@@ -106,6 +106,13 @@ class SessionPlan:
     # With a budget too, the controller's rung is a floor on the ladder
     # walk — the same composition rule the eager BudgetedTransport applies.
     controller: Any = None
+    # Serve-path adaptive policy (repro.control.adaptive.ServeController):
+    # picks the serve rung per [n, K] block from its observed statistic
+    # (per-row margin or normalized entropy).  Stateless — serve hops are
+    # independent, so no EMA rides the carry.  With a budget too, the
+    # policy's rung floors the same ladder walk, mirroring the eager
+    # BudgetedTransport.serve_block composition.
+    serve_controller: Any = None
 
     @property
     def num_agents(self) -> int:
@@ -125,10 +132,14 @@ class SessionPlan:
     @property
     def serve_ladder(self) -> tuple:
         """The rungs the traced serve step evaluates for [n, K] score
-        blocks: the budget ladder, or the single serve codec (falling back
-        to the training codec; a None rung ships raw fp32)."""
+        blocks: the budget ladder (== the serve controller's, when both are
+        set), the serve controller's ladder, or the single serve codec
+        (falling back to the training codec; a None rung ships raw
+        fp32)."""
         if self.budget is not None:
             return self.budget.ladder
+        if self.serve_controller is not None:
+            return self.serve_controller.ladder
         return (self.serve_codec if self.serve_codec is not None
                 else self.codec,)
 
@@ -174,7 +185,8 @@ def plan_for(learners: Sequence, num_classes: int, *, max_rounds: int = 20,
              use_kernel: bool = True,
              kernel_interpret: bool | None = None,
              codec=None, privacy=None, budget=None,
-             serve_codec=None, controller=None) -> SessionPlan:
+             serve_codec=None, controller=None,
+             serve_controller=None) -> SessionPlan:
     """Build a SessionPlan from eager Learners (they must all be
     ``functional`` — have a LearnerCore)."""
     cores = []
@@ -188,6 +200,11 @@ def plan_for(learners: Sequence, num_classes: int, *, max_rounds: int = 20,
         cores.append(core)
     if budget is not None or controller is not None:
         codec = None       # the budget/controller ladder drives codec choice
+    if (budget is not None and serve_controller is not None
+            and tuple(serve_controller.ladder) != tuple(budget.ladder)):
+        raise ValueError(
+            "a serve controller on a budgeted plan must share the budget's "
+            f"ladder, got {serve_controller.ladder} vs {budget.ladder}")
     return SessionPlan(cores=tuple(cores), num_classes=num_classes,
                        max_rounds=max_rounds, upstream=upstream,
                        stop_on_negative_alpha=stop_on_negative_alpha,
@@ -195,7 +212,8 @@ def plan_for(learners: Sequence, num_classes: int, *, max_rounds: int = 20,
                        use_kernel=use_kernel,
                        kernel_interpret=kernel_interpret,
                        codec=codec, privacy=privacy, budget=budget,
-                       serve_codec=serve_codec, controller=controller)
+                       serve_codec=serve_codec, controller=controller,
+                       serve_controller=serve_controller)
 
 
 # ==================================================================== lowering
@@ -502,18 +520,22 @@ def make_serve_fn(plan: SessionPlan, feature_shapes: tuple,
                   qmax_arg: bool = False):
     """Lower ``plan``'s serve path into a pure callable
 
-        serve_fn(key, Xs, params, alphas, valid, rem_session, rem_link)
-            -> ServeResult
+        serve_fn(key, Xs, params, alphas, valid, rem_session, rem_link,
+                 deliver) -> ServeResult
 
     — the traced twin of ``Session.predict_distributed``.  Each agent's
     [n, K] block is its alpha-weighted coded votes over its own components,
     accumulated by a ``lax.scan`` over rounds so float addition order
     matches the eager ``AgentEndpoint.score_block`` bit for bit; non-head
-    blocks then cross the serve channel — DP noise, budget rung choice via
-    the same ladder walk as ``BudgetSpec.choose_costs``, codec roundtrip —
+    blocks then cross the serve channel — DP noise, adaptive/budget rung
+    choice via the same rules the eager transports apply, codec roundtrip —
     before the head sums and argmaxes.  ``rem_session`` / ``rem_link`` [M]
     are the remaining-budget counters (int32) the walk starts from; ignored
-    by unbudgeted plans.  ``qmax_arg`` re-parameterizes a QuantCodec serve
+    by unbudgeted plans.  ``deliver`` [M] bool gates which non-head blocks
+    cross the wire at all: a False slot contributes nothing, books no bits
+    and records no release — the serve engine's degrade-to-head-only
+    admission outcome (``deliver = [True, False, ...]``); all-True is a
+    normal serve.  ``qmax_arg`` re-parameterizes a QuantCodec serve
     channel's clipping level as a traced trailing argument for codec sweeps
     (:func:`quant_sweep_run`).
     """
@@ -524,14 +546,16 @@ def make_serve_fn(plan: SessionPlan, feature_shapes: tuple,
     k = plan.num_classes
     cores = plan.cores
     privacy, budget = plan.privacy, plan.budget
+    serve_controller = plan.serve_controller
     ladder = plan.serve_ladder
     if qmax_arg:
         from repro.comm.codecs import QuantCodec
-        if budget is not None or not isinstance(ladder[0], QuantCodec):
+        if budget is not None or serve_controller is not None \
+                or not isinstance(ladder[0], QuantCodec):
             raise ValueError("qmax_arg sweeps need a plain QuantCodec plan")
 
     def serve_fn(key, Xs, params, alphas, valid, rem_session, rem_link,
-                 qmax=None) -> ServeResult:
+                 deliver, qmax=None) -> ServeResult:
         from repro.comm.codecs import channel_apply
         n = int(Xs[0].shape[0])
         shape = (n, k)
@@ -542,6 +566,7 @@ def make_serve_fn(plan: SessionPlan, feature_shapes: tuple,
                                  f"budget counters), got {max(costs)}")
             min_cost = min(costs)
             rem_s = jnp.asarray(rem_session, jnp.int32)
+        deliver = jnp.asarray(deliver, bool)
         total = None
         blocks, sent_l, rung_l = [], [], []
         exhausted = jnp.zeros((), bool)
@@ -564,7 +589,13 @@ def make_serve_fn(plan: SessionPlan, feature_shapes: tuple,
                 rung_l.append(jnp.asarray(-1, jnp.int32))
                 total = block
                 continue
+            d_j = deliver[j]
             sub = jax.random.fold_in(key, j)
+            if serve_controller is not None:
+                # the policy reads the *raw* pre-noise block, exactly like
+                # the eager transports (serve_block observes before the
+                # channel applies)
+                c_rung = serve_controller.rung_for(block)
             if budget is not None:
                 # privacy noise is rung-independent: apply once, then
                 # codec-only roundtrips per rung — bit-identical to the
@@ -573,10 +604,18 @@ def make_serve_fn(plan: SessionPlan, feature_shapes: tuple,
                 rem = jnp.minimum(rem_s, rem_link[j])
                 rung = jnp.asarray(-1, jnp.int32)
                 for i in reversed(range(len(ladder))):
-                    rung = jnp.where(jnp.asarray(costs[i], jnp.int32) <= rem,
-                                     jnp.asarray(i, jnp.int32), rung)
-                sendable = rung >= 0
-                exhausted = exhausted | (jnp.logical_not(sendable)
+                    ok = jnp.asarray(costs[i], jnp.int32) <= rem
+                    if serve_controller is not None:
+                        # the policy rung floors the walk (budget may still
+                        # degrade coarser, never finer) — same composition
+                        # as BudgetedTransport.serve_block
+                        ok = ok & (jnp.asarray(i, jnp.int32) >= c_rung)
+                    rung = jnp.where(ok, jnp.asarray(i, jnp.int32), rung)
+                sendable = (rung >= 0) & d_j
+                # an undelivered block never consults the budget, so it
+                # cannot flip exhaustion (eager head-only degrade skips the
+                # serve hop entirely)
+                exhausted = exhausted | (d_j & (rung < 0)
                                          & (rem_s < min_cost))
                 pairs = [channel_apply(c, None, noised, sub, None)[0]
                          for c in ladder]
@@ -588,13 +627,26 @@ def make_serve_fn(plan: SessionPlan, feature_shapes: tuple,
                                   jnp.asarray(0, jnp.int32))
                 rem_s = rem_s - jnp.where(sendable, cost, 0)
                 contrib = jnp.where(sendable, blk, jnp.zeros_like(blk))
+            elif serve_controller is not None:
+                # unbudgeted adaptive serve: noise once, per-rung
+                # codec-only roundtrips, select by the policy rung — the
+                # decomposition the eager fused channel matches bit for bit
+                noised, _ = channel_apply(None, privacy, block, sub, None)
+                pairs = [channel_apply(c, None, noised, sub, None)[0]
+                         for c in ladder]
+                blk = (pairs[0] if len(pairs) == 1 else
+                       jnp.select([c_rung == i for i in range(len(ladder))],
+                                  pairs, noised))
+                sendable = d_j
+                rung = c_rung
+                contrib = jnp.where(d_j, blk, jnp.zeros_like(blk))
             else:
                 blk, _ = channel_apply(ladder[0], privacy, block, sub, None,
                                        qmax=qmax)
-                sendable = jnp.ones((), bool)
+                sendable = d_j
                 rung = jnp.asarray(0 if ladder[0] is not None else -1,
                                    jnp.int32)
-                contrib = blk
+                contrib = jnp.where(d_j, blk, jnp.zeros_like(blk))
             blocks.append(blk)
             sent_l.append(sendable)
             rung_l.append(jnp.where(sendable, rung, -1))
@@ -606,8 +658,9 @@ def make_serve_fn(plan: SessionPlan, feature_shapes: tuple,
                            exhausted=exhausted)
 
     if not qmax_arg:
-        return (lambda key, Xs, params, alphas, valid, rem_s, rem_l:
-                serve_fn(key, Xs, params, alphas, valid, rem_s, rem_l))
+        return (lambda key, Xs, params, alphas, valid, rem_s, rem_l, deliver:
+                serve_fn(key, Xs, params, alphas, valid, rem_s, rem_l,
+                         deliver))
     return serve_fn
 
 
@@ -618,12 +671,14 @@ def _serve_program(plan: SessionPlan, feature_shapes: tuple):
 
 def serve_session(plan: SessionPlan, result: SessionResult, key,
                   Xs: Sequence[jnp.ndarray], *, valid=None,
-                  rem_session=None, rem_link=None) -> ServeResult:
+                  rem_session=None, rem_link=None,
+                  deliver=None) -> ServeResult:
     """Run the traced serve step for one completed compiled session: the
     one-program distributed prediction over ``Xs`` (per-agent serve-time
     feature blocks).  ``valid`` optionally overrides ``result.valid`` (e.g.
     masked by ``max_round``); ``rem_session``/``rem_link`` seed the budget
-    counters from the live transport state (None = uncapped)."""
+    counters from the live transport state (None = uncapped); ``deliver``
+    [M] bool gates which non-head blocks ship (None = all)."""
     Xs = tuple(jnp.asarray(x) for x in Xs)
     shapes = tuple(x.shape[1:] for x in Xs)
     num = plan.num_agents
@@ -637,9 +692,74 @@ def serve_session(plan: SessionPlan, result: SessionResult, key,
     rem_s = jnp.asarray(min(int(rem_session), _INT32_MAX), jnp.int32)
     rem_l = jnp.asarray([min(int(r), _INT32_MAX) for r in rem_link],
                         jnp.int32)
+    if deliver is None:
+        deliver = jnp.ones((num,), bool)
     return _serve_program(plan, shapes)(
         key, Xs, result.params, result.alphas, jnp.asarray(valid),
-        rem_s, rem_l)
+        rem_s, rem_l, jnp.asarray(deliver, bool))
+
+
+# ================================================================ batched serve
+@functools.lru_cache(maxsize=64)
+def _serve_batch_program(plan: SessionPlan, feature_shapes: tuple,
+                         width: int):
+    fn = make_serve_fn(plan, feature_shapes)
+    num = plan.num_agents
+
+    from repro.comm.codecs import serve_key
+
+    def run(slots):
+        # the per-slot -> batch stacking happens INSIDE the jitted program:
+        # a flush costs one XLA dispatch per bucket, not O(leaves) host
+        # dispatches (host-side jnp.stack was the serve loop's bottleneck)
+        if "request" in slots[0]:
+            # slot carries (evolved session key, request id); the
+            # request-keyed serve key folds in-program — two eager fold_in
+            # dispatches per request otherwise
+            keys = jnp.stack([serve_key(s["key"], s["request"])
+                              for s in slots])
+        else:
+            keys = jnp.stack([s["key"] for s in slots])
+        Xs = tuple(jnp.stack([s["Xs"][m] for s in slots])
+                   for m in range(num))
+        params = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[s["params"] for s in slots])
+        alphas = jnp.stack([s["alphas"] for s in slots])
+        valid = jnp.stack([s["valid"] for s in slots])
+        rem_s = jnp.stack([jnp.asarray(s["rem_session"], jnp.int32)
+                           for s in slots])
+        rem_l = jnp.stack([jnp.asarray(s["rem_link"], jnp.int32)
+                           for s in slots])
+        deliver = jnp.stack([jnp.asarray(s["deliver"], bool)
+                             for s in slots])
+        return jax.vmap(fn, in_axes=(0, 0, 0, 0, 0, 0, 0, 0))(
+            keys, Xs, params, alphas, valid, rem_s, rem_l, deliver)
+
+    return jax.jit(run)
+
+
+def serve_batch(plan: SessionPlan, slots) -> ServeResult:
+    """Run one traced serve step for a whole *batch* of slots in ONE XLA
+    program — the continuous-batching primitive behind
+    :mod:`repro.serve.batcher`.
+
+    ``slots`` is a sequence of per-slot dicts, each holding what one
+    ``serve_session`` call would consume: ``key`` (the request-keyed serve
+    key), ``Xs`` (length-M tuple of [n, p_m] feature blocks), ``params`` /
+    ``alphas`` / ``valid`` (the fitted session's ``SessionResult`` fields),
+    ``rem_session`` / ``rem_link`` (int32 budget counters), and ``deliver``
+    ([M] bool admission mask).  A slot may carry ``request`` (an int
+    request id) alongside the *evolved session* key instead of a
+    pre-derived serve key — the ``serve_key`` fold then happens inside the
+    program.  Returns a ServeResult with a leading slot axis.  Slot b computes exactly what ``serve_session`` would for that
+    session and request alone — the vmap axis never mixes slots, so batched
+    serving is bit-identical to per-request serving (the pin
+    ``tests/test_serve_engine.py`` holds).  Programs cache per
+    (plan, feature_shapes, batch width): one bucket = one compile.
+    """
+    slots = tuple(dict(s) for s in slots)
+    shapes = tuple(tuple(np.shape(x)[1:]) for x in slots[0]["Xs"])
+    return _serve_batch_program(plan, shapes, len(slots))(slots)
 
 
 # ================================================================= codec sweep
@@ -661,7 +781,8 @@ def _sweep_serve_program(plan: SessionPlan, feature_shapes: tuple):
         serve = srv(jax.random.fold_in(key, SERVE_FOLD), serve_Xs,
                     res.params, res.alphas, res.valid,
                     jnp.asarray(_INT32_MAX, jnp.int32),
-                    jnp.full((num,), _INT32_MAX, jnp.int32), qmax)
+                    jnp.full((num,), _INT32_MAX, jnp.int32),
+                    jnp.ones((num,), bool), qmax)
         return res, serve
 
     return jax.jit(jax.vmap(run_one, in_axes=(0, None, None, 0, None)))

@@ -187,7 +187,8 @@ class Transport(abc.ABC):
     """
 
     def __init__(self, codec=None, privacy=None, serve_codec=None,
-                 controller=None, accountant=None) -> None:
+                 controller=None, accountant=None,
+                 serve_controller=None) -> None:
         self._endpoints: dict[str, "AgentEndpoint"] = {}
         if controller is not None:
             if codec is not None:
@@ -196,6 +197,10 @@ class Transport(abc.ABC):
                     "ladder; drop codec= (or pass the codec as a one-rung "
                     "controller ladder)")
             codec = controller.ladder[0]
+        if serve_controller is not None and serve_codec is not None:
+            raise ValueError(
+                "a serve controller picks the serve rung per score block "
+                "through its ladder; drop serve_codec=")
         self.codec = codec
         self.privacy = privacy
         # serve-path codec override: prediction-time ScoreBlockMsg traffic
@@ -206,6 +211,10 @@ class Transport(abc.ABC):
         self.controller = controller
         self.ctrl_state = (None if controller is None
                            else controller.init_state())
+        # per-block serve rung policy (repro.control.adaptive
+        # .ServeController): stateless — each block's uncertainty statistic
+        # picks its own codec rung, no EMA to checkpoint
+        self.serve_controller = serve_controller
         if accountant is not None and privacy is None:
             raise ValueError("an accountant without a privacy mechanism has "
                              "nothing to account; pass privacy= too")
@@ -224,6 +233,10 @@ class Transport(abc.ABC):
     def effective_serve_codec(self):
         if self.serve_codec is not None:
             return self.serve_codec
+        if self.serve_controller is not None:
+            # the serve controller picks the rung per block inside
+            # serve_block; there is no single static serve codec
+            return None
         if self.controller is not None:
             # the controller is a training-interchange policy (its entropy
             # statistic is defined on the ignorance vector, not on score
@@ -235,7 +248,9 @@ class Transport(abc.ABC):
 
     @property
     def has_serve_channel(self) -> bool:
-        return self.effective_serve_codec is not None or self.privacy is not None
+        return (self.effective_serve_codec is not None
+                or self.serve_controller is not None
+                or self.privacy is not None)
 
     def bind(self, endpoints: Sequence["AgentEndpoint"]) -> None:
         self._endpoints = {ep.name: ep for ep in endpoints}
@@ -323,6 +338,13 @@ class Transport(abc.ABC):
         serve calls are independent, there is no next hop to defer mass to.
         """
         codec = self.effective_serve_codec
+        if self.serve_controller is not None and codec is None:
+            # per-block rung policy: the controller reads the raw outgoing
+            # block (pre-noise) through the cached-jit program the compiled
+            # serve step embeds, so both backends pick identical rungs
+            from repro.control.adaptive import jitted_serve_controller
+            rung = int(jitted_serve_controller(self.serve_controller)(block))
+            codec = self.serve_controller.ladder[rung]
         wire_bits = None
         if codec is not None or self.privacy is not None:
             from repro.comm.codecs import jitted_channel
@@ -348,10 +370,11 @@ class MeteredTransport(Transport):
 
     def __init__(self, log: TransportLog | None = None, codec=None,
                  privacy=None, serve_codec=None, controller=None,
-                 accountant=None) -> None:
+                 accountant=None, serve_controller=None) -> None:
         super().__init__(codec=codec, privacy=privacy,
                          serve_codec=serve_codec, controller=controller,
-                         accountant=accountant)
+                         accountant=accountant,
+                         serve_controller=serve_controller)
         self.log = log if log is not None else TransportLog()
 
     def _on_send(self, msg: Message) -> None:
@@ -386,10 +409,11 @@ class MeshRingTransport(Transport):
                  data_axis: str = "data",
                  interpret: bool | None = None, codec=None,
                  privacy=None, serve_codec=None, controller=None,
-                 accountant=None) -> None:
+                 accountant=None, serve_controller=None) -> None:
         super().__init__(codec=codec, privacy=privacy,
                          serve_codec=serve_codec, controller=controller,
-                         accountant=accountant)
+                         accountant=accountant,
+                         serve_controller=serve_controller)
         self.mesh = mesh
         self.agent_axis = agent_axis
         self.data_axis = data_axis
@@ -911,7 +935,7 @@ class Session:
 
     def predict_distributed(self, Xs: Sequence[jnp.ndarray] | None = None,
                             max_round: int | None = None, *,
-                            key=None) -> jnp.ndarray:
+                            key=None, request=None) -> jnp.ndarray:
         """Prediction as the protocol actually runs it: every endpoint ships
         its [n, K] ScoreBlockMsg to the head agent, which sums and argmaxes.
 
@@ -922,12 +946,16 @@ class Session:
         degrades the answer toward head-only prediction instead of booking
         bits the budget cannot afford.  ``key`` seeds the serve channel
         (stochastic rounding / DP noise); by default it folds off the
-        session's current PRNG key with the SERVE tag, so serving never
-        perturbs the fit stream and resumed sessions serve identically."""
+        session's current PRNG key with the SERVE tag (plus the integer
+        ``request`` tag when given — request-keyed serving: distinct
+        requests against one session draw independent channel noise, and
+        the serve engine's batched slots derive the identical key), so
+        serving never perturbs the fit stream and resumed sessions serve
+        identically."""
         head = self.endpoints[0]
         if key is None and self.transport.has_serve_channel:
-            from repro.comm.codecs import SERVE_FOLD
-            key = jax.random.fold_in(self.state.key, SERVE_FOLD)
+            from repro.comm.codecs import serve_key
+            key = serve_key(self.state.key, request)
         total = None
         for i, ep in enumerate(self.endpoints):
             X = None if Xs is None else Xs[i]
@@ -1116,7 +1144,8 @@ class Protocol:
             codec=self.transport.codec, privacy=self.transport.privacy,
             budget=getattr(self.transport, "budget", None),
             serve_codec=self.transport.serve_codec,
-            controller=self.transport.controller)
+            controller=self.transport.controller,
+            serve_controller=self.transport.serve_controller)
         result = compiled.compiled_session(
             plan, key, tuple(ep.X for ep in endpoints), classes)
         fitted = compiled.fitted_from_result(
@@ -1177,7 +1206,7 @@ class Protocol:
     # ---- serve path ---------------------------------------------------------
     def predict_distributed(self, Xs: Sequence[jnp.ndarray] | None = None,
                             max_round: int | None = None, *,
-                            key=None) -> jnp.ndarray:
+                            key=None, request=None) -> jnp.ndarray:
         """Distributed prediction after :meth:`fit`, on either backend:
         every endpoint ships its [n, K] ScoreBlockMsg to the head agent
         through the transport's serve channel (codec, DP noise, budget
@@ -1188,8 +1217,9 @@ class Protocol:
 
         The default serve ``key`` is the same on both backends: the
         session's *evolved* PRNG key (post-run ``state.key``) folded with
-        the SERVE tag — the only derivation a resumed session can also
-        reproduce, since it no longer knows the original fit key."""
+        the SERVE tag (and the integer ``request`` tag when given) — the
+        only derivation a resumed session can also reproduce, since it no
+        longer knows the original fit key."""
         if self.backend == "eager":
             if self._session is None:
                 raise RuntimeError("predict_distributed needs a completed "
@@ -1197,14 +1227,15 @@ class Protocol:
                                    "Session.predict_distributed directly)")
             # key=None: the Session derives the default from its evolved
             # state.key, matching the compiled branch below
-            return self._session.predict_distributed(Xs, max_round, key=key)
+            return self._session.predict_distributed(Xs, max_round, key=key,
+                                                     request=request)
         from repro.core import compiled
         if self._compiled_ctx is None:
             raise RuntimeError("predict_distributed needs a completed fit()")
         endpoints, plan, result = self._compiled_ctx
         if key is None and self.transport.has_serve_channel:
-            from repro.comm.codecs import SERVE_FOLD
-            key = jax.random.fold_in(self._evolved_key(result), SERVE_FOLD)
+            from repro.comm.codecs import serve_key
+            key = serve_key(self._evolved_key(result), request)
         Xs_serve = (tuple(ep.X for ep in endpoints) if Xs is None
                     else tuple(jnp.asarray(x) for x in Xs))
         valid = result.valid

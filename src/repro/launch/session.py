@@ -24,7 +24,8 @@ import jax.numpy as jnp
 from repro.comm import (BudgetSpec, BudgetedTransport, GaussianMechanism,
                         make_codec)
 from repro.control import (AdaptiveController, BudgetAwareScheduler,
-                           make_accountant)
+                           ServeController, make_accountant)
+from repro.control.adaptive import SERVE_STATS
 from repro.control.adaptive import STATS as CONTROLLER_STATS
 from repro.core.engine import (InProcessTransport, MeshRingTransport,
                                MeteredTransport, Protocol, SessionConfig,
@@ -73,6 +74,9 @@ def _print_comm(transport, show_ema=True):
         print(line)
     if transport.serve_codec is not None:
         print(f"serve_codec={type(transport.serve_codec).__name__}")
+    if transport.serve_controller is not None:
+        print(f"serve_controller: stat={transport.serve_controller.stat},"
+              f"rungs={len(transport.serve_controller.ladder)}")
     if hasattr(transport, "budget"):
         print(f"budget: spent={transport.total_bits}b,"
               f"skipped_hops={len(transport.skipped)},"
@@ -141,6 +145,16 @@ def main():
                          "front-loading precision while the signal is "
                          "high; replaces a fixed --codec, and floors the "
                          "--byte-budget ladder walk when both are set")
+    ap.add_argument("--serve-controller", default="",
+                    choices=[""] + list(SERVE_STATS),
+                    help="serve-path adaptive policy (repro.control): pick "
+                         "the ScoreBlockMsg codec rung per block from this "
+                         "statistic of the outgoing [n, K] scores (margin = "
+                         "mean top1-top2 gap, entropy = normalized row "
+                         "entropy) — coarse rungs for confident blocks, "
+                         "fine for uncertain ones; replaces a fixed "
+                         "--serve-codec, and floors the --byte-budget serve "
+                         "ladder walk when both are set")
     ap.add_argument("--accountant", default="basic",
                     choices=["basic", "rdp"],
                     help="privacy accountant for --dp-epsilon releases: "
@@ -204,6 +218,9 @@ def main():
     if args.controller and args.codec:
         ap.error("--controller drives codec choice through its ladder; "
                  "drop --codec")
+    if args.serve_controller and args.serve_codec:
+        ap.error("--serve-controller drives serve codec choice through "
+                 "its ladder; drop --serve-codec")
     if args.accountant != "basic" and args.dp_epsilon <= 0:
         ap.error(f"--accountant {args.accountant} accounts --dp-epsilon "
                  f"releases; set --dp-epsilon too")
@@ -223,10 +240,13 @@ def main():
                   else None)
     controller = (AdaptiveController(stat=args.controller)
                   if args.controller else None)
+    serve_controller = (ServeController(stat=args.serve_controller)
+                        if args.serve_controller else None)
     if args.byte_budget > 0:
         transport = BudgetedTransport(
             BudgetSpec(session_bits=args.byte_budget * 8), privacy=privacy,
-            controller=controller, accountant=accountant)
+            controller=controller, accountant=accountant,
+            serve_controller=serve_controller)
     else:
         codec = make_codec(args.codec) if args.codec else None
         serve_codec = (make_codec(args.serve_codec) if args.serve_codec
@@ -234,7 +254,8 @@ def main():
         transport = TRANSPORTS[args.transport](codec=codec, privacy=privacy,
                                                serve_codec=serve_codec,
                                                controller=controller,
-                                               accountant=accountant)
+                                               accountant=accountant,
+                                               serve_controller=serve_controller)
     engine = Protocol(SessionConfig(num_classes=ds.num_classes,
                                     max_rounds=args.rounds,
                                     upstream=upstream),
@@ -265,7 +286,7 @@ def main():
                for k in ("dataset", "n", "variant", "learner", "depth",
                          "steps", "seed", "codec", "serve_codec",
                          "byte_budget", "dp_epsilon", "controller",
-                         "accountant", "scheduler")}
+                         "accountant", "scheduler", "serve_controller")}
     cfg_path = os.path.join(args.ckpt_dir or ".", "cli_config.json")
     if args.resume:
         if not args.ckpt_dir:
@@ -279,7 +300,7 @@ def main():
             saved = {"learner": "tree", "steps": 150, "codec": "",
                      "serve_codec": "", "byte_budget": 0, "dp_epsilon": 0.0,
                      "controller": "", "accountant": "basic",
-                     "scheduler": "", **saved}
+                     "scheduler": "", "serve_controller": "", **saved}
             if saved != run_cfg:
                 ap.error(f"--resume config mismatch: checkpoint was written "
                          f"with {saved}, this run is {run_cfg}")

@@ -1,0 +1,35 @@
+"""Serve subsystem: continuous batching, resident session cache, and
+per-tenant admission control for prediction traffic.
+
+Training produced fitted protocols; this package turns them into a
+*service*.  Three layers, each independently testable:
+
+  * :mod:`repro.serve.admission` — the per-tenant gate (byte budget +
+    (ε, δ) ledger) that runs BEFORE any work, with deny /
+    degrade-to-head-only / accept outcomes and per-tenant counters.
+  * :mod:`repro.serve.cache`     — LRU residency over servable session
+    states with bit-exact checkpoint spill/restore
+    (:func:`repro.train.checkpoint.save_structured`).
+  * :mod:`repro.serve.batcher`   — continuous batching: requests bucket by
+    (plan, shapes) into fixed-shape slots and run as ONE vmapped compiled
+    serve program per bucket (:func:`repro.core.compiled.serve_batch`).
+
+:class:`repro.serve.engine.ServeEngine` composes them behind
+``submit(tenant, session_id, X_block)`` / ``flush()``; the synthetic
+workload driver lives in ``repro.launch.serve_fleet``.  The load-bearing
+invariant: batched serving is bit-identical to per-request serving —
+predictions, booked wire bits, accountant releases
+(``tests/test_serve_engine.py``).
+"""
+from repro.serve.admission import (ACCEPT, DEGRADE, DENY, AdmissionController,
+                                   AdmissionPolicy, Decision, TenantAccount)
+from repro.serve.batcher import Batcher, Slot
+from repro.serve.cache import ServeSessionState, SessionCache
+from repro.serve.engine import ServeEngine, ServeOutcome, SessionMeta
+
+__all__ = [
+    "ACCEPT", "DEGRADE", "DENY", "AdmissionController", "AdmissionPolicy",
+    "Batcher", "Decision", "ServeEngine", "ServeOutcome",
+    "ServeSessionState", "SessionCache", "SessionMeta", "Slot",
+    "TenantAccount",
+]

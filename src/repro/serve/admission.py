@@ -1,0 +1,175 @@
+"""Per-tenant admission control for prediction traffic.
+
+A serve fleet fields requests from many tenants against many resident
+sessions; every accepted request spends two metered resources the moment it
+is served — wire bits (the encoded ScoreBlockMsg traffic the transport
+ledger prices) and, under a DP serve channel, one (ε, δ) release per
+non-head agent.  Admission gates on BOTH ledgers *before any work is done*
+(no block is computed, no session state is touched for a denied request),
+with three outcomes:
+
+  * ``ACCEPT``  — both gates pass: the request serves the full protocol
+    prediction (every agent's block crosses the serve channel).
+  * ``DEGRADE`` — a gate fails and the policy allows degradation: the
+    request serves *head-only* (``deliver = [True, False, ...]`` on the
+    traced serve step) — no block crosses the wire, so it costs zero bits
+    and zero releases.  Accuracy degrades; the ledgers don't move.
+  * ``DENY``    — a gate fails and the policy forbids degradation: the
+    request is refused outright.
+
+The byte gate asks whether the tenant can afford the *cheapest* full serve
+(the coarsest serve-ladder rung for every non-head block): the in-channel
+degrade-then-skip walk already handles everything between best and
+cheapest, so admission only needs to know the request can ship at all.
+Accepted requests *reserve* that cheapest cost (and their DP releases)
+until ``book`` settles them with what the wire ledger actually charged —
+a burst of submits inside one batch window gates against in-flight
+reservations, not just booked spend.
+The privacy gate asks whether recording the full serve's releases would
+push the tenant past its ε cap under basic composition — the same
+per-release arithmetic :class:`repro.comm.privacy.PrivacyAccountant`
+reports.
+
+Counters (``served`` / ``degraded`` / ``denied``) are tallied per tenant
+and surfaced by the serve-fleet driver summary.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.comm.budget import TenantBudget
+
+ACCEPT = "accept"
+DEGRADE = "degrade"
+DENY = "deny"
+
+
+@dataclass(frozen=True)
+class AdmissionPolicy:
+    """What the gate does when a tenant's ledger can't cover a request.
+
+    ``allow_degrade`` picks between the DEGRADE and DENY outcomes;
+    ``epsilon_cap`` is the per-tenant total ε budget under basic
+    composition (None = no privacy gate — bits-only admission)."""
+    allow_degrade: bool = True
+    epsilon_cap: float | None = None
+
+    def __post_init__(self):
+        if self.epsilon_cap is not None and self.epsilon_cap <= 0:
+            raise ValueError(
+                f"epsilon cap must be positive, got {self.epsilon_cap}")
+
+
+@dataclass(frozen=True)
+class Decision:
+    """One admission verdict: the outcome, why (for the fleet log), and
+    what the gate *reserved* against the tenant's ledgers — an accepted
+    request in a batch window holds its cheapest-rung cost until ``book``
+    settles it, so a burst of submits cannot oversubscribe the cap before
+    the first flush lands."""
+    outcome: str
+    reason: str = ""
+    reserved_bits: int = 0
+    reserved_releases: int = 0
+
+    @property
+    def admitted(self) -> bool:
+        return self.outcome in (ACCEPT, DEGRADE)
+
+
+@dataclass
+class TenantAccount:
+    """Everything the gate tracks for one tenant: the bit ledger view, the
+    release tally, in-flight reservations, and the outcome counters."""
+    budget: TenantBudget = field(default_factory=TenantBudget)
+    released: int = 0               # DP releases charged to this tenant
+    reserved_bits: int = 0          # held by admitted, not-yet-booked reqs
+    pending_releases: int = 0
+    served: int = 0
+    degraded: int = 0
+    denied: int = 0
+
+    def counters(self) -> dict:
+        return {"served": self.served, "degraded": self.degraded,
+                "denied": self.denied, "bits": self.budget.spent,
+                "released": self.released}
+
+
+class AdmissionController:
+    """The per-tenant gate in front of the serve engine.
+
+    ``tenant_bits`` seeds every new tenant's :class:`TenantBudget` cap
+    (None = uncapped); ``mechanism`` is the serve channel's
+    :class:`~repro.comm.privacy.GaussianMechanism` (None = no privacy
+    gate).  ``admit`` runs the gates and returns a :class:`Decision`;
+    ``book`` settles the request afterwards with what it *actually* cost —
+    the engine charges the encoded bits the transport ledger booked, so the
+    tenant view and the wire ledger can never drift.
+    """
+
+    def __init__(self, policy: AdmissionPolicy | None = None, *,
+                 tenant_bits: int | None = None, mechanism=None) -> None:
+        self.policy = policy if policy is not None else AdmissionPolicy()
+        self.tenant_bits = tenant_bits
+        self.mechanism = mechanism
+        self.accounts: dict[str, TenantAccount] = {}
+
+    def account(self, tenant: str) -> TenantAccount:
+        if tenant not in self.accounts:
+            self.accounts[tenant] = TenantAccount(
+                budget=TenantBudget(bits=self.tenant_bits))
+        return self.accounts[tenant]
+
+    def admit(self, tenant: str, *, min_full_bits: int,
+              releases: int) -> Decision:
+        """Gate one request BEFORE any work: ``min_full_bits`` is the
+        cheapest-rung full-serve wire cost, ``releases`` the DP releases a
+        full serve would record (0 without a privacy channel)."""
+        acct = self.account(tenant)
+        reasons = []
+        if not acct.budget.affordable(min_full_bits + acct.reserved_bits):
+            reasons.append(
+                f"bits: need >= {min_full_bits}, remaining "
+                f"{acct.budget.remaining - acct.reserved_bits}")
+        if (self.policy.epsilon_cap is not None and self.mechanism is not None
+                and releases > 0):
+            spent = (acct.released + acct.pending_releases
+                     + releases) * self.mechanism.epsilon
+            if spent > self.policy.epsilon_cap:
+                reasons.append(
+                    f"epsilon: {releases} releases would spend "
+                    f"{spent:.3g} > cap {self.policy.epsilon_cap:.3g}")
+        if not reasons:
+            acct.reserved_bits += min_full_bits
+            acct.pending_releases += releases
+            return Decision(ACCEPT, reserved_bits=min_full_bits,
+                            reserved_releases=releases)
+        reason = "; ".join(reasons)
+        if self.policy.allow_degrade:
+            return Decision(DEGRADE, reason)
+        return Decision(DENY, reason)
+
+    def book(self, tenant: str, decision: Decision, *, bits: int = 0,
+             releases: int = 0) -> None:
+        """Settle one decided request: denied requests only bump the
+        counter; admitted ones release their reservation and charge the
+        bits actually booked on the wire ledger and the releases actually
+        recorded."""
+        acct = self.account(tenant)
+        acct.reserved_bits -= decision.reserved_bits
+        acct.pending_releases -= decision.reserved_releases
+        if decision.outcome == DENY:
+            acct.denied += 1
+            return
+        acct.budget.charge(int(bits))
+        acct.released += int(releases)
+        if decision.outcome == DEGRADE:
+            acct.degraded += 1
+        else:
+            acct.served += 1
+
+    def counters(self) -> dict:
+        """{tenant: {served, degraded, denied, bits, released}} in
+        deterministic tenant order — the serve-fleet summary payload."""
+        return {t: self.accounts[t].counters()
+                for t in sorted(self.accounts)}

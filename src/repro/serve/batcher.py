@@ -1,0 +1,169 @@
+"""Continuous batching for score-block prediction traffic.
+
+The serve fleet's hot loop: requests against live sessions accumulate in a
+queue, and ``flush`` drains it as a handful of *bucketed* vmapped serve
+programs instead of one XLA dispatch per request.  A bucket is the compile
+key — (SessionPlan, per-agent feature-block shapes) — so every slot in a
+bucket runs the exact program :func:`repro.core.compiled.serve_batch`
+compiled once for that shape; buckets pad to the next power of two (capped
+at ``max_batch``) by repeating a slot with an all-False ``deliver`` mask,
+so the pad contributes nothing, books nothing, and bounds the number of
+distinct batch shapes XLA ever sees per bucket.
+
+The vmap axis never mixes slots, so a batched slot is bit-identical to the
+same request served alone (``serve_session``) — the engine's parity pin.
+One ordering rule keeps that true for *sequences* of requests: a flush
+drains the queue in waves of at most one request per session, because two
+budgeted requests against the same session must see each other's spent
+bits, and two slots in one vmapped call cannot.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+from repro.core import compiled
+
+
+@dataclass
+class Slot:
+    """One admitted request, fully materialized for its bucket: the static
+    plan, the per-request serve key, the per-agent feature blocks, and the
+    admission ``deliver`` mask.  The session's *array* state is resolved at
+    run time (``Batcher.resolve``), not captured here — budget counters
+    advance between waves, and a capture at submit time would serve a later
+    same-session request from pre-spend counters."""
+    request_id: int
+    session_id: str
+    tenant: str
+    plan: Any
+    key: Any
+    Xs: tuple
+    deliver: Any
+    decision: Any = None
+    state: Any = None               # fallback when no resolver is set
+    request: Any = None             # set -> key is the EVOLVED session key
+    #                                 and the serve key folds in-program
+
+    @property
+    def bucket(self) -> tuple:
+        return (self.plan, tuple(tuple(x.shape) for x in self.Xs))
+
+
+@dataclass
+class Batcher:
+    """Collect :class:`Slot`\\ s, run them as bucketed vmapped programs.
+
+    ``flush`` returns ``[(slot, ServeResult)]`` in request order; each
+    ServeResult is the slot's slice of the batched output (no leading
+    axis).  ``resolve`` maps a slot to its live session state (the engine
+    plugs the cache in here); ``settle`` is called per wave — BEFORE the
+    next wave runs — so budget bookkeeping lands between same-session
+    requests exactly like sequential serving.  ``batches_run`` /
+    ``slots_run`` / ``padded_slots`` meter how much batching actually
+    happened (the serve bench reads them).
+    """
+    max_batch: int = 8
+    resolve: Any = None             # slot -> ServeSessionState
+    pending: list = field(default_factory=list)
+    batches_run: int = 0
+    slots_run: int = 0
+    padded_slots: int = 0
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+
+    def add(self, slot: Slot) -> None:
+        self.pending.append(slot)
+
+    def __len__(self) -> int:
+        return len(self.pending)
+
+    # ------------------------------------------------------------- internals
+    def _pad_to(self, b: int) -> int:
+        size = 1
+        while size < b:
+            size *= 2
+        return min(size, self.max_batch)
+
+    def _waves(self) -> list:
+        """Split the queue into waves of at most one slot per session (in
+        request order), so budget counters serialize across same-session
+        requests exactly like per-request serving."""
+        waves, rest = [], self.pending
+        while rest:
+            seen, wave, deferred = set(), [], []
+            for slot in rest:
+                if slot.session_id in seen:
+                    deferred.append(slot)
+                else:
+                    seen.add(slot.session_id)
+                    wave.append(slot)
+            waves.append(wave)
+            rest = deferred
+        return waves
+
+    def _state(self, slot: Slot):
+        return self.resolve(slot) if self.resolve is not None else slot.state
+
+    def _run_chunk(self, chunk: list) -> list:
+        plan = chunk[0].plan
+        width = self._pad_to(len(chunk))
+        pad = width - len(chunk)
+        keyed = chunk[0].request is not None
+        args = [{"key": s.key, "Xs": s.Xs, "params": st.params,
+                 "alphas": st.alphas, "valid": st.valid,
+                 "rem_session": st.rem_session, "rem_link": st.rem_link,
+                 "deliver": s.deliver,
+                 **({"request": s.request} if keyed else {})}
+                for s, st in ((s, self._state(s)) for s in chunk)]
+        if pad:
+            filler = dict(args[0],
+                          deliver=np.zeros_like(np.asarray(args[0]["deliver"])))
+            args.extend([filler] * pad)
+        res = compiled.serve_batch(plan, args)
+        self.batches_run += 1
+        self.slots_run += len(chunk)
+        self.padded_slots += pad
+        # one device->host transfer per field for the WHOLE batch; per-slot
+        # slices below are then free numpy views (per-slot jax indexing was
+        # a measurable chunk of serve overhead)
+        preds, blocks, sent, codec_idx, exhausted = (
+            np.asarray(f) for f in res)
+        return [(slot, compiled.ServeResult(
+                    preds=preds[i], blocks=blocks[i], sent=sent[i],
+                    codec_idx=codec_idx[i], exhausted=exhausted[i]))
+                for i, slot in enumerate(chunk)]
+
+    # ------------------------------------------------------------------- api
+    def flush(self, settle=None) -> list:
+        out = []
+        waves = self._waves()
+        self.pending = []
+        for wave in waves:
+            buckets: dict = {}
+            for slot in wave:
+                buckets.setdefault(slot.bucket, []).append(slot)
+            wave_out = []
+            for group in buckets.values():
+                for lo in range(0, len(group), self.max_batch):
+                    wave_out.extend(
+                        self._run_chunk(group[lo:lo + self.max_batch]))
+            wave_out.sort(key=lambda pair: pair[0].request_id)
+            if settle is not None:
+                # settle this wave before the next runs: a later
+                # same-session request must start from post-spend counters
+                for slot, res in wave_out:
+                    settle(slot, res)
+            out.extend(wave_out)
+        out.sort(key=lambda pair: pair[0].request_id)
+        return out
+
+    def stats(self) -> dict:
+        return {"batches_run": self.batches_run,
+                "slots_run": self.slots_run,
+                "padded_slots": self.padded_slots,
+                "max_batch": self.max_batch}

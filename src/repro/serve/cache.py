@@ -1,0 +1,157 @@
+"""Resident-session cache: LRU over servable session states with
+checkpoint spill/restore.
+
+A serve fleet holds many fitted sessions but only ``capacity`` of them
+resident (device arrays alive); the rest are spilled to disk through the
+structured checkpoint writer (:func:`repro.train.checkpoint.save_structured`
+— the same template-free npz + manifest format protocol SessionState uses)
+and restored on next touch.  The array roundtrip is bit-exact, so a
+spilled-and-restored session serves *identically* to one that stayed
+resident — predictions, booked wire bits, accountant releases — which
+``tests/test_serve_engine.py`` pins.
+
+Only the per-session *array* state spills (:class:`ServeSessionState`);
+static host metadata (the compiled :class:`~repro.core.compiled.SessionPlan`,
+endpoint names) stays in the engine's registry — it is tiny, and plans are
+frozen dataclasses that key compiled-program caches, so they must stay the
+*same object* across spill cycles anyway.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+from collections import OrderedDict
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.checkpoint import (exists_structured, restore_structured,
+                                    save_structured)
+
+
+@dataclass
+class ServeSessionState:
+    """The array half of one servable session — everything the traced serve
+    step consumes, in spillable form.
+
+    ``params``/``alphas``/``valid`` are the fitted session's stacked
+    per-round trees (``SessionResult`` fields); ``key_data`` is the evolved
+    session PRNG key as raw uint32 (``jax.random.key_data`` — typed key
+    arrays don't survive npz, their data words do, bit for bit);
+    ``rem_session``/``rem_link`` are the live remaining-budget counters
+    (int32; INT32_MAX = uncapped) that advance as requests are served.
+    """
+    params: tuple
+    alphas: jnp.ndarray
+    valid: jnp.ndarray
+    key_data: jnp.ndarray
+    rem_session: jnp.ndarray
+    rem_link: jnp.ndarray
+
+    @property
+    def key(self):
+        # key_data never mutates for a live state, so wrap once (the serve
+        # hot loop reads this per submit)
+        if getattr(self, "_key", None) is None:
+            self._key = jax.random.wrap_key_data(jnp.asarray(self.key_data))
+        return self._key
+
+    def tree(self) -> dict:
+        return {"params": self.params, "alphas": self.alphas,
+                "valid": self.valid, "key_data": self.key_data,
+                "rem_session": self.rem_session, "rem_link": self.rem_link}
+
+    @classmethod
+    def from_tree(cls, tree: dict) -> "ServeSessionState":
+        return cls(params=tree["params"], alphas=tree["alphas"],
+                   valid=tree["valid"], key_data=tree["key_data"],
+                   rem_session=tree["rem_session"],
+                   rem_link=tree["rem_link"])
+
+
+class SessionCache:
+    """LRU cache of :class:`ServeSessionState` with disk spill.
+
+    ``put`` admits (or refreshes) a session; ``get`` returns it resident,
+    restoring from spill on a miss; both evict the least-recently-used
+    resident session to disk when the cache runs over ``capacity``.
+    ``evict`` forces a session out (the memory-pressure path the
+    spill-parity test drives).  Stats: ``hits`` (resident touches),
+    ``restores`` (spill round-trips back in), ``spills`` (evictions that
+    wrote disk).
+    """
+
+    def __init__(self, capacity: int = 8,
+                 spill_dir: str | None = None) -> None:
+        if capacity < 1:
+            raise ValueError(f"cache capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._own_dir = spill_dir is None
+        self.spill_dir = (tempfile.mkdtemp(prefix="repro_serve_spill_")
+                          if spill_dir is None else spill_dir)
+        os.makedirs(self.spill_dir, exist_ok=True)
+        self._resident: OrderedDict[str, ServeSessionState] = OrderedDict()
+        self.hits = 0
+        self.restores = 0
+        self.spills = 0
+
+    # ------------------------------------------------------------- internals
+    def _dir(self, session_id: str) -> str:
+        return os.path.join(self.spill_dir, str(session_id))
+
+    def _spill_lru(self) -> None:
+        while len(self._resident) > self.capacity:
+            sid, state = self._resident.popitem(last=False)
+            save_structured(self._dir(sid), 0, state.tree(), max_keep=1)
+            self.spills += 1
+
+    # ------------------------------------------------------------------- api
+    def __contains__(self, session_id: str) -> bool:
+        return (session_id in self._resident
+                or exists_structured(self._dir(session_id)))
+
+    def __len__(self) -> int:
+        return len(self._resident)
+
+    @property
+    def resident_ids(self) -> tuple:
+        return tuple(self._resident)
+
+    def put(self, session_id: str, state: ServeSessionState) -> None:
+        self._resident[session_id] = state
+        self._resident.move_to_end(session_id)
+        self._spill_lru()
+
+    def get(self, session_id: str) -> ServeSessionState:
+        if session_id in self._resident:
+            self._resident.move_to_end(session_id)
+            self.hits += 1
+            return self._resident[session_id]
+        if not exists_structured(self._dir(session_id)):
+            raise KeyError(f"unknown session {session_id!r} (never put, "
+                           f"or spill directory lost)")
+        tree, _, _ = restore_structured(self._dir(session_id))
+        state = ServeSessionState.from_tree(tree)
+        self.restores += 1
+        self.put(session_id, state)
+        return state
+
+    def evict(self, session_id: str) -> None:
+        """Force one session out to disk (memory pressure)."""
+        if session_id not in self._resident:
+            return
+        state = self._resident.pop(session_id)
+        save_structured(self._dir(session_id), 0, state.tree(), max_keep=1)
+        self.spills += 1
+
+    def stats(self) -> dict:
+        return {"capacity": self.capacity, "resident": len(self._resident),
+                "hits": self.hits, "restores": self.restores,
+                "spills": self.spills}
+
+    def close(self) -> None:
+        """Drop the spill directory (only if this cache created it)."""
+        if self._own_dir:
+            shutil.rmtree(self.spill_dir, ignore_errors=True)

@@ -101,6 +101,13 @@ def save_structured(directory: str, step: int, tree: PyTree,
     return path
 
 
+def exists_structured(directory: str) -> bool:
+    """Whether ``directory`` holds a restorable structured checkpoint —
+    the cold-miss vs. spilled distinction the serve-path session cache
+    (:mod:`repro.serve.cache`) gates restore on."""
+    return os.path.exists(os.path.join(directory, "latest_state.json"))
+
+
 def restore_structured(directory: str,
                        step: int | None = None) -> tuple[PyTree, Any, int]:
     """Inverse of save_structured: returns (tree, meta, step)."""

@@ -1,0 +1,420 @@
+"""Serve engine: continuous batching, resident cache, admission control.
+
+The defining pin: a request served through the batched engine is
+bit-identical to the same request served alone via
+``Protocol.predict_distributed(Xs, request=rid)`` — predictions, booked
+wire bits, and accountant releases.  Plus: budgeted same-session requests
+serialize across batching waves exactly like sequential serving; a session
+evicted to checkpoint spill and restored serves identically to one that
+stayed resident; per-tenant admission denies/degrades BEFORE any work and
+the counters add up; and the serve-path adaptive controller stays
+eager == compiled.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import (BudgetSpec, BudgetedTransport, GaussianMechanism,
+                        make_codec)
+from repro.control import ServeController
+from repro.core import compiled
+from repro.core.engine import (MeteredTransport, Protocol, SessionConfig,
+                               endpoints_for)
+from repro.data.partition import train_test_split, vertical_split
+from repro.data.synthetic import blob_fig3
+from repro.learners.logistic import LogisticRegression
+from repro.serve import (ACCEPT, DEGRADE, DENY, AdmissionController,
+                         AdmissionPolicy, Batcher, ServeEngine, Slot)
+from repro.serve.cache import ServeSessionState, SessionCache
+
+
+@pytest.fixture(scope="module")
+def blob():
+    ds = blob_fig3(jax.random.key(0), n=240)
+    tr, te = train_test_split(0, 240)
+    Xs = vertical_split(ds.X, ds.splits)
+    return ([x[tr] for x in Xs], ds.classes[tr], [x[te] for x in Xs],
+            ds.num_classes)
+
+
+def _fit(blob, make_transport, seed=11, rounds=2, steps=30,
+         backend="compiled"):
+    Xtr, ctr, _, k = blob
+    transport = make_transport()
+    proto = Protocol(SessionConfig(num_classes=k, max_rounds=rounds),
+                     transport=transport, backend=backend)
+    proto.fit(jax.random.key(seed),
+              endpoints_for([LogisticRegression(steps=steps)
+                             for _ in Xtr], Xtr), ctr)
+    return proto, transport
+
+
+def _requests(blob, sessions, count, block_n=16, seed=7):
+    _, _, Xte, _ = blob
+    rng = np.random.default_rng(seed)
+    n = int(Xte[0].shape[0])
+    out = []
+    for _ in range(count):
+        sid = sessions[rng.integers(len(sessions))]
+        rows = rng.choice(n, size=block_n, replace=False)
+        out.append((sid, tuple(jnp.asarray(np.asarray(x)[rows])
+                               for x in Xte)))
+    return out
+
+
+@pytest.fixture(scope="module")
+def fleet(blob):
+    """Three fitted DP+codec sessions sharing one plan (compiles once)."""
+    mech = GaussianMechanism(epsilon=2.0, clip=0.1)
+    protos = {
+        f"s{i}": _fit(blob, lambda: MeteredTransport(
+            serve_codec=make_codec("int8"), privacy=mech), seed=20 + i)
+        for i in range(3)}
+    return protos, mech
+
+
+# ================================================= the batched-parity pin
+def test_batched_bit_identical_to_per_request(blob, fleet):
+    """Engine-served preds, wire bits, and DP releases match the standalone
+    ``predict_distributed(request=rid)`` path for every request."""
+    protos, _ = fleet
+    engine = ServeEngine(cache_capacity=3, max_batch=4)
+    for sid, (proto, _) in protos.items():
+        engine.add_session(sid, proto)       # snapshot BEFORE baselines run
+    reqs = _requests(blob, list(protos), 10)
+    for rid, (sid, Xblk) in enumerate(reqs):
+        engine.submit("t0", sid, Xblk, request=rid)
+        if (rid + 1) % 4 == 0:
+            engine.flush()
+    engine.flush()
+
+    for rid, (sid, Xblk) in enumerate(reqs):
+        proto, transport = protos[sid]
+        n_before = len(transport.log.entries)
+        rel_before = dict(transport.accountant.releases)
+        base = proto.predict_distributed(Xblk, request=rid)
+        out = engine.outcomes[rid]
+        np.testing.assert_array_equal(out.preds, np.asarray(base))
+        # the standalone path booked the same score_block bits the engine
+        # charged this request
+        new = transport.log.entries[n_before:]
+        assert all(e["kind"] == "score_block" for e in new)
+        assert out.bits == sum(e["bits"] for e in new) > 0
+        # and the same number of DP releases
+        rel_delta = sum(transport.accountant.releases.get(a, 0)
+                        - rel_before.get(a, 0)
+                        for a in transport.accountant.releases)
+        assert out.releases == rel_delta == len(new)
+
+    # fleet-wide ledgers: engine log carries session-prefixed endpoints and
+    # per-session accountants composed exactly the served releases
+    assert engine.log.total_bits == sum(
+        o.bits for o in engine.outcomes.values())
+    for sid, (proto, transport) in protos.items():
+        meta = engine.sessions[sid]
+        served = meta.served
+        assert all(v == served for v in meta.accountant.releases.values())
+    assert engine.batcher.batches_run < len(reqs)   # it actually batched
+    engine.close()
+
+
+def test_batched_budget_waves_match_sequential(blob):
+    """Same-session requests queued in ONE flush serialize across batching
+    waves: preds, per-request bits, skips, and exhaustion match serving the
+    requests one at a time against the budgeted session."""
+    spec = BudgetSpec(session_bits=26_000)
+    proto, transport = _fit(blob, lambda: BudgetedTransport(spec))
+    engine = ServeEngine(cache_capacity=1, max_batch=8)
+    engine.add_session("s0", proto)
+    reqs = _requests(blob, ["s0"], 6)
+    for rid, (sid, Xblk) in enumerate(reqs):
+        engine.submit("t0", sid, Xblk, request=rid)
+    engine.flush()                          # one flush -> 6 serialized waves
+
+    skips_before = 0
+    for rid, (sid, Xblk) in enumerate(reqs):
+        n_before = len(transport.log.entries)
+        base = proto.predict_distributed(Xblk, request=rid)
+        out = engine.outcomes[rid]
+        np.testing.assert_array_equal(out.preds, np.asarray(base))
+        booked = sum(e["bits"] for e in transport.log.entries[n_before:])
+        assert out.bits == booked
+    # the ladder ran dry at the same point on both paths
+    meta = engine.sessions["s0"]
+    assert len(meta.skipped) > 0            # budget actually bit
+    assert meta.exhausted == transport.exhausted
+    # and the cached counters came out where the live transport's did
+    state = engine.cache.get("s0")
+    remaining = spec.session_bits - transport.log.total_bits
+    assert int(np.asarray(state.rem_session)) == remaining
+    engine.close()
+
+
+# ============================================= spill/restore bit-exactness
+def test_evicted_session_serves_bit_identically(blob, fleet):
+    """Memory pressure: a session spilled to checkpoint and restored must
+    produce bit-identical predictions, ledger, and accountant state."""
+    protos, _ = fleet
+    resident = ServeEngine(cache_capacity=3, max_batch=4)
+    pressured = ServeEngine(cache_capacity=1, max_batch=4)
+    for sid, (proto, _) in protos.items():
+        resident.add_session(sid, proto)
+        pressured.add_session(sid, proto)
+    reqs = _requests(blob, list(protos), 9, seed=13)
+    for rid, (sid, Xblk) in enumerate(reqs):
+        resident.submit("t0", sid, Xblk, request=rid)
+        pressured.submit("t0", sid, Xblk, request=rid)
+        if rid % 2 == 0:
+            resident.flush()
+            pressured.flush()
+            for s in list(pressured.cache.resident_ids):
+                pressured.cache.evict(s)    # force every session out
+    resident.flush()
+    pressured.flush()
+
+    assert pressured.cache.stats()["spills"] > 0
+    assert pressured.cache.stats()["restores"] > 0
+    for rid in range(len(reqs)):
+        a, b = resident.outcomes[rid], pressured.outcomes[rid]
+        np.testing.assert_array_equal(a.preds, b.preds)
+        assert (a.bits, a.releases) == (b.bits, b.releases)
+    for sid in protos:
+        assert (resident.sessions[sid].accountant.releases
+                == pressured.sessions[sid].accountant.releases)
+    assert resident.log.total_bits == pressured.log.total_bits
+    resident.close()
+    pressured.close()
+
+
+def test_cache_spill_roundtrip_exact(tmp_path):
+    cache = SessionCache(1, str(tmp_path))
+    mk = lambda v: ServeSessionState(
+        params=(jnp.arange(4.0) * v,), alphas=jnp.ones(3) * v,
+        valid=jnp.array([True, True, False]),
+        key_data=jax.random.key_data(jax.random.key(int(v))),
+        rem_session=jnp.asarray(1000 + int(v), jnp.int32),
+        rem_link=jnp.asarray([7, 8, 9], jnp.int32))
+    cache.put("a", mk(1.0))
+    cache.put("b", mk(2.0))                 # evicts a
+    assert cache.resident_ids == ("b",)
+    a = cache.get("a")                      # restore from spill
+    np.testing.assert_array_equal(np.asarray(a.params[0]),
+                                  np.arange(4.0))
+    np.testing.assert_array_equal(
+        np.asarray(a.key_data),
+        np.asarray(jax.random.key_data(jax.random.key(1))))
+    assert int(a.rem_session) == 1001
+    assert cache.stats()["spills"] >= 1
+    assert cache.stats()["restores"] == 1
+    with pytest.raises(KeyError):
+        cache.get("never-put")
+
+
+# ====================================================== admission control
+def test_admission_deny_degrade_and_counters(blob, fleet):
+    """Per-tenant gating happens BEFORE any work: an unaffordable request
+    degrades to head-only (books zero wire bits, zero releases) or is
+    denied outright under no-degrade; counters add up."""
+    protos, mech = fleet
+    proto, _ = protos["s0"]
+    endpoints, plan, _ = proto._compiled_ctx
+    shape = (16, plan.num_classes)
+    full = int(plan.serve_ladder[0].wire_bits(shape)) * (len(endpoints) - 1)
+    cap_bits = int(full * 1.5)              # one full request fits, not two
+    engine = ServeEngine(
+        cache_capacity=2, max_batch=4,
+        admission=AdmissionController(
+            AdmissionPolicy(allow_degrade=True),
+            tenant_bits=cap_bits, mechanism=mech))
+    engine.add_session("s0", proto)
+    reqs = _requests(blob, ["s0"], 4, seed=3)
+    decisions = [engine.submit("poor", sid, X, request=r)[1]
+                 for r, (sid, X) in enumerate(reqs)]
+    engine.flush()
+    outcomes = [d.outcome for d in decisions]
+    assert outcomes[0] == ACCEPT
+    assert DEGRADE in outcomes              # the cap bit mid-stream
+    first_deg = outcomes.index(DEGRADE)
+    assert all(o == DEGRADE for o in outcomes[first_deg:])
+    for rid, o in enumerate(outcomes):
+        out = engine.outcomes[rid]
+        assert out.preds is not None        # degraded still answers
+        if o == DEGRADE:
+            assert out.bits == 0 and out.releases == 0
+    c = engine.admission.counters()["poor"]
+    assert c["served"] == outcomes.count(ACCEPT)
+    assert c["degraded"] == outcomes.count(DEGRADE)
+    assert c["denied"] == 0
+    assert c["bits"] <= cap_bits
+    engine.close()
+
+    deny = ServeEngine(
+        cache_capacity=2, max_batch=4,
+        admission=AdmissionController(
+            AdmissionPolicy(allow_degrade=False), tenant_bits=1))
+    deny.add_session("s0", proto)
+    _, d = deny.submit("poor", "s0", reqs[0][1], request=0)
+    assert d.outcome == DENY
+    assert deny.outcomes[0].preds is None   # completed at submit, no work
+    assert len(deny.batcher) == 0
+    assert deny.admission.counters()["poor"]["denied"] == 1
+    deny.close()
+
+
+def test_admission_epsilon_cap(blob, fleet):
+    """The (epsilon, delta) ledger gates too: once a tenant's composed
+    epsilon would exceed the cap, its requests stop shipping DP blocks."""
+    protos, mech = fleet
+    proto, _ = protos["s1"]
+    m = len(proto._compiled_ctx[0])
+    # cap allows exactly one full request's (M-1) releases, not two
+    cap = mech.epsilon * (m - 1) * 1.5
+    engine = ServeEngine(
+        cache_capacity=2, max_batch=4,
+        admission=AdmissionController(
+            AdmissionPolicy(allow_degrade=True, epsilon_cap=cap),
+            mechanism=mech))
+    engine.add_session("s1", proto)
+    reqs = _requests(blob, ["s1"], 2, seed=5)
+    d0 = engine.submit("tA", "s1", reqs[0][1], request=0)[1]
+    engine.flush()
+    d1 = engine.submit("tA", "s1", reqs[1][1], request=1)[1]
+    engine.flush()
+    assert (d0.outcome, d1.outcome) == (ACCEPT, DEGRADE)
+    assert engine.outcomes[1].releases == 0
+    assert "epsilon" in d1.reason
+    engine.close()
+
+
+# ==================================== serve_batch primitive + the batcher
+def test_serve_batch_matches_serve_session_per_slot(blob, fleet):
+    """The vmap axis never mixes slots: each batched slot equals the same
+    serve_session call alone, and all-False deliver pads contribute
+    nothing."""
+    protos, _ = fleet
+    proto, _ = protos["s2"]
+    _, plan, result = proto._compiled_ctx
+    evolved = proto._evolved_key(result)
+    reqs = _requests(blob, ["s2"], 3, seed=9)
+    num = plan.num_agents
+    big = np.iinfo(np.int32).max
+
+    from repro.comm.codecs import serve_key
+    slots = [{"key": serve_key(evolved, rid), "Xs": Xblk,
+              "params": result.params, "alphas": result.alphas,
+              "valid": result.valid,
+              "rem_session": jnp.asarray(big, jnp.int32),
+              "rem_link": jnp.asarray([big] * num, jnp.int32),
+              "deliver": np.ones(num, bool)}
+             for rid, (_, Xblk) in enumerate(reqs)]
+    batched = compiled.serve_batch(plan, slots)
+    for rid, (_, Xblk) in enumerate(reqs):
+        alone = compiled.serve_session(plan, result,
+                                       serve_key(evolved, rid), Xblk)
+        np.testing.assert_array_equal(np.asarray(batched.preds[rid]),
+                                      np.asarray(alone.preds))
+        np.testing.assert_array_equal(np.asarray(batched.blocks[rid]),
+                                      np.asarray(alone.blocks))
+        np.testing.assert_array_equal(np.asarray(batched.sent[rid]),
+                                      np.asarray(alone.sent))
+
+    # padding through the Batcher: 3 slots pad to 4, results unaffected
+    batcher = Batcher(max_batch=4)
+    for rid, (_, Xblk) in enumerate(reqs):
+        batcher.add(Slot(
+            request_id=rid, session_id=f"sess{rid}", tenant="t", plan=plan,
+            key=slots[rid]["key"], Xs=Xblk, deliver=np.ones(num, bool),
+            state=ServeSessionState(
+                params=result.params, alphas=result.alphas,
+                valid=result.valid, key_data=jax.random.key_data(evolved),
+                rem_session=jnp.asarray(big, jnp.int32),
+                rem_link=jnp.asarray([big] * num, jnp.int32))))
+    out = batcher.flush()
+    assert batcher.stats()["padded_slots"] == 1
+    for slot, res in out:
+        np.testing.assert_array_equal(
+            res.preds, np.asarray(batched.preds[slot.request_id]))
+
+
+# ================================== serve-path adaptive controller parity
+@pytest.mark.parametrize("stat", ["margin", "entropy"])
+def test_serve_controller_eager_matches_compiled(blob, stat):
+    """Satellite pin: ServeController picks the same rung per block on both
+    backends — identical preds, ledger entries, accountant releases."""
+    _, _, Xte, _ = blob
+    ctl = ServeController(stat=stat)
+    mech = GaussianMechanism(epsilon=2.0, clip=0.1)
+    runs = {}
+    for backend in ("eager", "compiled"):
+        proto, transport = _fit(
+            blob, lambda: MeteredTransport(serve_controller=ctl,
+                                           privacy=mech),
+            backend=backend)
+        preds = proto.predict_distributed(Xte)
+        runs[backend] = (np.asarray(preds), transport)
+    pe, te = runs["eager"]
+    pc, tc = runs["compiled"]
+    np.testing.assert_array_equal(pe, pc)
+    assert te.log.entries == tc.log.entries
+    assert te.accountant.releases == tc.accountant.releases
+    blocks = [e for e in te.log.entries if e["kind"] == "score_block"]
+    # the controller picked a real ladder rung (encoded, below raw fp32)
+    shape = (Xte[0].shape[0], blob[3])
+    assert blocks and all(e["bits"] < 32 * shape[0] * shape[1]
+                          for e in blocks)
+
+
+def test_serve_controller_respects_budget_floor(blob):
+    """With both a budget ladder and a controller, the shipped rung is
+    never finer than what the remaining budget affords — and both backends
+    agree."""
+    ctl = ServeController(stat="margin")
+    spec = BudgetSpec(session_bits=24_000)
+    _, _, Xte, _ = blob
+    runs = {}
+    for backend in ("eager", "compiled"):
+        proto, transport = _fit(
+            blob, lambda: BudgetedTransport(spec, serve_controller=ctl),
+            backend=backend)
+        p1 = np.asarray(proto.predict_distributed(Xte))
+        p2 = np.asarray(proto.predict_distributed(Xte))
+        runs[backend] = (p1, p2, transport)
+    assert runs["eager"][2].log.entries == runs["compiled"][2].log.entries
+    np.testing.assert_array_equal(runs["eager"][0], runs["compiled"][0])
+    np.testing.assert_array_equal(runs["eager"][1], runs["compiled"][1])
+
+
+# ======================================================== engine plumbing
+def test_engine_rejects_unfit_and_duplicate(blob, fleet):
+    protos, _ = fleet
+    proto, _ = protos["s0"]
+    engine = ServeEngine(cache_capacity=2)
+    engine.add_session("s0", proto)
+    with pytest.raises(ValueError, match="already registered"):
+        engine.add_session("s0", proto)
+    eager, _ = _fit(blob, MeteredTransport, backend="eager", rounds=1,
+                    steps=5)
+    with pytest.raises(ValueError, match="compiled"):
+        engine.add_session("e0", eager)
+    with pytest.raises(KeyError):
+        engine.submit("t", "missing", [jnp.ones((4, 2))] * 3)
+    engine.close()
+
+
+def test_summary_schema(blob, fleet):
+    protos, _ = fleet
+    engine = ServeEngine(cache_capacity=2, max_batch=4)
+    for sid, (proto, _) in protos.items():
+        engine.add_session(sid, proto)
+    for rid, (sid, Xblk) in enumerate(_requests(blob, list(protos), 5)):
+        engine.submit(f"t{rid % 2}", sid, Xblk, request=rid)
+    engine.flush()
+    s = engine.summary()
+    assert set(s) == {"tenants", "cache", "batcher", "sessions",
+                      "total_bits", "requests"}
+    assert s["requests"] == 5
+    assert sum(t["served"] for t in s["tenants"].values()) == 5
+    assert s["batcher"]["slots_run"] == 5
+    engine.close()
