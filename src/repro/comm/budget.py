@@ -69,10 +69,16 @@ class BudgetSpec:
         IgnoranceMsg plus the scalar ModelWeightMsg."""
         return tuple(c.wire_bits(n) + MODEL_WEIGHT_BITS for c in self.ladder)
 
+    def payload_costs(self, shape) -> tuple:
+        """Per-ladder-rung encoded size of one bare payload of ``shape`` —
+        no accompanying ModelWeightMsg: serve-path ScoreBlockMsgs and
+        protocol-variant traffic (GradientMsg / ResidualMsg) alike."""
+        return tuple(c.wire_bits(shape) for c in self.ladder)
+
     def serve_costs(self, shape) -> tuple:
         """Per-ladder-rung cost of one prediction-time ScoreBlockMsg for an
         [n, K] block — no accompanying ModelWeightMsg on the serve path."""
-        return tuple(c.wire_bits(shape) for c in self.ladder)
+        return self.payload_costs(shape)
 
     def choose_costs(self, costs, remaining_session: float,
                      remaining_link: float, floor: int = 0) -> int | None:
@@ -243,3 +249,29 @@ class BudgetedTransport(MeteredTransport):
         self.codec = self.budget.ladder[idx]           # degrade precision
         self.link_spent[link] = self.link_spent.get(link, 0) + costs[idx]
         return super().serve_block(src, dst, block, key=key)
+
+    def ship(self, src, dst, payload, wrap, *, key=None):
+        """Budgeted protocol-variant hop (GradientMsg / ResidualMsg): the
+        same degrade-then-skip ladder walk as :meth:`interchange`, priced
+        at the bare encoded payload.  A skipped hop returns None — the
+        receiver keeps its stale state (FedAvg: the server averages without
+        this client; AL: the next agent fits yesterday's residual) — and a
+        session-budget skip flips ``exhausted`` so the engine stops
+        scheduling rounds."""
+        shape = tuple(payload.shape)
+        costs = self.budget.payload_costs(shape)
+        link = (src.name, dst.name)
+        rem_s = (math.inf if self.budget.session_bits is None
+                 else self.budget.session_bits - self.log.total_bits
+                 - self.carryover_bits)
+        rem_l = (math.inf if self.budget.link_bits is None
+                 else self.budget.link_bits - self.link_spent.get(link, 0))
+        idx = self.budget.choose_costs(costs, rem_s, rem_l)
+        if idx is None:
+            if rem_s < min(costs):
+                self.exhausted = True
+            self.skipped.append(link)
+            return None
+        self.codec = self.budget.ladder[idx]           # degrade precision
+        self.link_spent[link] = self.link_spent.get(link, 0) + costs[idx]
+        return super().ship(src, dst, payload, wrap, key=key)

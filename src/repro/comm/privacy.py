@@ -40,6 +40,11 @@ class GaussianMechanism:
     epsilon: float = 1.0
     delta: float = 1e-5
     clip: float = 1.0
+    # ignorance scores are nonnegative mass, so the default clamps the
+    # noised vector at zero (post-processing, free under DP); signed
+    # payloads (FedAvg model deltas, Assisted-Learning residuals) set
+    # nonneg=False and keep the raw noised vector
+    nonneg: bool = True
 
     def __post_init__(self):
         if self.epsilon <= 0 or not (0 < self.delta < 1) or self.clip <= 0:
@@ -53,12 +58,15 @@ class GaussianMechanism:
             / self.epsilon
 
     def apply(self, x: jnp.ndarray, key) -> jnp.ndarray:
-        """Clip to the L2 ball, add calibrated noise, clamp at zero."""
+        """Clip to the L2 ball, add calibrated noise, clamp at zero (when
+        the payload is nonnegative mass)."""
         x = x.astype(jnp.float32)
         norm = jnp.sqrt(jnp.sum(x * x))
         x = x * jnp.minimum(1.0, self.clip / jnp.maximum(norm, 1e-12))
         noised = x + self.sigma * jax.random.normal(key, x.shape,
                                                     jnp.float32)
+        if not self.nonneg:
+            return noised
         return jnp.maximum(noised, 0.0)
 
 

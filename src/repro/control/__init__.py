@@ -25,7 +25,10 @@ are part of the protocol state: they checkpoint through ``SessionState``
 (the comm snapshot) and survive pause/resume with no free bits and no ε
 resets.
 """
-from repro.control.accounting import ACCOUNTANTS, RDPAccountant, make_accountant
+from repro.control.accounting import (ACCOUNTANTS, RDPAccountant,
+                                      SubsampledRDPAccountant,
+                                      make_accountant, sgm_rdp,
+                                      subsampled_rdp_epsilon)
 from repro.control.adaptive import (AdaptiveController, ServeController,
                                     controller_rung, jitted_controller,
                                     jitted_serve_controller)
@@ -33,6 +36,7 @@ from repro.control.scheduler import BudgetAwareScheduler
 
 __all__ = [
     "ACCOUNTANTS", "AdaptiveController", "BudgetAwareScheduler",
-    "RDPAccountant", "ServeController", "controller_rung",
-    "jitted_controller", "jitted_serve_controller", "make_accountant",
+    "RDPAccountant", "ServeController", "SubsampledRDPAccountant",
+    "controller_rung", "jitted_controller", "jitted_serve_controller",
+    "make_accountant", "sgm_rdp", "subsampled_rdp_epsilon",
 ]

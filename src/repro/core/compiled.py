@@ -234,6 +234,34 @@ def _make_reweight(plan: SessionPlan, n: int):
 _INT32_MAX = np.iinfo(np.int32).max
 
 
+def ladder_walk(costs, rem, floor=None):
+    """Branchless degrade-then-skip ladder walk: the traced twin of
+    :meth:`repro.comm.budget.BudgetSpec.choose_costs`.  ``costs`` are the
+    static per-rung bit costs (ints or int32 scalars, best rung first),
+    ``rem`` the remaining-budget int32 scalar, ``floor`` an optional
+    controller rung the walk never goes finer than.  Returns the chosen
+    rung as int32, -1 = skip.  Shared by the ASCII round body, the traced
+    serve step, and the FedAvg lowering (repro.scenarios.compiled) so every
+    budgeted program walks the one rule."""
+    rung = jnp.asarray(-1, jnp.int32)
+    for i in reversed(range(len(costs))):
+        ok = jnp.asarray(costs[i], jnp.int32) <= rem
+        if floor is not None:
+            ok = ok & (jnp.asarray(i, jnp.int32) >= floor)
+        rung = jnp.where(ok, jnp.asarray(i, jnp.int32), rung)
+    return rung
+
+
+def rung_select(rung, values, default):
+    """Pick ``values[rung]`` (with ``default`` at rung -1) — the payload
+    half of the ladder walk, single-rung ladders short-circuiting exactly
+    like the inlined originals."""
+    if len(values) == 1:
+        return values[0]
+    return jnp.select([rung == i for i in range(len(values))], values,
+                      default)
+
+
 def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
                     qmax_arg: bool = False):
     """Lower ``plan`` for per-agent feature shapes into a pure callable
@@ -349,16 +377,11 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
                             rem = jnp.minimum(
                                 rem, jnp.asarray(budget.link_bits, jnp.int32)
                                 - carry["link"][j])
-                        rung = jnp.asarray(-1, jnp.int32)
-                        for i in reversed(range(len(ladder))):
-                            ok = costs[i] <= rem
-                            if controller is not None:
-                                # the controller rung is a floor on the
-                                # walk: never finer, budget may go coarser
-                                ok = ok & (jnp.asarray(i, jnp.int32)
-                                           >= c_rung)
-                            rung = jnp.where(ok, jnp.asarray(i, jnp.int32),
-                                             rung)
+                        # the controller rung is a floor on the walk:
+                        # never finer, budget may go coarser
+                        rung = ladder_walk(
+                            costs, rem,
+                            floor=c_rung if controller is not None else None)
                         sendable = rung >= 0
                     elif controller is not None:
                         rung = c_rung
@@ -376,12 +399,7 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
                                                 None)
                     pairs = [channel_apply(c, None, w_noised, sub, state_j,
                                            qmax=qmax) for c in ladder]
-                    if len(pairs) == 1:
-                        w_chan = pairs[0][0]
-                    else:
-                        w_chan = jnp.select(
-                            [rung == i for i in range(len(ladder))],
-                            [p[0] for p in pairs], w_upd)
+                    w_chan = rung_select(rung, [p[0] for p in pairs], w_upd)
                     sent = valid & sendable
                     w = jnp.where(sent, w_chan, w)
                     if stateful:
@@ -602,15 +620,12 @@ def make_serve_fn(plan: SessionPlan, feature_shapes: tuple,
                 # eager fused channel (see the round_body note above)
                 noised, _ = channel_apply(None, privacy, block, sub, None)
                 rem = jnp.minimum(rem_s, rem_link[j])
-                rung = jnp.asarray(-1, jnp.int32)
-                for i in reversed(range(len(ladder))):
-                    ok = jnp.asarray(costs[i], jnp.int32) <= rem
-                    if serve_controller is not None:
-                        # the policy rung floors the walk (budget may still
-                        # degrade coarser, never finer) — same composition
-                        # as BudgetedTransport.serve_block
-                        ok = ok & (jnp.asarray(i, jnp.int32) >= c_rung)
-                    rung = jnp.where(ok, jnp.asarray(i, jnp.int32), rung)
+                # the policy rung floors the walk (budget may still degrade
+                # coarser, never finer) — same composition as
+                # BudgetedTransport.serve_block
+                rung = ladder_walk(
+                    costs, rem,
+                    floor=c_rung if serve_controller is not None else None)
                 sendable = (rung >= 0) & d_j
                 # an undelivered block never consults the budget, so it
                 # cannot flip exhaustion (eager head-only degrade skips the
@@ -619,9 +634,7 @@ def make_serve_fn(plan: SessionPlan, feature_shapes: tuple,
                                          & (rem_s < min_cost))
                 pairs = [channel_apply(c, None, noised, sub, None)[0]
                          for c in ladder]
-                blk = (pairs[0] if len(pairs) == 1 else
-                       jnp.select([rung == i for i in range(len(ladder))],
-                                  pairs, block))
+                blk = rung_select(rung, pairs, block)
                 cost = jnp.select([rung == i for i in range(len(ladder))],
                                   [jnp.asarray(c, jnp.int32) for c in costs],
                                   jnp.asarray(0, jnp.int32))
@@ -634,9 +647,7 @@ def make_serve_fn(plan: SessionPlan, feature_shapes: tuple,
                 noised, _ = channel_apply(None, privacy, block, sub, None)
                 pairs = [channel_apply(c, None, noised, sub, None)[0]
                          for c in ladder]
-                blk = (pairs[0] if len(pairs) == 1 else
-                       jnp.select([c_rung == i for i in range(len(ladder))],
-                                  pairs, noised))
+                blk = rung_select(c_rung, pairs, noised)
                 sendable = d_j
                 rung = c_rung
                 contrib = jnp.where(d_j, blk, jnp.zeros_like(blk))

@@ -146,6 +146,40 @@ class ScoreBlockMsg(Message):
 
 
 @dataclass(frozen=True)
+class GradientMsg(Message):
+    """A FedAvg-style flattened model delta (client -> server uplink, or the
+    server's raw broadcast of the new global model).
+
+    ``delta`` is the *decoded* payload (what the server averages);
+    ``wire_bits`` the encoded size when the channel ran a codec."""
+    delta: jnp.ndarray = None
+    wire_bits: int | None = None
+
+    kind = "gradient"
+
+    @property
+    def num_elements(self) -> int:
+        return int(np.size(self.delta))
+
+
+@dataclass(frozen=True)
+class ResidualMsg(Message):
+    """An Assisted-Learning [n, K] residual block passed along the ring:
+    agent m ships what remains of the label signal after its local fit.
+
+    ``residual`` is the *decoded* payload the next agent fits against;
+    ``wire_bits`` the encoded size when the channel ran a codec."""
+    residual: jnp.ndarray = None
+    wire_bits: int | None = None
+
+    kind = "residual"
+
+    @property
+    def num_elements(self) -> int:
+        return int(np.size(self.residual))
+
+
+@dataclass(frozen=True)
 class LabelsMsg(Message):
     """One-time setup: the head agent shares the numeric labels."""
     num_samples: int = 0
@@ -356,6 +390,34 @@ class Transport(abc.ABC):
         self.send(ScoreBlockMsg(src.name, dst.name, block,
                                 wire_bits=wire_bits))
         return block
+
+    def ship(self, src: "AgentEndpoint", dst: "AgentEndpoint",
+             payload: jnp.ndarray, wrap, *, key=None):
+        """One generic protocol-variant hop: ship ``payload`` (a FedAvg
+        model delta, an Assisted-Learning residual block, ...) src -> dst
+        through the wire channel — DP noise, then codec encode/decode —
+        priced at its *encoded* size and wrapped in the ``wrap`` message
+        type (:class:`GradientMsg` / :class:`ResidualMsg`).
+
+        Returns the decoded payload the receiver computes with (the
+        protocol continues from it — a genuinely lossy wire), or ``None``
+        when a budgeted transport drops the hop (the receiver keeps its
+        stale state, exactly like a skipped interchange hop).  ``key`` is
+        the hop's per-fit subkey; the channel folds its own keys from it.
+        Stateful (error-feedback) codecs run with a fresh residual per hop,
+        like serve blocks — variant traffic has no per-link residual state.
+        """
+        wire_bits = None
+        if self.has_channel:
+            from repro.comm.codecs import jitted_channel
+            payload, _ = jitted_channel(self.codec, self.privacy)(
+                payload, key, None)
+            if self.privacy is not None:
+                self.accountant.record(src.name)
+            if self.codec is not None:
+                wire_bits = int(self.codec.wire_bits(tuple(payload.shape)))
+        self.send(wrap(src.name, dst.name, payload, wire_bits=wire_bits))
+        return payload
 
 
 class InProcessTransport(Transport):
@@ -635,6 +697,114 @@ class FittedASCII:
         return max((c.round for c in self.components), default=-1) + 1
 
 
+# ============================================================ protocol variants
+class ProtocolVariant(abc.ABC):
+    """The round rule of one decentralized-learning protocol.
+
+    The engine's session loop (scheduling, churn filtering, budget
+    exhaustion, CV stop, checkpointing) is protocol-agnostic; a variant
+    supplies what happens *inside* one round and how the trained model
+    predicts.  ASCII (ignorance interchange) is the built-in variant;
+    FedAvg and Assisted Learning live in :mod:`repro.scenarios.protocols`
+    and ship their traffic through the same transports, codecs, budgets,
+    and DP accounting — that is the whole point: one wire, comparable
+    ledgers.
+    """
+
+    name = "variant"
+
+    def bind(self, session: "Session") -> None:
+        """Session-start hook: validate the endpoint roster and initialize
+        the variant's protocol state (``session.state.proto``, a
+        checkpointable pytree) when the session is fresh.  Called on both
+        fresh starts and resumes; ``state.proto`` is only initialized when
+        missing."""
+
+    @abc.abstractmethod
+    def run_round(self, session: "Session", order: list[int],
+                  rec: dict) -> bool:
+        """Execute one round over the (churn-filtered) agent ``order``,
+        recording into the history record ``rec``.  Returns True when the
+        protocol's own stop criterion fired."""
+
+    @abc.abstractmethod
+    def fitted(self, session: "Session"):
+        """The trained, predict-capable result of this session."""
+
+    def fit_compiled(self, protocol: "Protocol", key, endpoints, classes,
+                     validation):
+        """Lower a whole run into one XLA program (optional).  Variants
+        without a lowering run eager only."""
+        raise ValueError(
+            f"protocol variant {self.name!r} has no compiled lowering; "
+            f"use backend='eager'")
+
+
+class ASCIIVariant(ProtocolVariant):
+    """The paper's protocol: ignorance-score interchange around the chain
+    (Algorithm 1 lines 3-11), including the stale-read async barrier."""
+
+    name = "ascii"
+
+    def bind(self, session: "Session") -> None:
+        sc = session.scenario
+        if sc is not None and getattr(sc, "clock_skew", None):
+            if session.state.proto is None:
+                # bounded ignorance history for clock-skewed stale reads:
+                # agent m reads the score from skew_m barriers ago
+                session.state.proto = {"w_hist": [session.state.w]}
+
+    def run_round(self, session: "Session", order: list[int],
+                  rec: dict) -> bool:
+        st, cfg = session.state, session.cfg
+        eps = {ep.agent_id: ep for ep in session.endpoints}
+        rec.setdefault("alphas", [])
+        rec.setdefault("accs", [])
+        if session.scheduler.stale:
+            return session._step_stale(order, eps, rec)
+        reweight, standard = session._reweight()
+        k = cfg.num_classes
+        t = st.round
+        n = st.w.shape[0]
+        u = jnp.ones((n,), jnp.float32)
+        stop = False
+        for j, m in enumerate(order):
+            st.key, sub = jax.random.split(st.key)
+            w_fit = session.fit_weight(m, st.w)
+            params = eps[m].fit_local(sub, session.classes, w_fit, k)
+            r = eps[m].reward(params, session.classes)
+            if (not cfg.upstream) or j == 0:
+                a, rbar = scores.model_weight(st.w, r, k,
+                                              alpha_cap=cfg.alpha_cap)
+            else:
+                a, rbar = scores.model_weight(st.w, r, k, u=u,
+                                              alpha_cap=cfg.alpha_cap)
+            rec["alphas"].append(float(a))
+            rec["accs"].append(float(rbar))
+            session.scheduler.observe(m, float(rbar))
+            if cfg.stop_on_negative_alpha and float(a) <= 0:
+                return True            # Algorithm 1, line 8
+            st.components.append(Component(m, t, float(a), params))
+            u = scores.upstream_factor_update(u, a, r, k)
+            dst = eps[order[(j + 1) % len(order)]]
+            link_state = (None if st.codec_state is None
+                          else st.codec_state.get(eps[m].name))
+            st.w, link_state = session.transport.interchange(
+                eps[m], dst, st.w, r, a, reweight, standard,
+                key=sub if session.transport.has_channel else None,
+                codec_state=link_state)
+            if link_state is not None:
+                if st.codec_state is None:
+                    st.codec_state = {}
+                st.codec_state[eps[m].name] = link_state
+        return stop
+
+    def fitted(self, session: "Session") -> "FittedASCII":
+        return FittedASCII(session.state.components,
+                           [ep.learner for ep in session.endpoints],
+                           session.cfg.num_classes, session.state.history)
+
+
 # ================================================================ session state
 @dataclass
 class SessionState:
@@ -668,6 +838,10 @@ class SessionState:
     # without it a resumed run would restart the bit budget and epsilon
     # ledger from zero, violating the caps the paused run was under
     comm: dict | None = None
+    # protocol-variant state (repro.scenarios): a checkpointable pytree of
+    # arrays — FedAvg's flat global params, Assisted Learning's running
+    # residual, the clock-skew ignorance history.  None for plain ASCII.
+    proto: PyTree = None
 
     # ---- (de)serialization --------------------------------------------------
     def to_tree(self) -> tuple[PyTree, dict]:
@@ -675,7 +849,8 @@ class SessionState:
         tree = {"w": self.w,
                 "key": jax.random.key_data(self.key),
                 "params": [c.params for c in self.components],
-                "codec_state": self.codec_state}
+                "codec_state": self.codec_state,
+                "proto": self.proto}
         meta = {"round": self.round,
                 "stopped": self.stopped,
                 "best_val": self.best_val,
@@ -704,7 +879,8 @@ class SessionState:
                    order_sizes=[int(s) for s in meta.get("order_sizes", [])],
                    active=meta.get("active"),
                    codec_state=tree.get("codec_state"),
-                   comm=meta.get("comm"))
+                   comm=meta.get("comm"),
+                   proto=tree.get("proto"))
 
     def save(self, directory: str, step: int | None = None) -> str:
         from repro.train import checkpoint
@@ -756,6 +932,8 @@ class Session:
                  transport: Transport, endpoints: Sequence[AgentEndpoint],
                  classes: jnp.ndarray, state: SessionState,
                  validation: tuple[Sequence[jnp.ndarray], jnp.ndarray] | None = None,
+                 variant: ProtocolVariant | None = None,
+                 scenario=None,
                  _send_setup: bool = True) -> None:
         self.cfg = cfg
         self.scheduler = scheduler
@@ -766,14 +944,42 @@ class Session:
         self.classes = classes
         self.state = state
         self.validation = validation
+        self.variant = variant if variant is not None else ASCIIVariant()
+        self.scenario = scenario
+        # per-session variant context (derived, non-checkpointed: unravel
+        # closures, one-hot labels, fit-weight tables) — variants stash what
+        # bind() computes here so one variant object can drive many sessions
+        self.vctx: dict = {}
         if scheduler.stale and transport.has_channel:
             raise ValueError(
                 "wire channels (codec/privacy) are not supported on the "
                 "stale-read async path: its barrier merge is computed "
                 "host-side, so per-hop channel semantics would be fiction; "
                 "use a sequential or random scheduler")
+        if not isinstance(self.variant, ASCIIVariant):
+            if scheduler.stale:
+                raise ValueError(
+                    f"the stale-read async barrier is an ASCII merge rule; "
+                    f"protocol variant {self.variant.name!r} needs a "
+                    f"sequential or random scheduler")
+            if transport.controller is not None \
+                    or transport.serve_controller is not None:
+                raise ValueError(
+                    "adaptive controllers read ignorance-vector statistics; "
+                    f"they do not apply to protocol variant "
+                    f"{self.variant.name!r} traffic — drop controller=/"
+                    "serve_controller=")
+        self._participation = None
+        self._shard_w = None
+        if scenario is not None:
+            scenario.validate(len(self.endpoints), scheduler, self.variant)
+            self._participation = scenario.participation(
+                cfg.max_rounds, len(self.endpoints))
+            self._shard_w = scenario.shard_weights(classes,
+                                                   len(self.endpoints))
         transport.bind(self.endpoints)
         scheduler.bind_transport(transport)
+        self.variant.bind(self)
         if _send_setup:
             self._send_setup()
 
@@ -807,6 +1013,16 @@ class Session:
                     scores.ignorance_update_exact(w, r, a, cfg.num_classes)), False
         return scores.ignorance_update, True
 
+    def fit_weight(self, m: int, w: jnp.ndarray) -> jnp.ndarray:
+        """Agent m's fit-weight vector: the protocol weight ``w`` masked to
+        the agent's non-IID shard (repro.scenarios partitions) and
+        renormalized.  Identity when the scenario is IID — the zero-scenario
+        path is untouched, byte for byte."""
+        if self._shard_w is None:
+            return w
+        wm = w * self._shard_w[m]
+        return wm / jnp.maximum(jnp.sum(wm), 1e-12)
+
     # ---- the round loop -----------------------------------------------------
     def step(self) -> bool:
         """One interchange round (Algorithm 1 lines 3-11 / the Section-IV
@@ -820,52 +1036,24 @@ class Session:
             st.stopped = True
             return False
         t = st.round
-        eps = {ep.agent_id: ep for ep in self.endpoints}
         active = [ep.agent_id for ep in self.endpoints if ep.active]
         if not active:
             st.stopped = True          # everyone dropped out: nothing to run
             return False
         order = self.scheduler.round_order(t, active)
+        # record the *pre-churn* order size: scheduler-RNG replay on resume
+        # redraws from the active roster, then re-applies the (pure, seeded)
+        # participation schedule
         st.order_sizes.append(len(order))
-        rec: dict = {"round": t, "alphas": [], "accs": []}
-        reweight, standard = self._reweight()
-        k = cfg.num_classes
+        rec: dict = {"round": t}
+        if self._participation is not None:
+            order = [m for m in order if self._participation[t, m]]
+            rec["participants"] = list(order)
         stop = False
-
-        if self.scheduler.stale:
-            stop = self._step_stale(order, eps, rec)
-        else:
-            n = st.w.shape[0]
-            u = jnp.ones((n,), jnp.float32)
-            for j, m in enumerate(order):
-                st.key, sub = jax.random.split(st.key)
-                params = eps[m].fit_local(sub, self.classes, st.w, k)
-                r = eps[m].reward(params, self.classes)
-                if (not cfg.upstream) or j == 0:
-                    a, rbar = scores.model_weight(st.w, r, k,
-                                                  alpha_cap=cfg.alpha_cap)
-                else:
-                    a, rbar = scores.model_weight(st.w, r, k, u=u,
-                                                  alpha_cap=cfg.alpha_cap)
-                rec["alphas"].append(float(a))
-                rec["accs"].append(float(rbar))
-                self.scheduler.observe(m, float(rbar))
-                if cfg.stop_on_negative_alpha and float(a) <= 0:
-                    stop = True        # Algorithm 1, line 8
-                    break
-                st.components.append(Component(m, t, float(a), params))
-                u = scores.upstream_factor_update(u, a, r, k)
-                dst = eps[order[(j + 1) % len(order)]]
-                link_state = (None if st.codec_state is None
-                              else st.codec_state.get(eps[m].name))
-                st.w, link_state = self.transport.interchange(
-                    eps[m], dst, st.w, r, a, reweight, standard,
-                    key=sub if self.transport.has_channel else None,
-                    codec_state=link_state)
-                if link_state is not None:
-                    if st.codec_state is None:
-                        st.codec_state = {}
-                    st.codec_state[eps[m].name] = link_state
+        if order:
+            stop = self.variant.run_round(self, order, rec)
+        # an all-churned round is an empty round, not a stop: stragglers
+        # come back
 
         if self.validation is not None:
             Xs_val, c_val = self.validation
@@ -892,9 +1080,12 @@ class Session:
         fits = []
         for m in order:
             st.key, sub = jax.random.split(st.key)
-            params = eps[m].fit_local(sub, self.classes, st.w, k)
+            w_read = self._stale_view(m)
+            params = eps[m].fit_local(sub, self.classes,
+                                      self.fit_weight(m, w_read), k)
             r = eps[m].reward(params, self.classes)
-            a, rbar = scores.model_weight(st.w, r, k, alpha_cap=cfg.alpha_cap)
+            a, rbar = scores.model_weight(w_read, r, k,
+                                          alpha_cap=cfg.alpha_cap)
             fits.append((m, params, r, a, rbar))
         w_next = st.w
         any_pos = False
@@ -916,7 +1107,30 @@ class Session:
             self.transport.send(IgnoranceMsg(eps[m].name, dst.name, w_next))
             self.transport.send(ModelWeightMsg(eps[m].name, dst.name, float(a)))
         st.w = w_next / jnp.maximum(jnp.sum(w_next), 1e-12)
+        self._push_stale_hist()
         return not any_pos and cfg.stop_on_negative_alpha
+
+    def _stale_view(self, m: int) -> jnp.ndarray:
+        """The ignorance score agent ``m`` reads at the barrier: the current
+        one, or — under a clock-skewed scenario — the one from ``skew_m``
+        barriers ago (a slow agent trains against an old broadcast)."""
+        sc = self.scenario
+        skew = None if sc is None else getattr(sc, "clock_skew", None)
+        if not skew or not skew[m]:
+            return self.state.w
+        hist = self.state.proto["w_hist"]
+        return hist[max(0, len(hist) - 1 - int(skew[m]))]
+
+    def _push_stale_hist(self) -> None:
+        """Advance the bounded clock-skew history after a barrier merge."""
+        sc = self.scenario
+        skew = None if sc is None else getattr(sc, "clock_skew", None)
+        if not skew:
+            return
+        hist = self.state.proto["w_hist"]
+        hist.append(self.state.w)
+        depth = max(int(s) for s in skew) + 1
+        del hist[:-depth]
 
     def run(self, max_rounds: int | None = None) -> SessionState:
         """Drive ``step()`` to completion (or for ``max_rounds`` more)."""
@@ -928,10 +1142,8 @@ class Session:
         return self.state
 
     # ---- results ------------------------------------------------------------
-    def fitted(self) -> FittedASCII:
-        return FittedASCII(self.state.components,
-                           [ep.learner for ep in self.endpoints],
-                           self.cfg.num_classes, self.state.history)
+    def fitted(self):
+        return self.variant.fitted(self)
 
     def predict_distributed(self, Xs: Sequence[jnp.ndarray] | None = None,
                             max_round: int | None = None, *,
@@ -952,6 +1164,11 @@ class Session:
         the serve engine's batched slots derive the identical key), so
         serving never perturbs the fit stream and resumed sessions serve
         identically."""
+        if not isinstance(self.variant, ASCIIVariant):
+            raise ValueError(
+                f"score-block serving is ASCII's prediction protocol; "
+                f"variant {self.variant.name!r} predicts via "
+                f"session.fitted().predict(Xs)")
         head = self.endpoints[0]
         if key is None and self.transport.has_serve_channel:
             from repro.comm.codecs import serve_key
@@ -1054,13 +1271,17 @@ class Protocol:
 
     def __init__(self, cfg: SessionConfig, scheduler: Scheduler | None = None,
                  transport: Transport | None = None,
-                 backend: str = "eager") -> None:
+                 backend: str = "eager",
+                 variant: ProtocolVariant | None = None,
+                 scenario=None) -> None:
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
         self.cfg = cfg
         self.scheduler = scheduler if scheduler is not None else SequentialScheduler()
         self.transport = transport if transport is not None else InProcessTransport()
         self.backend = backend
+        self.variant = variant if variant is not None else ASCIIVariant()
+        self.scenario = scenario
         # last fit() context, so predict_distributed works on both backends:
         # the eager session, or the compiled (endpoints, plan, result)
         self._fit_key = None
@@ -1074,7 +1295,8 @@ class Protocol:
         state = SessionState(w=scores.init_ignorance(n), key=key)
         self.scheduler.reset()
         return Session(self.cfg, self.scheduler, self.transport, endpoints,
-                       classes, state, validation=validation)
+                       classes, state, validation=validation,
+                       variant=self.variant, scenario=self.scenario)
 
     def resume(self, directory: str, endpoints: Sequence[AgentEndpoint],
                classes: jnp.ndarray, validation=None,
@@ -1093,6 +1315,7 @@ class Protocol:
                 ep.active = bool(flag)
         session = Session(self.cfg, self.scheduler, self.transport, endpoints,
                           classes, state, validation=validation,
+                          variant=self.variant, scenario=self.scenario,
                           _send_setup=False)
         session._comm_restore(state.comm)
         return session
@@ -1115,6 +1338,18 @@ class Protocol:
         byte-identical to the eager path."""
         from repro.core import compiled
         cfg = self.cfg
+        if not isinstance(self.variant, ASCIIVariant):
+            # protocol variants own their lowering (repro.scenarios.compiled
+            # lowers FedAvg's homogeneous round into a lax.scan); the engine
+            # stays variant-agnostic
+            return self.variant.fit_compiled(self, key, endpoints, classes,
+                                             validation)
+        if self.scenario is not None and not self.scenario.trivial:
+            raise ValueError(
+                "backend='compiled' does not lower ASCII scenario knobs "
+                "(churn/subsampling/partitions change the chain per round); "
+                "use backend='eager', or protocol='fedavg' whose lowering "
+                "takes a participation mask")
         if not (isinstance(self.scheduler, SequentialScheduler)
                 and not self.scheduler.stale):
             raise ValueError(

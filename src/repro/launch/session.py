@@ -35,6 +35,8 @@ from repro.data import synthetic
 from repro.learners.logistic import LogisticRegression
 from repro.learners.mlp import MLP
 from repro.learners.tree import DecisionTree
+from repro.scenarios import PARTITIONS, PRESETS, PROTOCOLS, Scenario, \
+    make_variant
 
 DATASETS = {
     "blob3": lambda key, n: synthetic.blob_fig3(key, n=n),
@@ -103,6 +105,40 @@ def main():
     ap.add_argument("--n", type=int, default=600)
     ap.add_argument("--variant", default="ascii",
                     choices=["ascii", "simple", "random", "async"])
+    ap.add_argument("--protocol", default="ascii",
+                    choices=sorted(PROTOCOLS),
+                    help="protocol variant (repro.scenarios): ascii = the "
+                         "paper's ignorance interchange; fedavg = federated "
+                         "averaging over a homogeneous functional roster "
+                         "(GradientMsg uplinks through the same codec/"
+                         "budget/DP channel); al = assisted-learning "
+                         "residual-fitting rounds (ResidualMsg around the "
+                         "ring, eager only)")
+    ap.add_argument("--scenario", default="",
+                    choices=[""] + sorted(PRESETS),
+                    help="adversarial-reality preset (repro.scenarios): "
+                         "clean/noniid/churn/subsample; fixes the knob "
+                         "flags below")
+    ap.add_argument("--subsample", type=float, default=0.0,
+                    help="per-round client subsampling fraction in (0, 1] "
+                         "(FedAvg's C; unlocks --accountant subsampled-rdp)")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="per-round permanent-departure probability")
+    ap.add_argument("--straggle", type=float, default=0.0,
+                    help="per-(round, agent) transient-miss probability")
+    ap.add_argument("--partition", default="iid",
+                    choices=sorted(PARTITIONS),
+                    help="non-IID horizontal shards: dirichlet label skew "
+                         "or power-law quantity skew (agents fit only on "
+                         "their shard's rows)")
+    ap.add_argument("--skew", type=float, default=0.5,
+                    help="partition skew: dirichlet alpha / quantity "
+                         "exponent")
+    ap.add_argument("--clock-skew", default="",
+                    help="comma-separated per-agent barrier lags (ASCII "
+                         "--variant async only), e.g. 0,0,2,1")
+    ap.add_argument("--scenario-seed", type=int, default=0,
+                    help="seed of the scenario's churn/partition draws")
     ap.add_argument("--rounds", type=int, default=6)
     ap.add_argument("--transport", default="metered",
                     choices=sorted(TRANSPORTS))
@@ -156,12 +192,14 @@ def main():
                          "--serve-codec, and floors the --byte-budget serve "
                          "ladder walk when both are set")
     ap.add_argument("--accountant", default="basic",
-                    choices=["basic", "rdp"],
+                    choices=["basic", "rdp", "subsampled-rdp"],
                     help="privacy accountant for --dp-epsilon releases: "
-                         "basic additive composition, or Renyi-DP "
-                         "(moments) composition converted to (eps, delta) "
-                         "on read — tighter for long sessions, never "
-                         "looser")
+                         "basic additive composition, Renyi-DP (moments) "
+                         "composition converted to (eps, delta) on read — "
+                         "tighter for long sessions, never looser — or "
+                         "subsampled-rdp, RDP with privacy amplification "
+                         "by the scenario's --subsample client-sampling "
+                         "rate (capped at the full-batch bound)")
     ap.add_argument("--scheduler", default="",
                     choices=["", "budget-aware"],
                     help="round-order override (repro.control.scheduler): "
@@ -231,13 +269,66 @@ def main():
         if args.variant not in ("ascii", "simple"):
             ap.error("--scheduler budget-aware replaces the round order; "
                      "use a sequential variant (ascii|simple)")
+    if args.protocol != "ascii":
+        if args.variant in ("simple", "async"):
+            ap.error(f"--variant {args.variant} is an ASCII scheduling "
+                     f"mode; --protocol {args.protocol} runs its own round "
+                     f"rule over an ordered roster (--variant ascii|random)")
+        if args.controller or args.serve_controller:
+            ap.error("adaptive controllers read ignorance-vector "
+                     f"statistics; they do not apply to --protocol "
+                     f"{args.protocol} traffic")
+    if args.protocol == "fedavg" and args.learner == "tree":
+        ap.error("--protocol fedavg averages flat parameter deltas from a "
+                 "functional learner core; --learner tree has none "
+                 "(use logistic|mlp)")
+    if args.protocol == "al" and args.backend == "compiled":
+        ap.error("--protocol al is eager-only: its ring of closed-form "
+                 "ridge hops has no compiled lowering")
+    if args.scenario and (args.subsample or args.dropout or args.straggle
+                          or args.partition != "iid" or args.clock_skew):
+        ap.error("--scenario presets fix the scenario knobs; drop the "
+                 "individual --subsample/--dropout/--straggle/--partition/"
+                 "--clock-skew flags (or drop --scenario)")
+    if args.scenario:
+        scenario = PRESETS[args.scenario]
+    else:
+        try:
+            clock = (tuple(int(s) for s in args.clock_skew.split(","))
+                     if args.clock_skew else ())
+        except ValueError:
+            ap.error(f"--clock-skew wants comma-separated non-negative "
+                     f"ints, got {args.clock_skew!r}")
+        try:
+            scenario = Scenario("cli", subsample=args.subsample or None,
+                                dropout=args.dropout,
+                                straggle=args.straggle,
+                                partition=args.partition, skew=args.skew,
+                                clock_skew=clock, seed=args.scenario_seed)
+        except ValueError as e:
+            ap.error(str(e))
+    if args.accountant == "subsampled-rdp" and scenario.subsample is None:
+        ap.error("--accountant subsampled-rdp amplifies privacy by the "
+                 "client-sampling rate; set --subsample (or a subsampling "
+                 "--scenario) so there is a rate to amplify by")
+    if args.backend == "compiled" and args.protocol == "ascii" \
+            and not scenario.trivial:
+        ap.error("--backend compiled does not lower ASCII scenario knobs "
+                 "(churn changes the chain's shape per round); use the "
+                 "eager backend — fedavg scenarios do compile")
+    variant_obj = make_variant(args.protocol)
     scheduler, upstream = variant_setup(args.variant, args.seed)
     if args.scheduler == "budget-aware":
         scheduler = BudgetAwareScheduler()
-    privacy = (GaussianMechanism(epsilon=args.dp_epsilon)
+    try:
+        scenario.validate(len(Xs), scheduler, variant_obj)
+    except ValueError as e:
+        ap.error(str(e))
+    privacy = (GaussianMechanism(epsilon=args.dp_epsilon,
+                                 nonneg=(args.protocol == "ascii"))
                if args.dp_epsilon > 0 else None)
-    accountant = (make_accountant(args.accountant) if privacy is not None
-                  else None)
+    accountant = (make_accountant(args.accountant, q=scenario.subsample)
+                  if privacy is not None else None)
     controller = (AdaptiveController(stat=args.controller)
                   if args.controller else None)
     serve_controller = (ServeController(stat=args.serve_controller)
@@ -260,23 +351,35 @@ def main():
                                     max_rounds=args.rounds,
                                     upstream=upstream),
                       scheduler=scheduler, transport=transport,
-                      backend=args.backend)
+                      backend=args.backend, variant=variant_obj,
+                      scenario=None if scenario.trivial else scenario)
     endpoints = endpoints_for(
         [LEARNERS[args.learner](args) for _ in Xs], Xtr)
+
+    # FedAvg's fitted object carries flat global params, not a component
+    # ensemble; everything else (ascii, al) reports its ensemble size
+    tag = "" if args.protocol == "ascii" else f"{args.protocol},"
+
+    def _size(fitted):
+        if args.protocol == "fedavg":
+            return f"params={fitted.g.size}"
+        return f"components={len(fitted.components)}"
 
     if args.backend == "compiled":
         fitted = engine.fit(jax.random.fold_in(key, 1), endpoints, ctr)
         acc = float(jnp.mean(fitted.predict(Xte) == cte))
-        line = (f"{args.dataset},{args.variant},{args.transport},compiled,"
-                f"rounds={fitted.num_rounds},"
-                f"components={len(fitted.components)},acc={acc:.3f}")
+        line = (f"{args.dataset},{tag}{args.variant},{args.transport},"
+                f"compiled,rounds={fitted.num_rounds},"
+                f"{_size(fitted)},acc={acc:.3f}")
         if isinstance(transport, MeteredTransport):
             line += f",bits={transport.total_bits}"
         print(line)
-        before = (transport.bits_by_kind().get("score_block", 0)
-                  if isinstance(transport, MeteredTransport) else 0)
-        preds = engine.predict_distributed(Xte)
-        _print_serve(transport, preds, cte, before)
+        if args.protocol == "ascii":
+            # only ASCII has a serve path (chained ScoreBlockMsg traffic)
+            before = (transport.bits_by_kind().get("score_block", 0)
+                      if isinstance(transport, MeteredTransport) else 0)
+            preds = engine.predict_distributed(Xte)
+            _print_serve(transport, preds, cte, before)
         _print_comm(transport, show_ema=False)
         return
 
@@ -286,7 +389,10 @@ def main():
                for k in ("dataset", "n", "variant", "learner", "depth",
                          "steps", "seed", "codec", "serve_codec",
                          "byte_budget", "dp_epsilon", "controller",
-                         "accountant", "scheduler", "serve_controller")}
+                         "accountant", "scheduler", "serve_controller",
+                         "protocol", "scenario", "subsample", "dropout",
+                         "straggle", "partition", "skew", "clock_skew",
+                         "scenario_seed")}
     cfg_path = os.path.join(args.ckpt_dir or ".", "cli_config.json")
     if args.resume:
         if not args.ckpt_dir:
@@ -300,7 +406,11 @@ def main():
             saved = {"learner": "tree", "steps": 150, "codec": "",
                      "serve_codec": "", "byte_budget": 0, "dp_epsilon": 0.0,
                      "controller": "", "accountant": "basic",
-                     "scheduler": "", "serve_controller": "", **saved}
+                     "scheduler": "", "serve_controller": "",
+                     "protocol": "ascii", "scenario": "", "subsample": 0.0,
+                     "dropout": 0.0, "straggle": 0.0, "partition": "iid",
+                     "skew": 0.5, "clock_skew": "", "scenario_seed": 0,
+                     **saved}
             if saved != run_cfg:
                 ap.error(f"--resume config mismatch: checkpoint was written "
                          f"with {saved}, this run is {run_cfg}")
@@ -324,13 +434,13 @@ def main():
 
     fitted = session.fitted()
     acc = float(jnp.mean(fitted.predict(Xte) == cte))
-    line = (f"{args.dataset},{args.variant},{args.transport},"
-            f"rounds={fitted.num_rounds},components={len(fitted.components)},"
+    line = (f"{args.dataset},{tag}{args.variant},{args.transport},"
+            f"rounds={fitted.num_rounds},{_size(fitted)},"
             f"acc={acc:.3f}")
     if isinstance(transport, MeteredTransport):
         line += f",bits={transport.total_bits}"
     print(line)
-    if not paused:
+    if not paused and args.protocol == "ascii":
         # serve only on the terminal run: the checkpoint above snapshots
         # comm state *before* this point, so a paused process serving here
         # would book budget spend and DP releases the snapshot misses —

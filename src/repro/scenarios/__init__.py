@@ -1,0 +1,28 @@
+"""Scenario engine: protocol variants x adversarial-reality knobs.
+
+Two orthogonal axes over the one shared engine/channel stack:
+
+  * :mod:`repro.scenarios.scenario`  — *who shows up, with what data, when*:
+    per-round client subsampling, seeded straggler/dropout churn, non-IID
+    shard partitions, clock-skewed stale reads.  Deterministic pure
+    schedules — replayable, resumable, and consumable by compiled lowerings.
+  * :mod:`repro.scenarios.protocols` — *what the round does*: FedAvg and
+    Assisted Learning as :class:`~repro.core.engine.ProtocolVariant`s,
+    shipping GradientMsg / ResidualMsg traffic through the same codecs,
+    budgets, DP noise, and accountants as ASCII's interchange — one wire,
+    comparable byte and epsilon ledgers.
+  * :mod:`repro.scenarios.compiled`  — FedAvg's homogeneous round lowered
+    into a single ``lax.scan`` over the participation mask, pinned
+    bit-identical to the eager loop.
+"""
+from repro.scenarios.protocols import (PROTOCOLS, AssistedLearningVariant,
+                                       FedAvgVariant, FittedAL,
+                                       FittedFedAvg, fedavg_fit_weights,
+                                       make_variant)
+from repro.scenarios.scenario import PARTITIONS, PRESETS, Scenario
+
+__all__ = [
+    "PARTITIONS", "PRESETS", "PROTOCOLS", "AssistedLearningVariant",
+    "FedAvgVariant", "FittedAL", "FittedFedAvg", "Scenario",
+    "fedavg_fit_weights", "make_variant",
+]

@@ -1,0 +1,121 @@
+"""Property tests (hypothesis): the non-IID horizontal partitioners behind
+the scenario engine's ``partition`` knob.  The contracts every scenario
+relies on: shards cover range(n) exactly once, every shard is nonempty when
+the roster fits, the draw is a pure function of the seed, and the skew
+knobs move imbalance monotonically in the documented direction."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.data.partition import (dirichlet_label_partition,
+                                  quantity_partition, quantity_proportions)
+from repro.scenarios import Scenario
+
+SEEDS = st.integers(0, 2 ** 31 - 1)
+AGENTS = st.integers(1, 12)
+
+
+def _classes(seed, n, k):
+    return np.random.default_rng(seed ^ 0xC1A55).integers(0, k, size=n)
+
+
+def _assert_exact_cover(shards, n):
+    flat = np.concatenate(shards) if shards else np.array([], np.int64)
+    assert flat.size == n
+    np.testing.assert_array_equal(np.sort(flat), np.arange(n))
+
+
+# ================================================================ dirichlet
+@given(seed=SEEDS, num_agents=AGENTS, n=st.integers(12, 200),
+       k=st.integers(2, 8), alpha=st.floats(0.05, 10.0))
+@settings(max_examples=40, deadline=None)
+def test_dirichlet_exact_cover_nonempty_deterministic(seed, num_agents, n,
+                                                      k, alpha):
+    classes = _classes(seed, n, k)
+    shards = dirichlet_label_partition(seed, classes, num_agents,
+                                       alpha=alpha)
+    _assert_exact_cover(shards, n)
+    assert all(s.size >= 1 for s in shards)
+    replay = dirichlet_label_partition(seed, classes, num_agents,
+                                       alpha=alpha)
+    for a, b in zip(shards, replay):
+        np.testing.assert_array_equal(a, b)
+
+
+@given(seed=SEEDS, num_agents=st.integers(2, 8))
+@settings(max_examples=25, deadline=None)
+def test_dirichlet_small_alpha_concentrates_labels(seed, num_agents):
+    """Pathological alpha puts each class (mostly) on few agents; near-IID
+    alpha spreads it — measured as the mean per-class max-agent share,
+    averaged over classes (1.0 = fully concentrated, 1/M = uniform)."""
+    n, k = 400, 4
+    classes = _classes(seed, n, k)
+
+    def concentration(alpha):
+        shards = dirichlet_label_partition(seed, classes, num_agents,
+                                           alpha=alpha)
+        shares = []
+        for c in range(k):
+            per_agent = np.array(
+                [np.sum(classes[s] == c) for s in shards], np.float64)
+            if per_agent.sum() > 0:
+                shares.append(per_agent.max() / per_agent.sum())
+        return float(np.mean(shares))
+
+    assert concentration(0.05) >= concentration(100.0) - 0.05
+
+
+# ================================================================= quantity
+@given(seed=SEEDS, num_agents=AGENTS, n=st.integers(12, 200),
+       skew=st.floats(0.0, 4.0))
+@settings(max_examples=40, deadline=None)
+def test_quantity_exact_cover_nonempty_deterministic(seed, num_agents, n,
+                                                     skew):
+    shards = quantity_partition(seed, n, num_agents, skew=skew)
+    _assert_exact_cover(shards, n)
+    assert all(s.size >= 1 for s in shards)
+    replay = quantity_partition(seed, n, num_agents, skew=skew)
+    for a, b in zip(shards, replay):
+        np.testing.assert_array_equal(a, b)
+
+
+@given(num_agents=st.integers(2, 12),
+       skews=st.lists(st.floats(0.0, 4.0), min_size=2, max_size=6,
+                      unique=True))
+@settings(max_examples=40, deadline=None)
+def test_quantity_spread_monotone_in_skew(num_agents, skews):
+    """max/min proportion = num_agents^skew: strictly increasing in skew,
+    uniform at skew = 0 — the deterministic imbalance contract."""
+    skews = sorted(skews)
+    spreads = []
+    for skew in skews:
+        p = quantity_proportions(num_agents, skew)
+        assert p.sum() == pytest.approx(1.0)
+        assert (np.diff(p) <= 1e-15).all()      # largest agent first
+        spreads.append(p.max() / p.min())
+        assert spreads[-1] == pytest.approx(num_agents ** skew)
+    assert all(b > a or b == pytest.approx(a)
+               for a, b in zip(spreads, spreads[1:]))
+
+
+def test_quantity_uniform_at_zero_skew():
+    p = quantity_proportions(7, 0.0)
+    np.testing.assert_allclose(p, np.full(7, 1 / 7))
+
+
+# =========================================== scenario shard-weight glue
+@given(seed=SEEDS, num_agents=st.integers(2, 6),
+       part=st.sampled_from(["dirichlet", "quantity"]))
+@settings(max_examples=20, deadline=None)
+def test_scenario_shard_weights_partition_rows(seed, num_agents, part):
+    """The [M, n] fit-weight masks the engine consumes are exactly the
+    partition: each column (sample) active for exactly one agent."""
+    n = 80
+    classes = _classes(seed, n, 4)
+    sc = Scenario("p", partition=part, skew=0.7, seed=seed)
+    masks = np.asarray(sc.shard_weights(classes, num_agents))
+    assert masks.shape == (num_agents, n)
+    np.testing.assert_array_equal(masks.sum(axis=0), np.ones(n))
+    assert set(np.unique(masks)) <= {0.0, 1.0}

@@ -1,0 +1,338 @@
+"""Scenario-engine pins: FedAvg eager vs compiled bit-identity across every
+channel configuration, seeded-churn replay and mid-run resume determinism
+(schedule AND byte ledger), Assisted-Learning round semantics on the shared
+wire, scenario/CLI-level coherence validation, and subsampled-RDP
+amplification bounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import (BudgetSpec, BudgetedTransport, GaussianMechanism,
+                        make_codec)
+from repro.control import AdaptiveController, make_accountant
+from repro.control.accounting import (RDPAccountant, SubsampledRDPAccountant,
+                                      rdp_epsilon, sgm_rdp,
+                                      subsampled_rdp_epsilon)
+from repro.core.engine import (MeteredTransport, Protocol, SessionConfig,
+                               endpoints_for)
+from repro.data.synthetic import gaussian_blobs
+from repro.learners.logistic import LogisticRegression
+from repro.scenarios import (PRESETS, AssistedLearningVariant, FedAvgVariant,
+                             Scenario, make_variant)
+
+K = 4
+
+
+def _cohort(n=60, agents=3, feats=2, seed=0):
+    X, classes = gaussian_blobs(jax.random.key(seed), n=n,
+                                num_features=agents * feats, num_classes=K,
+                                cluster_std=1.2)
+    return ([X[:, m * feats:(m + 1) * feats] for m in range(agents)],
+            classes)
+
+
+def _fit(backend, transport, *, variant=None, scenario=None, rounds=4,
+         steps=25, seed=7):
+    Xs, classes = _cohort()
+    engine = Protocol(SessionConfig(num_classes=K, max_rounds=rounds),
+                      transport=transport, backend=backend,
+                      variant=variant or FedAvgVariant(), scenario=scenario)
+    endpoints = endpoints_for(
+        [LogisticRegression(steps=steps) for _ in Xs], Xs)
+    return engine.fit(jax.random.key(seed), endpoints, classes)
+
+
+# ===================================== FedAvg: eager == compiled, bit for bit
+def _dp():
+    # FedAvg deltas are signed; the interchange's nonneg clamp must be off
+    return GaussianMechanism(epsilon=2.0, clip=1.0, nonneg=False)
+
+
+CHANNELS = {
+    "plain": lambda: MeteredTransport(),
+    "fp16": lambda: MeteredTransport(codec=make_codec("fp16")),
+    "int8": lambda: MeteredTransport(codec=make_codec("int8")),
+    "dp": lambda: MeteredTransport(privacy=_dp(),
+                                   accountant=make_accountant("rdp")),
+    "fp16+dp": lambda: MeteredTransport(codec=make_codec("fp16"),
+                                        privacy=_dp(),
+                                        accountant=make_accountant("rdp")),
+    "budget": lambda: BudgetedTransport(BudgetSpec(session_bits=9000)),
+    "budget-tight": lambda: BudgetedTransport(BudgetSpec(session_bits=4000)),
+    "link-cap": lambda: BudgetedTransport(BudgetSpec(link_bits=700)),
+    "mix": lambda: BudgetedTransport(BudgetSpec(session_bits=8000),
+                                     privacy=_dp(),
+                                     accountant=make_accountant("rdp")),
+}
+
+SCENARIO_MIX = Scenario("mix", subsample=0.9, straggle=0.2, seed=5)
+
+
+def _assert_parity(te, tc, fe, fc):
+    np.testing.assert_array_equal(np.asarray(fe.g), np.asarray(fc.g))
+    assert fe.history == fc.history
+    assert te.total_bits == tc.total_bits
+    assert te.bits_by_kind() == tc.bits_by_kind()
+    if te.privacy is not None:
+        assert te.accountant.report(te.privacy) == \
+            tc.accountant.report(tc.privacy)
+    if hasattr(te, "budget"):
+        assert te.exhausted == tc.exhausted
+        assert te.link_spent == tc.link_spent
+        assert te.skipped == tc.skipped
+
+
+@pytest.mark.parametrize("channel", sorted(CHANNELS))
+def test_fedavg_compiled_matches_eager(channel):
+    """The lax.scan lowering reproduces the eager loop exactly — final
+    params, round history, byte ledger, DP tally, budget state — under
+    every wire configuration."""
+    te, tc = CHANNELS[channel](), CHANNELS[channel]()
+    fe = _fit("eager", te)
+    fc = _fit("compiled", tc)
+    _assert_parity(te, tc, fe, fc)
+    assert te.total_bits > 0
+
+
+@pytest.mark.parametrize("channel", ["plain", "fp16", "mix"])
+def test_fedavg_compiled_matches_eager_under_churn(channel):
+    """Same pin with subsampling + stragglers: the compiled scan consumes
+    the identical participation mask the eager engine churns by, including
+    the PRNG discipline on empty/stopped rounds."""
+    te, tc = CHANNELS[channel](), CHANNELS[channel]()
+    fe = _fit("eager", te, scenario=SCENARIO_MIX, rounds=5)
+    fc = _fit("compiled", tc, scenario=SCENARIO_MIX, rounds=5)
+    _assert_parity(te, tc, fe, fc)
+
+
+def test_fedavg_budget_exhaustion_parity():
+    """A cap below even the setup bits stops the session immediately on
+    both backends, with identical exhausted flags and ledgers."""
+    bits = []
+    for backend in ("eager", "compiled"):
+        t = BudgetedTransport(BudgetSpec(session_bits=1500))
+        f = _fit(backend, t)
+        bits.append((f.num_rounds, t.total_bits, t.exhausted))
+    assert bits[0] == bits[1]
+
+
+# ==================================== churn determinism: replay and resume
+def test_participation_schedule_is_deterministic():
+    sc = PRESETS["churn"]
+    m1 = sc.participation(8, 5)
+    m2 = sc.participation(8, 5)
+    np.testing.assert_array_equal(m1, m2)
+    assert m1.dtype == bool and m1.shape == (8, 5)
+    # churn actually bites at these probabilities
+    assert not m1.all()
+    # a reseeded scenario draws a different schedule
+    sc2 = Scenario("churn2", straggle=0.25, dropout=0.05, seed=99)
+    assert not np.array_equal(m1, sc2.participation(8, 5))
+
+
+def test_dropout_is_permanent():
+    sc = Scenario("drop", dropout=0.3, seed=4)
+    m = sc.participation(12, 6)
+    for a in range(6):
+        gone = np.flatnonzero(~m[:, a])
+        if gone.size:
+            assert not m[gone[0]:, a].any()
+
+
+def test_churn_replay_is_bit_identical():
+    """Two fresh runs of the same seeded scenario produce the same
+    participant lists, history floats, and byte ledger."""
+    outs = []
+    for _ in range(2):
+        t = MeteredTransport(codec=make_codec("fp16"))
+        f = _fit("eager", t, scenario=PRESETS["churn"], rounds=5)
+        outs.append((f.history, t.total_bits, np.asarray(f.g)))
+    assert outs[0][0] == outs[1][0]
+    assert outs[0][1] == outs[1][1]
+    np.testing.assert_array_equal(outs[0][2], outs[1][2])
+
+
+@pytest.mark.parametrize("variant_cls", [FedAvgVariant,
+                                         AssistedLearningVariant])
+def test_midrun_resume_reproduces_churn_and_ledger(tmp_path, variant_cls):
+    """Save/restore mid-run under churn + DP + codec: the resumed session
+    replays the exact remaining churn schedule and books exactly the
+    remaining bytes — predictions, history, and DP tallies all equal the
+    uninterrupted run."""
+    Xs, classes = _cohort()
+    sc = Scenario("mix", straggle=0.25, dropout=0.1, seed=3)
+    cfg = SessionConfig(num_classes=K, max_rounds=5)
+
+    def mk_engine():
+        t = MeteredTransport(codec=make_codec("fp16"), privacy=_dp(),
+                             accountant=make_accountant("rdp"))
+        return Protocol(cfg, transport=t, variant=variant_cls(),
+                        scenario=sc), t
+
+    def mk_eps():
+        return endpoints_for([LogisticRegression(steps=25) for _ in Xs], Xs)
+
+    full_eng, t_full = mk_engine()
+    s = full_eng.start(jax.random.key(7), mk_eps(), classes)
+    s.run()
+    f_full = s.fitted()
+
+    a_eng, t_a = mk_engine()
+    s = a_eng.start(jax.random.key(7), mk_eps(), classes)
+    s.run(max_rounds=2)
+    s.checkpoint(str(tmp_path))
+    b_eng, t_b = mk_engine()
+    s2 = b_eng.resume(str(tmp_path), mk_eps(), classes)
+    s2.run()
+    f_res = s2.fitted()
+
+    np.testing.assert_array_equal(np.asarray(f_full.predict(Xs)),
+                                  np.asarray(f_res.predict(Xs)))
+    assert f_full.history == f_res.history
+    assert t_full.total_bits == t_a.total_bits + t_b.total_bits
+    # the resumed accountant carries the pre-pause releases forward
+    assert t_full.accountant.report(t_full.privacy) == \
+        t_b.accountant.report(t_b.privacy)
+
+
+# ============================================================ Assisted Learning
+def test_al_residual_boosting_learns():
+    t = MeteredTransport()
+    f = _fit("eager", t, variant=AssistedLearningVariant(), rounds=4)
+    accs = [r["train_acc"] for r in f.history]
+    assert accs[-1] >= accs[0] and accs[-1] > 0.8
+    assert len(f.components) == 4 * 3          # every hop keeps a component
+    # residual shrinks monotonically under L2 boosting on a clean channel
+    norms = [r["resid_norm"] for r in f.history]
+    assert norms == sorted(norms, reverse=True)
+    assert t.bits_by_kind().get("residual", 0) > 0
+
+
+def test_al_budget_skip_leaves_residual_stale():
+    """A link cap that starves the ring mid-session skips ResidualMsg hops;
+    the receiver fits yesterday's residual but the session still runs to
+    completion with a full component set."""
+    costs = BudgetSpec().payload_costs((60, K))
+    t = BudgetedTransport(BudgetSpec(link_bits=costs[-1] * 2))
+    f = _fit("eager", t, variant=AssistedLearningVariant(), rounds=4)
+    assert len(t.skipped) > 0
+    assert len(f.components) == 4 * 3
+    # stale hops stall the residual: no longer strictly decreasing
+    norms = [r["resid_norm"] for r in f.history]
+    assert norms[-1] >= min(norms) - 1e-6
+
+
+def test_fedavg_rejects_heterogeneous_roster():
+    Xs, classes = _cohort()
+    Xs[1] = jnp.concatenate([Xs[1], Xs[1][:, :1]], axis=1)  # 3-wide block
+    engine = Protocol(SessionConfig(num_classes=K, max_rounds=2),
+                      variant=FedAvgVariant())
+    with pytest.raises(ValueError, match="equal widths"):
+        engine.fit(jax.random.key(0),
+                   endpoints_for([LogisticRegression(steps=5)
+                                  for _ in Xs], Xs), classes)
+
+
+# ======================================================== coherence validation
+def test_scenario_knob_ranges():
+    with pytest.raises(ValueError, match="subsample"):
+        Scenario("bad", subsample=1.5)
+    with pytest.raises(ValueError, match="dropout"):
+        Scenario("bad", dropout=1.0)
+    with pytest.raises(ValueError, match="partition"):
+        Scenario("bad", partition="bogus")
+    with pytest.raises(ValueError, match="clock_skew"):
+        Scenario("bad", clock_skew=(0, -1))
+
+
+def test_scenario_validate_rejects_incoherent_combos():
+    class Stale:
+        stale = True
+
+    class Seq:
+        stale = False
+
+    with pytest.raises(ValueError, match="empty round"):
+        Scenario("s", subsample=0.05).validate(4, Seq(), FedAvgVariant())
+    with pytest.raises(ValueError, match="async"):
+        Scenario("s", clock_skew=(0, 1, 0, 0)).validate(
+            4, Seq(), make_variant("ascii"))
+    with pytest.raises(ValueError, match="fedavg"):
+        Scenario("s", clock_skew=(0, 1, 0, 0)).validate(
+            4, Stale(), FedAvgVariant())
+    with pytest.raises(ValueError, match="roster has"):
+        Scenario("s", clock_skew=(0, 1)).validate(
+            4, Stale(), make_variant("ascii"))
+    # the coherent combos pass
+    Scenario("s", subsample=0.5).validate(4, Seq(), FedAvgVariant())
+    Scenario("s", clock_skew=(0, 1, 0, 0)).validate(
+        4, Stale(), make_variant("ascii"))
+
+
+def test_engine_rejects_controller_on_variant_traffic():
+    Xs, classes = _cohort()
+    t = MeteredTransport(controller=AdaptiveController(stat="l2"))
+    engine = Protocol(SessionConfig(num_classes=K, max_rounds=2),
+                      transport=t, variant=FedAvgVariant())
+    with pytest.raises(ValueError, match="controller"):
+        engine.start(jax.random.key(0),
+                     endpoints_for([LogisticRegression(steps=5)
+                                    for _ in Xs], Xs), classes)
+
+
+def test_al_has_no_compiled_lowering():
+    with pytest.raises(ValueError, match="no compiled lowering"):
+        _fit("compiled", MeteredTransport(),
+             variant=AssistedLearningVariant())
+
+
+# ========================================================== subsampled RDP
+MECH = GaussianMechanism(epsilon=2.0, clip=1.0)
+
+
+def test_sgm_rdp_reduces_to_full_batch_at_q1():
+    nu = MECH.sigma / MECH.clip
+    for a in (2, 4, 16):
+        assert sgm_rdp(a, 1.0, nu) == pytest.approx(a / (2 * nu * nu))
+
+
+def test_subsampled_epsilon_amplifies_and_caps():
+    for k in (1, 3, 10):
+        full = rdp_epsilon(k, MECH)[0]
+        # q = 1: exactly the full-batch bound
+        assert subsampled_rdp_epsilon(k, MECH, 1.0)[0] == pytest.approx(full)
+        # q < 1 amplifies, monotonically in q, never above the cap
+        prev = 0.0
+        for q in (0.1, 0.3, 0.6, 0.9):
+            eps = subsampled_rdp_epsilon(k, MECH, q)[0]
+            assert eps <= full + 1e-12
+            assert eps >= prev - 1e-12
+            prev = eps
+
+
+def test_subsampled_accountant_report_carries_cap():
+    acct = SubsampledRDPAccountant(q=0.5)
+    for _ in range(4):
+        acct.record("a1")
+    rep = acct.report(MECH)["a1"]
+    assert rep["releases"] == 4 and rep["q"] == 0.5
+    assert rep["epsilon"] <= rep["epsilon_full_batch"] + 1e-12
+    assert rep["epsilon_full_batch"] <= rep["epsilon_additive"] + 1e-12
+    # matches the RDP accountant's full-batch figure on the same trace
+    full = RDPAccountant()
+    for _ in range(4):
+        full.record("a1")
+    assert rep["epsilon_full_batch"] == \
+        pytest.approx(full.report(MECH)["a1"]["epsilon"])
+    with pytest.raises(ValueError, match="q must be"):
+        SubsampledRDPAccountant(q=0.0)
+
+
+def test_make_accountant_upgrades_on_q():
+    assert isinstance(make_accountant("subsampled-rdp", q=0.4),
+                      SubsampledRDPAccountant)
+    assert isinstance(make_accountant("rdp", q=0.4),
+                      SubsampledRDPAccountant)
+    assert isinstance(make_accountant("rdp"), RDPAccountant)
+    assert not isinstance(make_accountant("rdp"), SubsampledRDPAccountant)
