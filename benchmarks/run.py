@@ -72,6 +72,16 @@ def main() -> None:
           f"{sr['speedup_batched_vs_sequential']:.2f}x;"
           f"verified={sr['verified_bit_identical']} (BENCH_serve.json)")
 
+    _section("telemetry (instrumented vs dark, bit-identity + overhead)")
+    from benchmarks import telemetry_bench
+    tb = telemetry_bench.run(repeats=5 if args.full else 3,
+                             out="BENCH_telemetry.json")
+    print(f"telemetry_instrumented,"
+          f"{tb['instrumented']['seconds'] * 1e6:.0f},"
+          f"overhead={tb['overhead_ratio']:.3f}x;"
+          f"bit_identical={tb['bit_identical']};"
+          f"spans={tb['spans']} (BENCH_telemetry.json)")
+
     _section("kernels (Pallas interpret vs jnp oracle)")
     from benchmarks import kernels_bench
     for r in kernels_bench.run():

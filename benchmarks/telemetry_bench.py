@@ -1,0 +1,182 @@
+"""Telemetry overhead: the instrumented protocol vs the same run dark.
+
+The telemetry subsystem's contract is *observation only*: attaching a
+:class:`repro.telemetry.Telemetry` (registry + span tracer) to a protocol
+run must not change a single emitted bit, and must cost almost nothing —
+the registry increments ride bookkeeping walks that already run host-side,
+and spans fence on values the host was about to block on anyway.  This
+bench pins both halves:
+
+  * **bit identity** — a budgeted + DP run with telemetry attached produces
+    byte-identical predictions, ledger entries, and accountant releases to
+    the same run without it;
+  * **overhead** — min-over-repeats wall time of the instrumented run is
+    within ``--max-overhead`` (default 1.05x) of the uninstrumented run.
+    Min-over-repeats with alternating order, after a shared warmup, so the
+    comparison sees neither compile time (telemetry never changes the
+    traced program) nor one-sided scheduler noise.
+
+Emits ``BENCH_telemetry.json``.  ``--check`` is the CI gate: it asserts
+both invariants and schema-validates the trace/metrics artifacts the
+instrumented run exports (via :mod:`repro.telemetry.check`), exiting
+non-zero on any violation.
+
+  PYTHONPATH=src python benchmarks/telemetry_bench.py --repeats 5
+  PYTHONPATH=src python benchmarks/telemetry_bench.py --check
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.comm.budget import BudgetSpec, BudgetedTransport
+from repro.comm.privacy import GaussianMechanism
+from repro.core.engine import Protocol, SessionConfig, endpoints_for
+from repro.core.transport import TransportLog
+from repro.data import synthetic
+from repro.data.partition import train_test_split, vertical_split
+from repro.learners.logistic import LogisticRegression
+from repro.telemetry import Telemetry
+from repro.telemetry.check import validate_file
+
+
+def _run_once(data, *, backend, rounds, steps, telemetry):
+    """One fit + serve pass of the pinned workload; returns
+    (predictions, transport, fitted ensemble size)."""
+    Xtr, ctr, Xte, num_classes = data
+    transport = BudgetedTransport(BudgetSpec(session_bits=600_000),
+                                  log=TransportLog(),
+                                  privacy=GaussianMechanism(epsilon=1.0))
+    proto = Protocol(SessionConfig(num_classes=num_classes,
+                                   max_rounds=rounds),
+                     transport=transport, backend=backend,
+                     telemetry=telemetry)
+    eps = endpoints_for([LogisticRegression(steps=steps) for _ in Xtr], Xtr)
+    proto.fit(jax.random.key(7), eps, ctr)
+    preds = np.asarray(proto.predict_distributed(Xte))
+    return preds, transport
+
+
+def run(*, backend="compiled", rounds=3, steps=60, n=400, repeats=3,
+        out=None, artifact_dir=None):
+    ds = synthetic.blob_fig3(jax.random.key(0), n=n)
+    tr, te = train_test_split(0, ds.X.shape[0])
+    Xs = vertical_split(ds.X, ds.splits)
+    data = ([x[tr] for x in Xs], ds.classes[tr],
+            [x[te] for x in Xs], ds.num_classes)
+
+    # warmup both arms once — populates the (shared) compile caches and
+    # pins bit identity on the full run, not just the timed reruns
+    tele = Telemetry()
+    preds_on, t_on = _run_once(data, backend=backend, rounds=rounds,
+                               steps=steps, telemetry=tele)
+    preds_off, t_off = _run_once(data, backend=backend, rounds=rounds,
+                                 steps=steps, telemetry=None)
+    bit_identical = (
+        bool((preds_on == preds_off).all())
+        and t_on.log.entries == t_off.log.entries
+        and t_on.accountant.releases == t_off.accountant.releases)
+    registry_matches_ledger = (
+        tele.registry.total("wire_bits_total") == t_on.log.total_bits
+        and tele.registry.total("dp_releases_total")
+        == sum(t_on.accountant.releases.values()))
+
+    times = {"instrumented": [], "uninstrumented": []}
+    for _ in range(repeats):
+        for name, make in (("uninstrumented", lambda: None),
+                           ("instrumented", Telemetry)):
+            t0 = time.perf_counter()
+            _run_once(data, backend=backend, rounds=rounds, steps=steps,
+                      telemetry=make())
+            times[name].append(time.perf_counter() - t0)
+
+    on, off = min(times["instrumented"]), min(times["uninstrumented"])
+    result = {
+        "backend": backend, "rounds": rounds, "steps": steps,
+        "repeats": repeats,
+        "instrumented": {"seconds": on},
+        "uninstrumented": {"seconds": off},
+        "overhead_ratio": on / off,
+        "bit_identical": bit_identical,
+        "registry_matches_ledger": registry_matches_ledger,
+        "spans": len(tele.tracer.spans),
+        "spans_well_formed": tele.tracer.well_formed(),
+        "wire_bits_total": tele.registry.total("wire_bits_total"),
+        "dp_releases_total": tele.registry.total("dp_releases_total"),
+    }
+    if artifact_dir is not None:
+        paths = [os.path.join(artifact_dir, "trace.jsonl"),
+                 os.path.join(artifact_dir, "metrics.json"),
+                 os.path.join(artifact_dir, "metrics.prom")]
+        tele.write_artifacts(trace=paths[0], metrics_out=paths[1],
+                             transport=t_on)
+        tele.write_artifacts(metrics_out=paths[2], transport=t_on)
+        result["artifacts"] = paths
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=2)
+    return result
+
+
+def check(*, max_overhead=1.05, repeats=5, out="BENCH_telemetry.json"):
+    """CI gate: bit identity, overhead bound, artifact schemas."""
+    with tempfile.TemporaryDirectory() as d:
+        res = run(repeats=repeats, out=out, artifact_dir=d)
+        failures = []
+        if not res["bit_identical"]:
+            failures.append("telemetry changed the run: predictions, "
+                            "ledger, or releases differ with it attached")
+        if not res["registry_matches_ledger"]:
+            failures.append("registry totals disagree with the transport "
+                            "ledger / accountant")
+        if not res["spans_well_formed"]:
+            failures.append("span tree is malformed")
+        if res["overhead_ratio"] > max_overhead:
+            failures.append(
+                f"overhead {res['overhead_ratio']:.3f}x exceeds the "
+                f"{max_overhead}x bound ({res['instrumented']['seconds']:.4f}s "
+                f"vs {res['uninstrumented']['seconds']:.4f}s)")
+        for path in res["artifacts"]:
+            errs = validate_file(path)
+            failures.extend(f"{os.path.basename(path)}: {e}" for e in errs)
+    for f in failures:
+        print(f"FAIL: {f}")
+    if not failures:
+        print(f"telemetry check OK: overhead "
+              f"{res['overhead_ratio']:.3f}x <= {max_overhead}x, "
+              f"bit-identical, {res['spans']} spans, artifacts valid")
+    return len(failures)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--backend", default="compiled",
+                    choices=["eager", "compiled"])
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_telemetry.json")
+    ap.add_argument("--max-overhead", type=float, default=1.05,
+                    help="--check fails if instrumented/uninstrumented "
+                         "min-time ratio exceeds this")
+    ap.add_argument("--check", action="store_true",
+                    help="CI gate: assert bit identity, the overhead "
+                         "bound, and artifact schemas; exit non-zero on "
+                         "violation")
+    args = ap.parse_args()
+    if args.check:
+        raise SystemExit(check(max_overhead=args.max_overhead,
+                               repeats=args.repeats, out=args.out))
+    res = run(backend=args.backend, rounds=args.rounds, steps=args.steps,
+              repeats=args.repeats, out=args.out)
+    print(json.dumps(res, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -171,6 +171,27 @@ class BudgetedTransport(MeteredTransport):
         # from SessionState.comm on resume; this process's log starts empty)
         self.carryover_bits = 0
 
+    # ------------------------------------------------------- budget ledger
+    # Every skip and every spend — eager ladder walks here, compiled ledger
+    # replays in Protocol._replay_traffic/_replay_serve and the scenario
+    # _replay — goes through these two methods, so the telemetry registry
+    # (attached to self.log) sees identical budget traffic on both backends.
+
+    def record_skip(self, link) -> None:
+        """Book one dropped hop on ``link`` = (src, dst)."""
+        self.skipped.append(link)
+        registry = getattr(self.log, "registry", None)
+        if registry is not None:
+            registry.inc("budget_skips_total", 1, src=link[0], dst=link[1])
+
+    def record_spend(self, link, cost: int, rung: int) -> None:
+        """Book ``cost`` bits of link spend for a hop shipped at ladder
+        index ``rung``."""
+        self.link_spent[link] = self.link_spent.get(link, 0) + cost
+        registry = getattr(self.log, "registry", None)
+        if registry is not None:
+            registry.inc("hops_by_rung_total", 1, rung=int(rung))
+
     def _choose_codec(self, w_prev, w_out) -> None:
         # rung choice already happened in interchange (the controller floor
         # feeds the ladder walk); the base-class per-hop hook must not run
@@ -210,10 +231,10 @@ class BudgetedTransport(MeteredTransport):
             # score; a session-budget skip ends round scheduling
             if rem_s < min(costs):
                 self.exhausted = True
-            self.skipped.append(link)
+            self.record_skip(link)
             return w, codec_state
         self.codec = self.budget.ladder[idx]           # degrade precision
-        self.link_spent[link] = self.link_spent.get(link, 0) + costs[idx]
+        self.record_spend(link, costs[idx], idx)
         return super().interchange(src, dst, w, r, alpha, reweight,
                                    standard, key=key,
                                    codec_state=codec_state, _w_out=w_out)
@@ -244,10 +265,10 @@ class BudgetedTransport(MeteredTransport):
         if idx is None:
             if rem_s < min(costs):
                 self.exhausted = True
-            self.skipped.append(link)
+            self.record_skip(link)
             return None
         self.codec = self.budget.ladder[idx]           # degrade precision
-        self.link_spent[link] = self.link_spent.get(link, 0) + costs[idx]
+        self.record_spend(link, costs[idx], idx)
         return super().serve_block(src, dst, block, key=key)
 
     def ship(self, src, dst, payload, wrap, *, key=None):
@@ -270,8 +291,8 @@ class BudgetedTransport(MeteredTransport):
         if idx is None:
             if rem_s < min(costs):
                 self.exhausted = True
-            self.skipped.append(link)
+            self.record_skip(link)
             return None
         self.codec = self.budget.ladder[idx]           # degrade precision
-        self.link_spent[link] = self.link_spent.get(link, 0) + costs[idx]
+        self.record_spend(link, costs[idx], idx)
         return super().ship(src, dst, payload, wrap, key=key)

@@ -77,8 +77,17 @@ class PrivacyAccountant:
     ignorance vector."""
     releases: dict = field(default_factory=dict)   # agent name -> count
 
+    # optional repro.telemetry MetricsRegistry.  Class attribute, not a
+    # dataclass field: the RDP accountants (control/accounting.py) subclass
+    # this dataclass and add their own defaulted fields, so a new field here
+    # would reorder their signatures.  Telemetry sets it per instance; the
+    # inherited ``record`` then emits for every accountant flavor.
+    registry = None
+
     def record(self, agent: str) -> None:
         self.releases[agent] = self.releases.get(agent, 0) + 1
+        if self.registry is not None:
+            self.registry.inc("dp_releases_total", 1, agent=agent)
 
     def spent(self, agent: str, mechanism: GaussianMechanism
               ) -> tuple[float, float]:

@@ -35,6 +35,11 @@ Reads are *monotone-safe*: ``spent`` and ``report`` are pure functions of
 the release counts (the conversion is cached per (k, ν, δ), never stored on
 the accountant), so reading ε mid-session, checkpointing, and resuming can
 neither double-count nor reset a release.
+
+Telemetry rides the inherited ``record``: the base accountant's optional
+registry hook (``dp_releases_total{agent}``, a class attribute so these
+dataclass subclasses keep their field order) fires for RDP flavors too —
+one emission point for every accountant the repo ships.
 """
 from __future__ import annotations
 

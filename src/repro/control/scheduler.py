@@ -101,9 +101,18 @@ class BudgetAwareScheduler(Scheduler):
 
     def round_order(self, round_idx: int, active: list[int]) -> list[int]:
         spent = self._spent_by_agent(active)
-        return sorted(active,
-                      key=lambda m: (spent.get(m, 0),
-                                     -self._reward_ema.get(m, 0.0), m))
+        order = sorted(active,
+                       key=lambda m: (spent.get(m, 0),
+                                      -self._reward_ema.get(m, 0.0), m))
+        # telemetry (when the transport's ledger carries a registry): did
+        # budget pressure actually reorder this round?  Observation only —
+        # the order is already decided
+        registry = getattr(getattr(self._transport, "log", None),
+                           "registry", None)
+        if registry is not None:
+            registry.inc("scheduler_rounds_total", 1,
+                         changed=order != sorted(active))
+        return order
 
     # ---- checkpointing ------------------------------------------------------
     def state_dict(self) -> dict:

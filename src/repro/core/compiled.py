@@ -326,12 +326,15 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
             outs = []
             # Agents unrolled: heterogeneous feature widths / cores, but a
             # fixed chain shape — exactly Algorithm 1's inner lines 3-11.
+            # named_scope tags the HLO so profiler traces group ops by hop
+            # (metadata only — the lowered computation is unchanged).
             for j, core in enumerate(cores):
-                key, sub = jax.random.split(key)
-                params = core.fit(core.init(sub, feature_shapes[j]), sub,
-                                  Xs[j], onehot, w)
-                r = (core.predict(params, Xs[j]) == classes
-                     ).astype(jnp.float32)
+                with jax.named_scope(f"ascii_hop_{j}"):
+                    key, sub = jax.random.split(key)
+                    params = core.fit(core.init(sub, feature_shapes[j]), sub,
+                                      Xs[j], onehot, w)
+                    r = (core.predict(params, Xs[j]) == classes
+                         ).astype(jnp.float32)
                 u_in = ones if (j == 0 or not plan.upstream) else u
                 a, rbar = scores.model_weight(w, r, k, u=u_in,
                                               alpha_cap=plan.alpha_cap)
@@ -598,8 +601,12 @@ def make_serve_fn(plan: SessionPlan, feature_shapes: tuple,
                 pred = _core.predict(p, _X)
                 return acc + jnp.where(v, a, 0.0) * encode_labels(pred, k), None
 
-            block, _ = jax.lax.scan(
-                body, jnp.zeros((n, k), jnp.float32), (params[j], a_j, v_j))
+            # named_scope tags the HLO per serve block for profiler traces
+            # (metadata only — the lowered computation is unchanged)
+            with jax.named_scope(f"serve_block_{j}"):
+                block, _ = jax.lax.scan(
+                    body, jnp.zeros((n, k), jnp.float32),
+                    (params[j], a_j, v_j))
             if j == 0:
                 # the head agent's own block never crosses the wire
                 blocks.append(block)

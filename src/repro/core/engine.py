@@ -49,6 +49,7 @@ Quickstart::
 from __future__ import annotations
 
 import abc
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Any, Callable, Sequence
 
@@ -769,34 +770,35 @@ class ASCIIVariant(ProtocolVariant):
         u = jnp.ones((n,), jnp.float32)
         stop = False
         for j, m in enumerate(order):
-            st.key, sub = jax.random.split(st.key)
-            w_fit = session.fit_weight(m, st.w)
-            params = eps[m].fit_local(sub, session.classes, w_fit, k)
-            r = eps[m].reward(params, session.classes)
-            if (not cfg.upstream) or j == 0:
-                a, rbar = scores.model_weight(st.w, r, k,
-                                              alpha_cap=cfg.alpha_cap)
-            else:
-                a, rbar = scores.model_weight(st.w, r, k, u=u,
-                                              alpha_cap=cfg.alpha_cap)
-            rec["alphas"].append(float(a))
-            rec["accs"].append(float(rbar))
-            session.scheduler.observe(m, float(rbar))
-            if cfg.stop_on_negative_alpha and float(a) <= 0:
-                return True            # Algorithm 1, line 8
-            st.components.append(Component(m, t, float(a), params))
-            u = scores.upstream_factor_update(u, a, r, k)
             dst = eps[order[(j + 1) % len(order)]]
-            link_state = (None if st.codec_state is None
-                          else st.codec_state.get(eps[m].name))
-            st.w, link_state = session.transport.interchange(
-                eps[m], dst, st.w, r, a, reweight, standard,
-                key=sub if session.transport.has_channel else None,
-                codec_state=link_state)
-            if link_state is not None:
-                if st.codec_state is None:
-                    st.codec_state = {}
-                st.codec_state[eps[m].name] = link_state
+            with session._span("hop", src=eps[m].name, dst=dst.name):
+                st.key, sub = jax.random.split(st.key)
+                w_fit = session.fit_weight(m, st.w)
+                params = eps[m].fit_local(sub, session.classes, w_fit, k)
+                r = eps[m].reward(params, session.classes)
+                if (not cfg.upstream) or j == 0:
+                    a, rbar = scores.model_weight(st.w, r, k,
+                                                  alpha_cap=cfg.alpha_cap)
+                else:
+                    a, rbar = scores.model_weight(st.w, r, k, u=u,
+                                                  alpha_cap=cfg.alpha_cap)
+                rec["alphas"].append(float(a))
+                rec["accs"].append(float(rbar))
+                session.scheduler.observe(m, float(rbar))
+                if cfg.stop_on_negative_alpha and float(a) <= 0:
+                    return True        # Algorithm 1, line 8
+                st.components.append(Component(m, t, float(a), params))
+                u = scores.upstream_factor_update(u, a, r, k)
+                link_state = (None if st.codec_state is None
+                              else st.codec_state.get(eps[m].name))
+                st.w, link_state = session.transport.interchange(
+                    eps[m], dst, st.w, r, a, reweight, standard,
+                    key=sub if session.transport.has_channel else None,
+                    codec_state=link_state)
+                if link_state is not None:
+                    if st.codec_state is None:
+                        st.codec_state = {}
+                    st.codec_state[eps[m].name] = link_state
         return stop
 
     def fitted(self, session: "Session") -> "FittedASCII":
@@ -933,11 +935,17 @@ class Session:
                  classes: jnp.ndarray, state: SessionState,
                  validation: tuple[Sequence[jnp.ndarray], jnp.ndarray] | None = None,
                  variant: ProtocolVariant | None = None,
-                 scenario=None,
+                 scenario=None, telemetry=None,
                  _send_setup: bool = True) -> None:
         self.cfg = cfg
         self.scheduler = scheduler
         self.transport = transport
+        # optional repro.telemetry.Telemetry: pure observation — attached
+        # before any traffic so the registry sees every booking, never read
+        # by protocol logic (telemetry on == off, bit for bit)
+        self.telemetry = telemetry
+        if telemetry is not None:
+            telemetry.attach_transport(transport)
         self.endpoints = list(endpoints)
         for i, ep in enumerate(self.endpoints):
             assert ep.agent_id == i, "endpoint agent_ids must be 0..M-1"
@@ -984,6 +992,13 @@ class Session:
             self._send_setup()
 
     # ---- wiring -------------------------------------------------------------
+    def _span(self, name: str, step: int | None = None, **attrs):
+        """A telemetry span when telemetry is attached, else a no-op
+        context — call sites stay branch-free."""
+        if self.telemetry is None:
+            return nullcontext()
+        return self.telemetry.span(name, step, **attrs)
+
     def _send_setup_to(self, ep: AgentEndpoint) -> None:
         """Collation setup for one endpoint: the head agent shares labels
         and sample IDs (metered under Fig. 4)."""
@@ -1050,8 +1065,9 @@ class Session:
             order = [m for m in order if self._participation[t, m]]
             rec["participants"] = list(order)
         stop = False
-        if order:
-            stop = self.variant.run_round(self, order, rec)
+        with self._span("round", step=t, agents=len(order)):
+            if order:
+                stop = self.variant.run_round(self, order, rec)
         # an all-churned round is an empty round, not a stop: stragglers
         # come back
 
@@ -1135,10 +1151,12 @@ class Session:
     def run(self, max_rounds: int | None = None) -> SessionState:
         """Drive ``step()`` to completion (or for ``max_rounds`` more)."""
         budget = float("inf") if max_rounds is None else max_rounds
-        while budget > 0:
-            budget -= 1
-            if not self.step():
-                break
+        with self._span("session", backend="eager",
+                        agents=len(self.endpoints)):
+            while budget > 0:
+                budget -= 1
+                if not self.step():
+                    break
         return self.state
 
     # ---- results ------------------------------------------------------------
@@ -1174,19 +1192,22 @@ class Session:
             from repro.comm.codecs import serve_key
             key = serve_key(self.state.key, request)
         total = None
-        for i, ep in enumerate(self.endpoints):
-            X = None if Xs is None else Xs[i]
-            block = ep.score_block(self.state.components,
-                                   self.cfg.num_classes, X=X,
-                                   max_round=max_round)
-            if ep is head:
-                contrib = block
-            else:
-                sub = None if key is None else jax.random.fold_in(key, i)
-                contrib = self.transport.serve_block(ep, head, block, key=sub)
-                if contrib is None:
-                    continue           # budget skip: head-only fallback
-            total = contrib if total is None else total + contrib
+        with self._span("serve", backend="eager",
+                        agents=len(self.endpoints)):
+            for i, ep in enumerate(self.endpoints):
+                X = None if Xs is None else Xs[i]
+                block = ep.score_block(self.state.components,
+                                       self.cfg.num_classes, X=X,
+                                       max_round=max_round)
+                if ep is head:
+                    contrib = block
+                else:
+                    sub = None if key is None else jax.random.fold_in(key, i)
+                    contrib = self.transport.serve_block(ep, head, block,
+                                                         key=sub)
+                    if contrib is None:
+                        continue       # budget skip: head-only fallback
+                total = contrib if total is None else total + contrib
         return jnp.argmax(total, axis=-1)
 
     # ---- checkpointing ------------------------------------------------------
@@ -1273,7 +1294,7 @@ class Protocol:
                  transport: Transport | None = None,
                  backend: str = "eager",
                  variant: ProtocolVariant | None = None,
-                 scenario=None) -> None:
+                 scenario=None, telemetry=None) -> None:
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
         self.cfg = cfg
@@ -1282,6 +1303,10 @@ class Protocol:
         self.backend = backend
         self.variant = variant if variant is not None else ASCIIVariant()
         self.scenario = scenario
+        # optional repro.telemetry.Telemetry, threaded into sessions (eager)
+        # and attached around the ledger replay (compiled) — observation
+        # only, never read by protocol logic
+        self.telemetry = telemetry
         # last fit() context, so predict_distributed works on both backends:
         # the eager session, or the compiled (endpoints, plan, result)
         self._fit_key = None
@@ -1296,7 +1321,8 @@ class Protocol:
         self.scheduler.reset()
         return Session(self.cfg, self.scheduler, self.transport, endpoints,
                        classes, state, validation=validation,
-                       variant=self.variant, scenario=self.scenario)
+                       variant=self.variant, scenario=self.scenario,
+                       telemetry=self.telemetry)
 
     def resume(self, directory: str, endpoints: Sequence[AgentEndpoint],
                classes: jnp.ndarray, validation=None,
@@ -1316,7 +1342,7 @@ class Protocol:
         session = Session(self.cfg, self.scheduler, self.transport, endpoints,
                           classes, state, validation=validation,
                           variant=self.variant, scenario=self.scenario,
-                          _send_setup=False)
+                          telemetry=self.telemetry, _send_setup=False)
         session._comm_restore(state.comm)
         return session
 
@@ -1331,6 +1357,15 @@ class Protocol:
         return session.fitted()
 
     # ---- compiled backend ---------------------------------------------------
+    def _span(self, name: str, step: int | None = None, **attrs):
+        if self.telemetry is None:
+            return nullcontext()
+        return self.telemetry.span(name, step, **attrs)
+
+    def _fence(self, value):
+        return value if self.telemetry is None else \
+            self.telemetry.fence(value)
+
     def _fit_compiled(self, key, endpoints: Sequence[AgentEndpoint],
                       classes: jnp.ndarray, validation) -> FittedASCII:
         """One-program execution of the whole run (core/compiled.py), with
@@ -1338,6 +1373,12 @@ class Protocol:
         byte-identical to the eager path."""
         from repro.core import compiled
         cfg = self.cfg
+        if self.telemetry is not None:
+            # attach before any booking: the replay walk below (and the
+            # variant lowerings' replays) then emit into the registry
+            # through the same TransportLog/accountant hooks the eager
+            # path uses
+            self.telemetry.attach_transport(self.transport)
         if not isinstance(self.variant, ASCIIVariant):
             # protocol variants own their lowering (repro.scenarios.compiled
             # lowers FedAvg's homogeneous round into a lax.scan); the engine
@@ -1381,11 +1422,16 @@ class Protocol:
             serve_codec=self.transport.serve_codec,
             controller=self.transport.controller,
             serve_controller=self.transport.serve_controller)
-        result = compiled.compiled_session(
-            plan, key, tuple(ep.X for ep in endpoints), classes)
+        with self._span("session", backend="compiled",
+                        agents=len(endpoints)):
+            # the fence closes the span at computation-done, not at
+            # async-dispatch enqueue — timing only, values untouched
+            result = self._fence(compiled.compiled_session(
+                plan, key, tuple(ep.X for ep in endpoints), classes))
         fitted = compiled.fitted_from_result(
             plan, result, [ep.learner for ep in endpoints])
-        self._replay_traffic(endpoints, classes, result, plan)
+        with self._span("replay", backend="compiled"):
+            self._replay_traffic(endpoints, classes, result, plan)
         self._compiled_ctx = (tuple(endpoints), plan, result)
         return fitted
 
@@ -1420,7 +1466,7 @@ class Protocol:
                 link = (endpoints[j].name, dst.name)
                 if not sent[t, j]:
                     if budgeted:
-                        self.transport.skipped.append(link)
+                        self.transport.record_skip(link)
                     continue
                 codec = ladder[int(codec_idx[t, j])] if ladder else None
                 wire_bits = codec.wire_bits(n) if codec is not None else None
@@ -1432,9 +1478,9 @@ class Protocol:
                 if self.transport.privacy is not None:
                     self.transport.accountant.record(endpoints[j].name)
                 if budgeted:
-                    cost = budget.hop_costs(n)[int(codec_idx[t, j])]
-                    self.transport.link_spent[link] = \
-                        self.transport.link_spent.get(link, 0) + cost
+                    rung = int(codec_idx[t, j])
+                    self.transport.record_spend(
+                        link, budget.hop_costs(n)[rung], rung)
         if budgeted:
             self.transport.exhausted = bool(result.exhausted)
 
@@ -1479,10 +1525,13 @@ class Protocol:
             valid = jnp.logical_and(valid, mask)
         shape = (int(Xs_serve[0].shape[0]), self.cfg.num_classes)
         rem_session, rem_link = self._serve_remaining(endpoints, shape, plan)
-        serve = compiled.serve_session(plan, result, key, Xs_serve,
-                                       valid=valid, rem_session=rem_session,
-                                       rem_link=rem_link)
-        self._replay_serve(endpoints, serve, shape, plan)
+        with self._span("serve", backend="compiled",
+                        agents=len(endpoints)):
+            serve = self._fence(compiled.serve_session(
+                plan, result, key, Xs_serve, valid=valid,
+                rem_session=rem_session, rem_link=rem_link))
+        with self._span("replay", backend="compiled"):
+            self._replay_serve(endpoints, serve, shape, plan)
         return serve.preds
 
     def _evolved_key(self, result):
@@ -1530,7 +1579,7 @@ class Protocol:
             link = (endpoints[j].name, head.name)
             if not sent[j]:
                 if budgeted:
-                    self.transport.skipped.append(link)
+                    self.transport.record_skip(link)
                 continue
             codec = ladder[int(rungs[j])] if int(rungs[j]) >= 0 else None
             wire_bits = (int(codec.wire_bits(shape))
@@ -1541,8 +1590,7 @@ class Protocol:
             if self.transport.privacy is not None:
                 self.transport.accountant.record(endpoints[j].name)
             if budgeted:
-                self.transport.link_spent[link] = \
-                    self.transport.link_spent.get(link, 0) + wire_bits
+                self.transport.record_spend(link, wire_bits, int(rungs[j]))
         if budgeted:
             self.transport.exhausted = bool(self.transport.exhausted
                                             or bool(serve.exhausted))

@@ -11,6 +11,17 @@ this ledger, so benchmarks/fig4_transmission.py reads its accounting from
 `MeteredTransport.log`.  `TransportLog` stays importable here for
 back-compat (`protocol.fit(..., transport=TransportLog())` still works and
 is wrapped into a MeteredTransport by the engine).
+
+Bookkeeping is incremental with one source of truth: every booking passes
+through :meth:`TransportLog.send_bits`, which appends the entry *and*
+updates the (kind, src, dst) accumulator that `total_bits`,
+`bits_by_kind`, `bits_by_src`, and `snapshot` all derive from — the
+aggregate views can never drift from the entry list, and reads are O(#links)
+instead of O(#entries).  When a telemetry ``registry`` is attached
+(`repro.telemetry`), the same booking emits ``wire_bits_total{kind,src,dst}``
+and ``messages_total{kind}`` — the single emission point that covers both
+engine backends, since compiled runs book their replayed ledger through
+this exact method.
 """
 from __future__ import annotations
 
@@ -22,6 +33,27 @@ import numpy as np
 @dataclass
 class TransportLog:
     entries: list = field(default_factory=list)
+    #: optional repro.telemetry MetricsRegistry; attached by Telemetry
+    registry: object = None
+
+    def __post_init__(self):
+        self._rebuild()
+
+    def _rebuild(self) -> None:
+        """(Re)derive the aggregate accumulators from ``entries`` — runs at
+        construction so a log seeded with pre-existing entries stays
+        consistent; afterwards ``send_bits`` maintains them incrementally."""
+        self._total = 0
+        self._hops = 0
+        self._by: dict = {}            # (kind, src, dst) -> bits
+        for e in self.entries:
+            self._accumulate(e["src"], e["dst"], e["kind"], e["bits"])
+
+    def _accumulate(self, src: str, dst: str, kind: str, bits: int) -> None:
+        self._total += bits
+        self._hops += 1
+        key = (kind, src, dst)
+        self._by[key] = self._by.get(key, 0) + bits
 
     def send(self, src: str, dst: str, kind: str, num_elements: int,
              bits_per_element: int = 32) -> None:
@@ -41,8 +73,14 @@ class TransportLog:
                             f"{type(bits).__name__} ({bits!r})")
         if bits < 0:
             raise ValueError(f"bits must be >= 0, got {bits}")
+        bits = int(bits)
         self.entries.append({"src": src, "dst": dst, "kind": kind,
-                             "bits": int(bits)})
+                             "bits": bits})
+        self._accumulate(src, dst, kind, bits)
+        if self.registry is not None:
+            self.registry.inc("wire_bits_total", bits,
+                              kind=kind, src=src, dst=dst)
+            self.registry.inc("messages_total", 1, kind=kind)
 
     def send_array(self, src: str, dst: str, kind: str, arr) -> None:
         arr = np.asarray(arr)
@@ -50,14 +88,19 @@ class TransportLog:
 
     @property
     def total_bits(self) -> int:
-        return sum(e["bits"] for e in self.entries)
+        return self._total
+
+    @property
+    def hops(self) -> int:
+        """Number of booked messages."""
+        return self._hops
 
     def bits_by_kind(self) -> dict:
         """Per-kind totals with deterministically (name-) ordered keys, so
         serialized benchmark JSON diffs stably across runs."""
         out: dict = {}
-        for e in self.entries:
-            out[e["kind"]] = out.get(e["kind"], 0) + e["bits"]
+        for (kind, _src, _dst), bits in self._by.items():
+            out[kind] = out.get(kind, 0) + bits
         return dict(sorted(out.items()))
 
     def bits_by_src(self, kinds=None) -> dict:
@@ -65,11 +108,21 @@ class TransportLog:
         given message kinds — the budget introspection the budget-aware
         scheduler (repro.control.scheduler) orders rounds by."""
         out: dict = {}
-        for e in self.entries:
-            if kinds is not None and e["kind"] not in kinds:
+        for (kind, src, _dst), bits in self._by.items():
+            if kinds is not None and kind not in kinds:
                 continue
-            out[e["src"]] = out.get(e["src"], 0) + e["bits"]
+            out[src] = out.get(src, 0) + bits
         return dict(sorted(out.items()))
+
+    def snapshot(self) -> dict:
+        """Cheap aggregate view — the registry bridge's backfill source:
+        total bits, hop count, and bits by kind x directed link, all from
+        the same accumulator the per-kind/per-src views read."""
+        return {
+            "total_bits": self._total,
+            "hops": self._hops,
+            "by_kind_link": {k: v for k, v in sorted(self._by.items())},
+        }
 
 
 def oracle_bits(n: int, p_remote: int, bits_per_element: int = 32) -> int:

@@ -33,9 +33,10 @@ from repro.data import synthetic
 from repro.data.partition import train_test_split, vertical_split
 from repro.learners.logistic import LogisticRegression
 from repro.serve import AdmissionController, AdmissionPolicy, ServeEngine
+from repro.telemetry import Telemetry
 
 
-def fit_fleet(args, key, Xtr, ctr, num_classes):
+def fit_fleet(args, key, Xtr, ctr, num_classes, telemetry=None):
     """Fit ``--sessions`` compiled protocols (distinct fold keys, one shared
     plan, so the session program compiles once)."""
     protos = {}
@@ -55,7 +56,8 @@ def fit_fleet(args, key, Xtr, ctr, num_classes):
                              if args.serve_codec else None))
         proto = Protocol(SessionConfig(num_classes=num_classes,
                                        max_rounds=args.rounds),
-                         transport=transport, backend="compiled")
+                         transport=transport, backend="compiled",
+                         telemetry=telemetry)
         endpoints = endpoints_for(
             [LogisticRegression(steps=args.steps) for _ in Xtr], Xtr)
         proto.fit(jax.random.fold_in(key, s), endpoints, ctr)
@@ -99,6 +101,13 @@ def main():
                     help="deny over-budget requests instead of degrading "
                          "them to head-only")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default="",
+                    help="write a JSONL telemetry trace (flush/flush_wave/"
+                         "bucket_dispatch spans + final metric values) "
+                         "here after the workload")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the fleet metrics registry here (.prom = "
+                         "Prometheus text exposition, else JSON snapshot)")
     args = ap.parse_args()
     if args.serve_controller and args.serve_codec:
         ap.error("--serve-controller drives serve codec choice through "
@@ -112,9 +121,11 @@ def main():
     Xtr, Xte = [x[tr] for x in Xs], [x[te] for x in Xs]
     ctr = ds.classes[tr]
 
+    telemetry = (Telemetry() if (args.trace or args.metrics_out)
+                 else None)
     t0 = time.time()
     protos = fit_fleet(args, jax.random.fold_in(key, 1), Xtr, ctr,
-                       ds.num_classes)
+                       ds.num_classes, telemetry=telemetry)
     print(f"fitted {args.sessions} sessions in {time.time() - t0:.2f}s")
 
     mechanism = (GaussianMechanism(epsilon=args.dp_epsilon)
@@ -125,7 +136,8 @@ def main():
             AdmissionPolicy(allow_degrade=not args.no_degrade,
                             epsilon_cap=args.epsilon_cap or None),
             tenant_bits=args.tenant_kb * 8 * 1024 or None,
-            mechanism=mechanism))
+            mechanism=mechanism),
+        telemetry=telemetry)
     for sid, proto in protos.items():
         engine.add_session(sid, proto)
 
@@ -147,6 +159,14 @@ def main():
     summary["elapsed_s"] = round(dt, 4)
     summary["qps"] = round(args.requests / max(dt, 1e-9), 2)
     print(json.dumps(summary, indent=2))
+    if telemetry is not None:
+        # fleet-wide: link gauges are per-transport, so skip the gauge
+        # sync and export the shared counter registry + serve spans
+        telemetry.write_artifacts(trace=args.trace or None,
+                                  metrics_out=args.metrics_out or None)
+        for path in (args.trace, args.metrics_out):
+            if path:
+                print(f"telemetry: wrote {path}")
     engine.close()
 
 

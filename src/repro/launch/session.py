@@ -37,6 +37,7 @@ from repro.learners.mlp import MLP
 from repro.learners.tree import DecisionTree
 from repro.scenarios import PARTITIONS, PRESETS, PROTOCOLS, Scenario, \
     make_variant
+from repro.telemetry import Telemetry
 
 DATASETS = {
     "blob3": lambda key, n: synthetic.blob_fig3(key, n=n),
@@ -97,6 +98,21 @@ def _print_serve(transport, preds, cte, before_bits):
     if hasattr(transport, "budget"):
         line += f",skipped_hops={len(transport.skipped)}"
     print(line)
+
+
+def _finish_telemetry(args, telemetry, transport):
+    """Stop the profiler (if running) and write the trace/metrics
+    artifacts; called at both backends' exits, after all traffic."""
+    if args.profile_dir:
+        jax.profiler.stop_trace()
+        print(f"profile: wrote {args.profile_dir}")
+    if telemetry is not None:
+        telemetry.write_artifacts(trace=args.trace or None,
+                                  metrics_out=args.metrics_out or None,
+                                  transport=transport)
+        for path in (args.trace, args.metrics_out):
+            if path:
+                print(f"telemetry: wrote {path}")
 
 
 def main():
@@ -216,6 +232,19 @@ def main():
                          "save a resumable checkpoint and exit)")
     ap.add_argument("--resume", action="store_true",
                     help="resume from --ckpt-dir instead of starting fresh")
+    ap.add_argument("--trace", default="",
+                    help="write a JSONL telemetry trace (spans + final "
+                         "metric values, repro.telemetry schema) here "
+                         "after the run")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the final metrics registry here after the "
+                         "run (.prom = Prometheus text exposition, "
+                         "anything else = JSON snapshot)")
+    ap.add_argument("--profile-dir", default="",
+                    help="capture a jax.profiler trace of the run into "
+                         "this directory (view in TensorBoard/Perfetto); "
+                         "session/round/hop spans show up as trace "
+                         "annotations on the profiler timeline")
     args = ap.parse_args()
 
     key = jax.random.key(args.seed)
@@ -347,14 +376,20 @@ def main():
                                                controller=controller,
                                                accountant=accountant,
                                                serve_controller=serve_controller)
+    telemetry = (Telemetry(profile=bool(args.profile_dir))
+                 if (args.trace or args.metrics_out or args.profile_dir)
+                 else None)
     engine = Protocol(SessionConfig(num_classes=ds.num_classes,
                                     max_rounds=args.rounds,
                                     upstream=upstream),
                       scheduler=scheduler, transport=transport,
                       backend=args.backend, variant=variant_obj,
-                      scenario=None if scenario.trivial else scenario)
+                      scenario=None if scenario.trivial else scenario,
+                      telemetry=telemetry)
     endpoints = endpoints_for(
         [LEARNERS[args.learner](args) for _ in Xs], Xtr)
+    if args.profile_dir:
+        jax.profiler.start_trace(args.profile_dir)
 
     # FedAvg's fitted object carries flat global params, not a component
     # ensemble; everything else (ascii, al) reports its ensemble size
@@ -381,6 +416,7 @@ def main():
             preds = engine.predict_distributed(Xte)
             _print_serve(transport, preds, cte, before)
         _print_comm(transport, show_ema=False)
+        _finish_telemetry(args, telemetry, transport)
         return
 
     # the run config that must match across pause/resume: a different
@@ -450,6 +486,7 @@ def main():
         preds = session.predict_distributed(Xte)
         _print_serve(transport, preds, cte, before)
     _print_comm(transport)
+    _finish_telemetry(args, telemetry, transport)
     if paused:
         if args.ckpt_dir:
             print(f"paused after {session.state.round} rounds; rerun with "

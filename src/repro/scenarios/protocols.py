@@ -317,8 +317,15 @@ class FedAvgVariant(ProtocolVariant):
             codec=transport.codec, privacy=transport.privacy,
             budget=getattr(transport, "budget", None))
         Xs = tuple(ep.X for ep in endpoints)
-        result = scompiled.fedavg_session(plan, key, Xs, classes,
-                                          jnp.asarray(mask), fit_w)
+        tele = getattr(protocol, "telemetry", None)
+        if tele is None:
+            result = scompiled.fedavg_session(plan, key, Xs, classes,
+                                              jnp.asarray(mask), fit_w)
+        else:
+            with tele.span("session", backend="compiled", variant=self.name,
+                           agents=num):
+                result = tele.fence(scompiled.fedavg_session(
+                    plan, key, Xs, classes, jnp.asarray(mask), fit_w))
         self._replay(protocol, endpoints, classes, result, plan, mask)
         history = self._history(core, shapes, result, mask, Xs, classes,
                                 scenario)
@@ -376,7 +383,7 @@ class FedAvgVariant(ProtocolVariant):
                 link = (endpoints[j].name, head.name)
                 if not sent[t, j]:
                     if budgeted:
-                        transport.skipped.append(link)
+                        transport.record_skip(link)
                     continue
                 codec = None
                 if budget is not None:
@@ -390,9 +397,8 @@ class FedAvgVariant(ProtocolVariant):
                 if transport.privacy is not None:
                     transport.accountant.record(endpoints[j].name)
                 if budgeted:
-                    transport.link_spent[link] = \
-                        transport.link_spent.get(link, 0) \
-                        + costs[int(rungs[t, j])]
+                    rung = int(rungs[t, j])
+                    transport.record_spend(link, costs[rung], rung)
             for j in range(1, len(endpoints)):
                 if mask[t, j]:
                     transport.send(GradientMsg(head.name, endpoints[j].name,

@@ -30,14 +30,18 @@ push the tenant past its ε cap under basic composition — the same
 per-release arithmetic :class:`repro.comm.privacy.PrivacyAccountant`
 reports.
 
-Counters (``served`` / ``degraded`` / ``denied``) are tallied per tenant
-and surfaced by the serve-fleet driver summary.
+Counters (``served`` / ``degraded`` / ``denied``) live in the telemetry
+registry as ``admission_outcomes_total{tenant, outcome}`` — one sink shared
+with the wire ledger and the cache/batcher counters — and ``counters()``
+assembles the per-tenant summary the serve-fleet driver surfaces from it
+(same keys as before the registry existed).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
 from repro.comm.budget import TenantBudget
+from repro.telemetry.registry import MetricsRegistry
 
 ACCEPT = "accept"
 DEGRADE = "degrade"
@@ -79,20 +83,14 @@ class Decision:
 
 @dataclass
 class TenantAccount:
-    """Everything the gate tracks for one tenant: the bit ledger view, the
-    release tally, in-flight reservations, and the outcome counters."""
+    """The gating state for one tenant: the bit ledger view, the release
+    tally, and in-flight reservations.  Outcome *counts* (served/degraded/
+    denied) are observability, not gating state — they live in the
+    controller's telemetry registry."""
     budget: TenantBudget = field(default_factory=TenantBudget)
     released: int = 0               # DP releases charged to this tenant
     reserved_bits: int = 0          # held by admitted, not-yet-booked reqs
     pending_releases: int = 0
-    served: int = 0
-    degraded: int = 0
-    denied: int = 0
-
-    def counters(self) -> dict:
-        return {"served": self.served, "degraded": self.degraded,
-                "denied": self.denied, "bits": self.budget.spent,
-                "released": self.released}
 
 
 class AdmissionController:
@@ -108,11 +106,15 @@ class AdmissionController:
     """
 
     def __init__(self, policy: AdmissionPolicy | None = None, *,
-                 tenant_bits: int | None = None, mechanism=None) -> None:
+                 tenant_bits: int | None = None, mechanism=None,
+                 registry: MetricsRegistry | None = None) -> None:
         self.policy = policy if policy is not None else AdmissionPolicy()
         self.tenant_bits = tenant_bits
         self.mechanism = mechanism
         self.accounts: dict[str, TenantAccount] = {}
+        # outcome counters live here (a private registry when the serve
+        # engine doesn't share its own) — one sink for every serve counter
+        self.registry = registry if registry is not None else MetricsRegistry()
 
     def account(self, tenant: str) -> TenantAccount:
         if tenant not in self.accounts:
@@ -159,17 +161,26 @@ class AdmissionController:
         acct.reserved_bits -= decision.reserved_bits
         acct.pending_releases -= decision.reserved_releases
         if decision.outcome == DENY:
-            acct.denied += 1
+            self.registry.inc("admission_outcomes_total", 1, tenant=tenant,
+                              outcome="denied")
             return
         acct.budget.charge(int(bits))
         acct.released += int(releases)
-        if decision.outcome == DEGRADE:
-            acct.degraded += 1
-        else:
-            acct.served += 1
+        outcome = "degraded" if decision.outcome == DEGRADE else "served"
+        self.registry.inc("admission_outcomes_total", 1, tenant=tenant,
+                          outcome=outcome)
 
     def counters(self) -> dict:
         """{tenant: {served, degraded, denied, bits, released}} in
-        deterministic tenant order — the serve-fleet summary payload."""
-        return {t: self.accounts[t].counters()
-                for t in sorted(self.accounts)}
+        deterministic tenant order — the serve-fleet summary payload,
+        outcome counts read back from the telemetry registry."""
+        out = {}
+        for t in sorted(self.accounts):
+            acct = self.accounts[t]
+            out[t] = {outcome: self.registry.value(
+                          "admission_outcomes_total", tenant=t,
+                          outcome=outcome)
+                      for outcome in ("served", "degraded", "denied")}
+            out[t]["bits"] = acct.budget.spent
+            out[t]["released"] = acct.released
+        return out

@@ -19,6 +19,7 @@ bits, and two slots in one vmapped call cannot.
 """
 from __future__ import annotations
 
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -63,18 +64,41 @@ class Batcher:
     next wave runs — so budget bookkeeping lands between same-session
     requests exactly like sequential serving.  ``batches_run`` /
     ``slots_run`` / ``padded_slots`` meter how much batching actually
-    happened (the serve bench reads them).
+    happened (the serve bench reads them) — tallied as
+    ``batch_events_total{event}`` in the telemetry registry (the engine
+    shares its own; a standalone batcher keeps a private one) and read back
+    through the same-named properties.  ``tracer`` (optional
+    :class:`repro.telemetry.SpanTracer`) opens a ``flush_wave`` span per
+    wave and a ``bucket_dispatch`` span (fenced) per vmapped program run.
     """
     max_batch: int = 8
     resolve: Any = None             # slot -> ServeSessionState
     pending: list = field(default_factory=list)
-    batches_run: int = 0
-    slots_run: int = 0
-    padded_slots: int = 0
+    registry: Any = None            # telemetry MetricsRegistry
+    tracer: Any = None              # telemetry SpanTracer
 
     def __post_init__(self):
         if self.max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.registry is None:
+            from repro.telemetry.registry import MetricsRegistry
+            self.registry = MetricsRegistry()
+
+    def _span(self, name: str, **attrs):
+        return (nullcontext() if self.tracer is None
+                else self.tracer.span(name, **attrs))
+
+    @property
+    def batches_run(self) -> int:
+        return self.registry.value("batch_events_total", event="batch")
+
+    @property
+    def slots_run(self) -> int:
+        return self.registry.value("batch_events_total", event="slot")
+
+    @property
+    def padded_slots(self) -> int:
+        return self.registry.value("batch_events_total", event="pad")
 
     def add(self, slot: Slot) -> None:
         self.pending.append(slot)
@@ -124,10 +148,15 @@ class Batcher:
             filler = dict(args[0],
                           deliver=np.zeros_like(np.asarray(args[0]["deliver"])))
             args.extend([filler] * pad)
-        res = compiled.serve_batch(plan, args)
-        self.batches_run += 1
-        self.slots_run += len(chunk)
-        self.padded_slots += pad
+        with self._span("bucket_dispatch", slots=len(chunk), pad=pad):
+            res = compiled.serve_batch(plan, args)
+            if self.tracer is not None:
+                # fence so the span times the computation, not the enqueue
+                self.tracer.fence(res)
+        self.registry.inc("batch_events_total", 1, event="batch")
+        self.registry.inc("batch_events_total", len(chunk), event="slot")
+        if pad:
+            self.registry.inc("batch_events_total", pad, event="pad")
         # one device->host transfer per field for the WHOLE batch; per-slot
         # slices below are then free numpy views (per-slot jax indexing was
         # a measurable chunk of serve overhead)
@@ -143,22 +172,24 @@ class Batcher:
         out = []
         waves = self._waves()
         self.pending = []
-        for wave in waves:
-            buckets: dict = {}
-            for slot in wave:
-                buckets.setdefault(slot.bucket, []).append(slot)
-            wave_out = []
-            for group in buckets.values():
-                for lo in range(0, len(group), self.max_batch):
-                    wave_out.extend(
-                        self._run_chunk(group[lo:lo + self.max_batch]))
-            wave_out.sort(key=lambda pair: pair[0].request_id)
-            if settle is not None:
-                # settle this wave before the next runs: a later
-                # same-session request must start from post-spend counters
-                for slot, res in wave_out:
-                    settle(slot, res)
-            out.extend(wave_out)
+        for w, wave in enumerate(waves):
+            with self._span("flush_wave", step=w, slots=len(wave)):
+                buckets: dict = {}
+                for slot in wave:
+                    buckets.setdefault(slot.bucket, []).append(slot)
+                wave_out = []
+                for group in buckets.values():
+                    for lo in range(0, len(group), self.max_batch):
+                        wave_out.extend(
+                            self._run_chunk(group[lo:lo + self.max_batch]))
+                wave_out.sort(key=lambda pair: pair[0].request_id)
+                if settle is not None:
+                    # settle this wave before the next runs: a later
+                    # same-session request must start from post-spend
+                    # counters
+                    for slot, res in wave_out:
+                        settle(slot, res)
+                out.extend(wave_out)
         out.sort(key=lambda pair: pair[0].request_id)
         return out
 

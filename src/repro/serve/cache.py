@@ -80,11 +80,14 @@ class SessionCache:
     ``evict`` forces a session out (the memory-pressure path the
     spill-parity test drives).  Stats: ``hits`` (resident touches),
     ``restores`` (spill round-trips back in), ``spills`` (evictions that
-    wrote disk).
+    wrote disk) — tallied in the telemetry registry as
+    ``cache_events_total{event}`` (the engine shares its registry; a
+    standalone cache keeps a private one) and read back through the
+    same-named properties.
     """
 
     def __init__(self, capacity: int = 8,
-                 spill_dir: str | None = None) -> None:
+                 spill_dir: str | None = None, registry=None) -> None:
         if capacity < 1:
             raise ValueError(f"cache capacity must be >= 1, got {capacity}")
         self.capacity = capacity
@@ -93,9 +96,25 @@ class SessionCache:
                           if spill_dir is None else spill_dir)
         os.makedirs(self.spill_dir, exist_ok=True)
         self._resident: OrderedDict[str, ServeSessionState] = OrderedDict()
-        self.hits = 0
-        self.restores = 0
-        self.spills = 0
+        if registry is None:
+            from repro.telemetry.registry import MetricsRegistry
+            registry = MetricsRegistry()
+        self.registry = registry
+
+    def _event(self, event: str) -> None:
+        self.registry.inc("cache_events_total", 1, event=event)
+
+    @property
+    def hits(self) -> int:
+        return self.registry.value("cache_events_total", event="hit")
+
+    @property
+    def restores(self) -> int:
+        return self.registry.value("cache_events_total", event="restore")
+
+    @property
+    def spills(self) -> int:
+        return self.registry.value("cache_events_total", event="spill")
 
     # ------------------------------------------------------------- internals
     def _dir(self, session_id: str) -> str:
@@ -105,7 +124,7 @@ class SessionCache:
         while len(self._resident) > self.capacity:
             sid, state = self._resident.popitem(last=False)
             save_structured(self._dir(sid), 0, state.tree(), max_keep=1)
-            self.spills += 1
+            self._event("spill")
 
     # ------------------------------------------------------------------- api
     def __contains__(self, session_id: str) -> bool:
@@ -127,14 +146,14 @@ class SessionCache:
     def get(self, session_id: str) -> ServeSessionState:
         if session_id in self._resident:
             self._resident.move_to_end(session_id)
-            self.hits += 1
+            self._event("hit")
             return self._resident[session_id]
         if not exists_structured(self._dir(session_id)):
             raise KeyError(f"unknown session {session_id!r} (never put, "
                            f"or spill directory lost)")
         tree, _, _ = restore_structured(self._dir(session_id))
         state = ServeSessionState.from_tree(tree)
-        self.restores += 1
+        self._event("restore")
         self.put(session_id, state)
         return state
 
@@ -144,7 +163,7 @@ class SessionCache:
             return
         state = self._resident.pop(session_id)
         save_structured(self._dir(session_id), 0, state.tree(), max_keep=1)
-        self.spills += 1
+        self._event("spill")
 
     def stats(self) -> dict:
         return {"capacity": self.capacity, "resident": len(self._resident),

@@ -81,17 +81,39 @@ class ServeOutcome:
 
 
 class ServeEngine:
-    """Continuous-batching serve engine over fitted ASCII protocols."""
+    """Continuous-batching serve engine over fitted ASCII protocols.
+
+    ``telemetry`` (optional :class:`repro.telemetry.Telemetry`) makes the
+    engine emit into one shared registry: the wire ledger, the admission/
+    cache/batcher counters, per-session request counts, budget skips, and
+    ``flush``/``flush_wave``/``bucket_dispatch`` spans.  Without it the
+    engine still keeps a private registry so every counter surface reads
+    from the same sink either way."""
 
     def __init__(self, *, cache_capacity: int = 8, max_batch: int = 8,
                  spill_dir: str | None = None,
-                 admission: AdmissionController | None = None) -> None:
-        self.cache = SessionCache(cache_capacity, spill_dir)
+                 admission: AdmissionController | None = None,
+                 telemetry=None) -> None:
+        from repro.telemetry.registry import MetricsRegistry
+        self.telemetry = telemetry
+        self.registry = (telemetry.registry if telemetry is not None
+                         else MetricsRegistry())
+        self.cache = SessionCache(cache_capacity, spill_dir,
+                                  registry=self.registry)
         self.batcher = Batcher(
             max_batch=max_batch,
-            resolve=lambda slot: self.cache.get(slot.session_id))
+            resolve=lambda slot: self.cache.get(slot.session_id),
+            registry=self.registry,
+            tracer=telemetry.tracer if telemetry is not None else None)
         self.admission = (admission if admission is not None
                           else AdmissionController())
+        # a caller-supplied controller keeps its history: fold what it
+        # already counted into the shared registry, then rebind
+        if self.admission.registry is not self.registry:
+            for e in self.admission.registry.to_events():
+                if e["type"] == "counter":
+                    self.registry.inc(e["name"], e["value"], **e["labels"])
+            self.admission.registry = self.registry
         self.log = None             # lazily a TransportLog
         self.sessions: dict[str, SessionMeta] = {}
         self.outcomes: dict[int, ServeOutcome] = {}
@@ -199,7 +221,7 @@ class ServeEngine:
         fleet-wide log, then charge the tenant the same bits."""
         from repro.core.transport import TransportLog
         if self.log is None:
-            self.log = TransportLog()
+            self.log = TransportLog(registry=self.registry)
         sid = slot.session_id
         meta = self.sessions[sid]
         plan, names = meta.plan, meta.names
@@ -218,15 +240,24 @@ class ServeEngine:
             link = (f"{sid}:{names[j]}", head)
             if not sent[j]:
                 meta.skipped.append(link)       # budget skip
+                self.registry.inc("budget_skips_total", 1,
+                                  src=link[0], dst=link[1])
                 continue
-            codec = ladder[int(rungs[j])] if int(rungs[j]) >= 0 else None
+            rung = int(rungs[j])
+            codec = ladder[rung] if rung >= 0 else None
             bits = (int(codec.wire_bits(shape)) if codec is not None
                     else 32 * shape[0] * shape[1])
             self.log.send_bits(link[0], link[1], "score_block", bits)
             bits_total += bits
             link_cost[j] = bits
+            if budgeted and rung >= 0:
+                self.registry.inc("hops_by_rung_total", 1, rung=rung)
             if plan.privacy is not None:
                 meta.accountant.record(names[j])
+                # session-prefixed in the fleet-wide registry, matching the
+                # wire ledger's link naming (per-session epsilon stays on
+                # meta.accountant)
+                self.registry.inc("dp_releases_total", 1, agent=link[0])
                 releases += 1
         if budgeted:
             state = self.cache.get(sid)
@@ -236,6 +267,7 @@ class ServeEngine:
                 np.minimum(link_cost, _INT32_MAX), jnp.int32)
             meta.exhausted = bool(meta.exhausted or bool(res.exhausted))
         meta.served += 1
+        self.registry.inc("serve_requests_total", 1, session=sid)
         self.admission.book(slot.tenant, slot.decision, bits=bits_total,
                             releases=releases)
         return ServeOutcome(slot.request_id, sid, slot.tenant,
@@ -256,7 +288,11 @@ class ServeEngine:
             self.outcomes[out.request_id] = out
             done[out.request_id] = out
 
-        self.batcher.flush(settle=settle)
+        if self.telemetry is not None:
+            with self.telemetry.span("flush", queued=len(self.batcher)):
+                self.batcher.flush(settle=settle)
+        else:
+            self.batcher.flush(settle=settle)
         return done
 
     # --------------------------------------------------------------- summary

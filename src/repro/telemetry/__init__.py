@@ -1,0 +1,110 @@
+"""Telemetry: the unified observability layer for train/serve/scenario runs.
+
+One :class:`Telemetry` object owns a :class:`MetricsRegistry` (every
+counter the system keeps: wire bits, DP releases, budget skips, admission
+outcomes, cache/batch events) and a :class:`SpanTracer` (session -> round
+-> hop on the train path, flush -> flush_wave -> bucket_dispatch on the
+serve path), plus the attach/export plumbing that wires them into a run:
+
+    tele = Telemetry()
+    proto = Protocol(..., telemetry=tele)
+    proto.fit(...)
+    tele.write_artifacts(trace="run.jsonl", metrics_out="run.json",
+                         transport=proto.transport)
+
+The hard invariant (asserted by tests/test_telemetry.py): a run with
+telemetry attached is bit-identical to the same run without — observation
+reads already-computed host values, never folds keys, never adds device
+dispatches inside traced code, never perturbs the budget ladder walk.
+
+Emission sits at the choke points both engine backends share
+(`TransportLog.send_bits`, `PrivacyAccountant.record`,
+`BudgetedTransport.record_skip`/`record_spend`): eager paths emit live as
+hops happen; the compiled backend emits while `Protocol._replay_traffic` /
+`_replay_serve` / the scenario `_replay` walk the scanned ledger — so eager
+and compiled runs produce identical registries wherever their ledgers
+already agree (which the backend-parity tests pin).
+"""
+from __future__ import annotations
+
+from repro.telemetry.export import (snapshot, write_metrics,  # noqa: F401
+                                    write_trace)
+from repro.telemetry.registry import MetricsRegistry
+from repro.telemetry.spans import Span, SpanTracer  # noqa: F401
+
+
+class Telemetry:
+    """Registry + tracer + attach/export plumbing for one run.
+
+    ``profile`` additionally opens ``jax.profiler`` trace annotations per
+    span (pair with ``jax.profiler.trace(dir)`` around the run); ``fence``
+    controls the ``block_until_ready`` fences at dispatch boundaries
+    (timing-only — on by default so span durations measure computation,
+    not async-dispatch enqueue).
+    """
+
+    def __init__(self, *, profile: bool = False, fence: bool = True):
+        self.registry = MetricsRegistry()
+        self.tracer = SpanTracer(self.registry, profile=profile,
+                                 fence=fence)
+
+    def span(self, name: str, step: int | None = None, **attrs):
+        return self.tracer.span(name, step, **attrs)
+
+    def fence(self, value):
+        return self.tracer.fence(value)
+
+    # ------------------------------------------------------------- attach
+    def attach_transport(self, transport) -> None:
+        """Point a transport's ledger surfaces at this registry.
+
+        Idempotent (re-attaching the same transport is a no-op) and
+        backfilling: entries and DP releases booked *before* attach are
+        folded in once, so attach order doesn't skew totals.  Attach before
+        traffic flows when per-rung hop counts matter — ``hops_by_rung``
+        has no backfill source (shipped entries don't record their rung).
+        """
+        log = getattr(transport, "log", None)
+        if log is None and hasattr(transport, "send_bits"):
+            log = transport                  # a bare TransportLog
+        if log is not None and \
+                getattr(log, "registry", None) is not self.registry:
+            for e in log.entries:
+                self.registry.inc("wire_bits_total", e["bits"],
+                                  kind=e["kind"], src=e["src"],
+                                  dst=e["dst"])
+                self.registry.inc("messages_total", 1, kind=e["kind"])
+            for link in getattr(transport, "skipped", ()):
+                self.registry.inc("budget_skips_total", 1,
+                                  src=link[0], dst=link[1])
+            log.registry = self.registry
+        accountant = getattr(transport, "accountant", None)
+        if accountant is not None and \
+                getattr(accountant, "registry", None) is not self.registry:
+            for agent, count in accountant.releases.items():
+                self.registry.inc("dp_releases_total", count, agent=agent)
+            accountant.registry = self.registry
+
+    def sync_gauges(self, transport) -> None:
+        """Copy the budget state that isn't event-shaped (per-link spent
+        bits, the exhausted flag) into gauges — called at export time."""
+        for (src, dst), bits in sorted(
+                getattr(transport, "link_spent", {}).items()):
+            self.registry.set_gauge("budget_link_spent_bits", bits,
+                                    src=src, dst=dst)
+        if hasattr(transport, "exhausted"):
+            self.registry.set_gauge("budget_exhausted",
+                                    int(transport.exhausted))
+
+    # ------------------------------------------------------------- export
+    def write_artifacts(self, *, trace: str | None = None,
+                        metrics_out: str | None = None,
+                        transport=None) -> None:
+        """Write the requested artifacts (``--trace`` JSONL event log,
+        ``--metrics-out`` JSON snapshot or ``.prom`` text)."""
+        if transport is not None:
+            self.sync_gauges(transport)
+        if trace:
+            write_trace(trace, registry=self.registry, tracer=self.tracer)
+        if metrics_out:
+            write_metrics(metrics_out, self.registry, self.tracer)

@@ -1,0 +1,157 @@
+"""Schema validation for telemetry artifacts — the reusable ``--check``.
+
+``python -m repro.telemetry.check FILE [FILE ...]`` validates each file by
+suffix and exits nonzero on the first violation:
+
+  * ``.jsonl`` — JSONL event trace: leading meta line with the right
+    schema/version, every event one of meta/span/counter/gauge/histogram
+    with the required fields, every span closed with a resolvable parent.
+  * ``.json``  — metrics snapshot: schema/version plus the
+    counters/gauges/histograms maps with numeric leaves.
+  * ``.prom``  — Prometheus text: every non-comment line parses as
+    ``name{labels} value`` (or bare ``name value``) with a numeric value
+    and a preceding ``# TYPE`` for its metric family.
+
+CI runs this over the artifacts the instrumented bench-smoke workloads
+emit; tests reuse the validators directly.
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+from repro.telemetry.export import SCHEMA, SCHEMA_VERSION, load_events
+
+_METRIC_FIELDS = {
+    "counter": ("name", "labels", "value"),
+    "gauge": ("name", "labels", "value"),
+    "histogram": ("name", "labels", "count", "sum", "min", "max"),
+}
+_SPAN_FIELDS = ("id", "parent", "name", "start_s", "end_s", "attrs")
+_PROM_LINE = re.compile(
+    r'^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{.*\})?\s+(-?[0-9.eE+infa]+)$')
+
+
+def validate_events(events: list[dict]) -> list[str]:
+    """Validate a JSONL trace's event list; return human-readable errors
+    (empty list == valid)."""
+    errors: list[str] = []
+    if not events:
+        return ["empty trace: no events"]
+    head = events[0]
+    if head.get("type") != "meta":
+        errors.append("first event must be type=meta")
+    elif (head.get("schema"), head.get("version")) != (SCHEMA,
+                                                       SCHEMA_VERSION):
+        errors.append(f"meta schema/version mismatch: {head}")
+    spans: dict = {}
+    for i, e in enumerate(events):
+        kind = e.get("type")
+        if kind == "meta":
+            if i != 0:
+                errors.append(f"event {i}: meta only allowed first")
+        elif kind == "span":
+            missing = [f for f in _SPAN_FIELDS if f not in e]
+            if missing:
+                errors.append(f"event {i}: span missing {missing}")
+                continue
+            if e["end_s"] is None:
+                errors.append(f"event {i}: span {e['name']!r} never closed")
+            spans[e["id"]] = e
+        elif kind in _METRIC_FIELDS:
+            missing = [f for f in _METRIC_FIELDS[kind] if f not in e]
+            if missing:
+                errors.append(f"event {i}: {kind} missing {missing}")
+            elif not isinstance(e["labels"], dict):
+                errors.append(f"event {i}: labels must be an object")
+        else:
+            errors.append(f"event {i}: unknown type {kind!r}")
+    for e in spans.values():
+        if e["parent"] is not None and e["parent"] not in spans:
+            errors.append(f"span {e['id']}: dangling parent {e['parent']}")
+    return errors
+
+
+def validate_snapshot(doc: dict) -> list[str]:
+    errors: list[str] = []
+    if (doc.get("schema"), doc.get("version")) != (SCHEMA, SCHEMA_VERSION):
+        errors.append(f"snapshot schema/version mismatch: "
+                      f"{doc.get('schema')!r} v{doc.get('version')!r}")
+    for section in ("counters", "gauges", "histograms"):
+        block = doc.get(section)
+        if not isinstance(block, dict):
+            errors.append(f"missing/invalid section {section!r}")
+            continue
+        for name, series in block.items():
+            if not isinstance(series, dict):
+                errors.append(f"{section}.{name}: series must be an object")
+                continue
+            for key, value in series.items():
+                if section == "histograms":
+                    ok = (isinstance(value, dict) and
+                          all(isinstance(value.get(f), (int, float))
+                              for f in ("count", "sum", "min", "max")))
+                else:
+                    ok = isinstance(value, (int, float))
+                if not ok:
+                    errors.append(f"{section}.{name}[{key!r}]: bad value "
+                                  f"{value!r}")
+    return errors
+
+
+def validate_prometheus(text: str) -> list[str]:
+    errors: list[str] = []
+    typed: set[str] = set()
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        if not line.strip():
+            continue
+        if line.startswith("#"):
+            parts = line.split()
+            if len(parts) >= 3 and parts[1] == "TYPE":
+                typed.add(parts[2])
+            continue
+        m = _PROM_LINE.match(line)
+        if m is None:
+            errors.append(f"line {lineno}: unparseable sample {line!r}")
+            continue
+        name = m.group(1)
+        if name not in typed:
+            errors.append(f"line {lineno}: {name} sample before # TYPE")
+        try:
+            float(m.group(3))
+        except ValueError:
+            errors.append(f"line {lineno}: non-numeric value {m.group(3)!r}")
+    return errors
+
+
+def validate_file(path: str) -> list[str]:
+    if path.endswith(".jsonl"):
+        return validate_events(load_events(path))
+    if path.endswith(".prom"):
+        with open(path) as f:
+            return validate_prometheus(f.read())
+    with open(path) as f:
+        return validate_snapshot(json.load(f))
+
+
+def main(argv: list[str] | None = None) -> int:
+    paths = sys.argv[1:] if argv is None else argv
+    if not paths:
+        print("usage: python -m repro.telemetry.check FILE [FILE ...]",
+              file=sys.stderr)
+        return 2
+    bad = 0
+    for path in paths:
+        errors = validate_file(path)
+        if errors:
+            bad += 1
+            for err in errors:
+                print(f"{path}: {err}", file=sys.stderr)
+        else:
+            print(f"{path}: OK")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,142 @@
+"""Telemetry exporters: JSONL event traces, JSON snapshots, Prometheus text.
+
+Three artifact shapes, one source (a :class:`~repro.telemetry.registry.
+MetricsRegistry` and optionally a :class:`~repro.telemetry.spans.
+SpanTracer`):
+
+  * **JSONL trace** (``--trace file.jsonl``) — one event per line: a
+    leading ``meta`` line (schema version), then every closed span, then
+    the registry's metric events.  Loss-free: :func:`load_registry`
+    rebuilds an equal registry from the file (the round-trip the exporter
+    test pins), and :mod:`repro.telemetry.check` validates the schema.
+  * **JSON snapshot** (``--metrics-out file.json``) — the nested
+    {counters, gauges, histograms} document benchmark summaries embed.
+  * **Prometheus text** (``--metrics-out file.prom``) — the standard
+    exposition format, one scrape's worth, for anything that already reads
+    node-exporter-style files.
+"""
+from __future__ import annotations
+
+import json
+
+from repro.telemetry.registry import MetricsRegistry
+
+SCHEMA = "repro-telemetry"
+SCHEMA_VERSION = 1
+
+
+def meta_event() -> dict:
+    return {"type": "meta", "schema": SCHEMA, "version": SCHEMA_VERSION}
+
+
+def trace_events(registry: MetricsRegistry | None = None,
+                 tracer=None) -> list[dict]:
+    """The full JSONL payload: meta line, spans, then metric events."""
+    events = [meta_event()]
+    if tracer is not None:
+        events.extend(tracer.to_events())
+    if registry is not None:
+        events.extend(registry.to_events())
+    return events
+
+
+def write_trace(path: str, *, registry: MetricsRegistry | None = None,
+                tracer=None) -> int:
+    """Write the JSONL event log; returns the number of events written."""
+    events = trace_events(registry, tracer)
+    with open(path, "w") as f:
+        for e in events:
+            f.write(json.dumps(e, sort_keys=True) + "\n")
+    return len(events)
+
+
+def load_events(path: str) -> list[dict]:
+    events = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                events.append(json.loads(line))
+    return events
+
+
+def load_registry(path: str) -> MetricsRegistry:
+    """Rebuild the metrics registry from a JSONL trace (span and meta
+    events are ignored; metric events reload loss-free)."""
+    return MetricsRegistry.from_events(
+        [e for e in load_events(path)
+         if e.get("type") in ("counter", "gauge", "histogram")])
+
+
+# ------------------------------------------------------------------ snapshots
+def snapshot(registry: MetricsRegistry, tracer=None) -> dict:
+    """Nested JSON-able snapshot: per-metric series keyed by a stable
+    ``label=value`` joined string (empty-label series key "")."""
+    def nest(events_of_type, value_of):
+        out: dict = {}
+        for e in events_of_type:
+            key = ",".join(f"{k}={v}" for k, v in sorted(e["labels"].items()))
+            out.setdefault(e["name"], {})[key] = value_of(e)
+        return out
+
+    events = registry.to_events()
+    doc = {
+        "schema": SCHEMA, "version": SCHEMA_VERSION,
+        "counters": nest((e for e in events if e["type"] == "counter"),
+                         lambda e: e["value"]),
+        "gauges": nest((e for e in events if e["type"] == "gauge"),
+                       lambda e: e["value"]),
+        "histograms": nest(
+            (e for e in events if e["type"] == "histogram"),
+            lambda e: {k: e[k] for k in ("count", "sum", "min", "max")}),
+    }
+    if tracer is not None:
+        doc["spans"] = len(tracer.spans)
+    return doc
+
+
+def _prom_escape(value: str) -> str:
+    return (str(value).replace("\\", r"\\").replace('"', r'\"')
+            .replace("\n", r"\n"))
+
+
+def _prom_series(name: str, key: tuple, value) -> str:
+    if not key:
+        return f"{name} {value}"
+    labels = ",".join(f'{k}="{_prom_escape(v)}"' for k, v in key)
+    return f"{name}{{{labels}}} {value}"
+
+
+def prometheus_text(registry: MetricsRegistry) -> str:
+    """One scrape in the Prometheus text exposition format.  Histograms
+    export as summary-style ``_count``/``_sum`` plus ``_min``/``_max``
+    gauges (fixed bucket bounds would drift across workloads)."""
+    lines: list[str] = []
+    for name in sorted(registry._counters):
+        lines.append(f"# TYPE {name} counter")
+        for key, value in sorted(registry._counters[name].items()):
+            lines.append(_prom_series(name, key, value))
+    for name in sorted(registry._gauges):
+        lines.append(f"# TYPE {name} gauge")
+        for key, value in sorted(registry._gauges[name].items()):
+            lines.append(_prom_series(name, key, value))
+    for name in sorted(registry._hists):
+        for suffix in ("count", "sum", "min", "max"):
+            lines.append(f"# TYPE {name}_{suffix} gauge")
+            for key, agg in sorted(registry._hists[name].items()):
+                lines.append(_prom_series(f"{name}_{suffix}", key,
+                                          agg[suffix]))
+    return "\n".join(lines) + "\n"
+
+
+def write_metrics(path: str, registry: MetricsRegistry,
+                  tracer=None) -> None:
+    """Write the metrics artifact ``--metrics-out`` asks for: Prometheus
+    text when the path ends in ``.prom``, else the JSON snapshot."""
+    if path.endswith(".prom"):
+        with open(path, "w") as f:
+            f.write(prometheus_text(registry))
+        return
+    with open(path, "w") as f:
+        json.dump(snapshot(registry, tracer), f, indent=2, sort_keys=True)
+        f.write("\n")

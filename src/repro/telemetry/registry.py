@@ -1,0 +1,146 @@
+"""The unified metrics registry: one sink for every counter the system keeps.
+
+ASCII's currencies — interchange bits, DP releases, budget skips, serve
+admission outcomes — were tallied in four disjoint ad-hoc surfaces
+(`TransportLog.bits_by_kind`, `AdmissionController` per-tenant ints,
+batcher/cache counters, `PrivacyAccountant.releases`).  This registry is the
+single store behind all of them: labeled counters, gauges, and histograms
+with deterministic ordering, JSON-able event export, and exact integer
+arithmetic for bit tallies.
+
+Design constraints (the telemetry hard invariant):
+
+  * **observation only** — the registry is written from host-side code that
+    reads already-computed values (ledger bookings, replay walks, settle
+    hooks).  It never folds PRNG keys, never adds device dispatches, and is
+    never read by protocol logic, so telemetry-on and telemetry-off runs are
+    bit-identical on every pinned trajectory.
+  * **both backends, one layer** — emission hooks sit at the choke points
+    both backends already share (`TransportLog.send_bits`,
+    `PrivacyAccountant.record`, `BudgetedTransport.record_skip`/
+    `record_spend`): eager paths emit live, the compiled backend emits
+    during its post-run ledger replay, so eager and compiled runs produce
+    identical registries wherever their ledgers already agree.
+  * **cheap** — an increment is one dict update on a sorted-label key; no
+    locks, no strings formatted until export.
+
+Metric name conventions (see README "Observability" for the full table):
+``*_total`` counters, ``*_bits``/``*_seconds`` units in the name, labels
+for the dimension that varies (kind/src/dst/agent/tenant/rung/event).
+"""
+from __future__ import annotations
+
+
+def _label_key(labels: dict) -> tuple:
+    """Canonical hashable key: sorted (name, value) pairs, values
+    stringified once so ints/bools label identically to their str forms."""
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+class MetricsRegistry:
+    """Labeled counters, gauges, and histogram aggregates.
+
+    A *series* is (metric name, label set); counters accumulate, gauges
+    hold the last set value, histograms keep {count, sum, min, max} — the
+    aggregate the span tracer and benchmarks need, without bucket-bound
+    configuration to drift.
+    """
+
+    def __init__(self) -> None:
+        self._counters: dict[str, dict[tuple, int | float]] = {}
+        self._gauges: dict[str, dict[tuple, float]] = {}
+        self._hists: dict[str, dict[tuple, dict]] = {}
+
+    # -------------------------------------------------------------- writes
+    def inc(self, name: str, value: int | float = 1, /, **labels) -> None:
+        if value < 0:
+            raise ValueError(f"counter {name!r} increments must be >= 0, "
+                             f"got {value}")
+        series = self._counters.setdefault(name, {})
+        key = _label_key(labels)
+        series[key] = series.get(key, 0) + value
+
+    def set_gauge(self, name: str, value: float, /, **labels) -> None:
+        self._gauges.setdefault(name, {})[_label_key(labels)] = value
+
+    def observe(self, name: str, value: float, /, **labels) -> None:
+        series = self._hists.setdefault(name, {})
+        key = _label_key(labels)
+        agg = series.get(key)
+        if agg is None:
+            series[key] = {"count": 1, "sum": value, "min": value,
+                           "max": value}
+        else:
+            agg["count"] += 1
+            agg["sum"] += value
+            agg["min"] = min(agg["min"], value)
+            agg["max"] = max(agg["max"], value)
+
+    # --------------------------------------------------------------- reads
+    def value(self, name: str, /, **labels) -> int | float:
+        """Counter value of one exact series (0 when never incremented)."""
+        return self._counters.get(name, {}).get(_label_key(labels), 0)
+
+    def gauge(self, name: str, /, **labels) -> float | None:
+        return self._gauges.get(name, {}).get(_label_key(labels))
+
+    def histogram(self, name: str, /, **labels) -> dict | None:
+        agg = self._hists.get(name, {}).get(_label_key(labels))
+        return None if agg is None else dict(agg)
+
+    def total(self, name: str) -> int | float:
+        """Counter total across every label set of ``name``."""
+        return sum(self._counters.get(name, {}).values())
+
+    def series(self, name: str) -> dict[tuple, int | float]:
+        """{label-key tuple: value} for one counter, deterministically
+        ordered — the raw readback the serve counters build on."""
+        return dict(sorted(self._counters.get(name, {}).items()))
+
+    def label_values(self, name: str, label: str) -> list[str]:
+        """Distinct values of one label across a counter's series, sorted."""
+        out = set()
+        for key in self._counters.get(name, {}):
+            for k, v in key:
+                if k == label:
+                    out.add(v)
+        return sorted(out)
+
+    def counter_names(self) -> list[str]:
+        return sorted(self._counters)
+
+    # -------------------------------------------------------------- events
+    def to_events(self) -> list[dict]:
+        """The registry as a deterministic list of JSON-able metric events —
+        the JSONL trace payload, loss-free: ``from_events`` round-trips."""
+        events: list[dict] = []
+        for name in sorted(self._counters):
+            for key, value in sorted(self._counters[name].items()):
+                events.append({"type": "counter", "name": name,
+                               "labels": dict(key), "value": value})
+        for name in sorted(self._gauges):
+            for key, value in sorted(self._gauges[name].items()):
+                events.append({"type": "gauge", "name": name,
+                               "labels": dict(key), "value": value})
+        for name in sorted(self._hists):
+            for key, agg in sorted(self._hists[name].items()):
+                events.append({"type": "histogram", "name": name,
+                               "labels": dict(key), **agg})
+        return events
+
+    @classmethod
+    def from_events(cls, events: list[dict]) -> "MetricsRegistry":
+        """Rebuild a registry from ``to_events`` output (JSONL reload)."""
+        reg = cls()
+        for e in events:
+            kind = e.get("type")
+            if kind == "counter":
+                reg.inc(e["name"], e["value"], **e.get("labels", {}))
+            elif kind == "gauge":
+                reg.set_gauge(e["name"], e["value"], **e.get("labels", {}))
+            elif kind == "histogram":
+                series = reg._hists.setdefault(e["name"], {})
+                series[_label_key(e.get("labels", {}))] = {
+                    "count": e["count"], "sum": e["sum"],
+                    "min": e["min"], "max": e["max"]}
+        return reg

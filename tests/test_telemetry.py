@@ -1,0 +1,329 @@
+"""Telemetry subsystem: metrics registry, span tracer, exporters, and the
+observation-only invariant.
+
+The defining pin: attaching a :class:`repro.telemetry.Telemetry` to a
+protocol run changes NOTHING — predictions, ledger entries, and accountant
+releases are bit-identical with telemetry on vs off, on both backends,
+train and serve, including the budgeted + DP + adaptive-controller channel.
+On top of that: the registry agrees with the transport ledger it shadows
+(and eager agrees with compiled wherever the ledgers do), span trees are
+well-formed, the JSONL trace round-trips back into an equal registry, the
+exporters pass their own schema validators, and the serve-stack counter
+surfaces (admission / cache / batcher / engine summary) keep their
+pre-registry key schemas.
+"""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import (BudgetSpec, BudgetedTransport, GaussianMechanism,
+                        make_codec)
+from repro.control import AdaptiveController
+from repro.core.engine import (MeteredTransport, Protocol, SessionConfig,
+                               endpoints_for)
+from repro.core.transport import TransportLog
+from repro.data.partition import train_test_split, vertical_split
+from repro.data.synthetic import blob_fig3
+from repro.learners.logistic import LogisticRegression
+from repro.serve import (AdmissionController, AdmissionPolicy, ServeEngine,
+                         SessionCache)
+from repro.telemetry import MetricsRegistry, SpanTracer, Telemetry
+from repro.telemetry import check as tcheck
+from repro.telemetry import export as texport
+
+
+@pytest.fixture(scope="module")
+def blob():
+    ds = blob_fig3(jax.random.key(0), n=240)
+    tr, te = train_test_split(0, 240)
+    Xs = vertical_split(ds.X, ds.splits)
+    return ([x[tr] for x in Xs], ds.classes[tr], [x[te] for x in Xs],
+            ds.num_classes)
+
+
+# --------------------------------------------------------------- registry
+class TestRegistry:
+    def test_counter_labels(self):
+        r = MetricsRegistry()
+        r.inc("hops_total", 1, src="a", dst="b")
+        r.inc("hops_total", 2, dst="b", src="a")   # label order irrelevant
+        r.inc("hops_total", 1, src="b", dst="a")
+        assert r.value("hops_total", src="a", dst="b") == 3
+        assert r.total("hops_total") == 4
+
+    def test_label_named_name_does_not_collide(self):
+        # span_seconds carries a label literally called "name"
+        r = MetricsRegistry()
+        r.inc("spans_total", 1, name="hop")
+        r.observe("span_seconds", 0.5, name="hop")
+        assert r.value("spans_total", name="hop") == 1
+        assert r.histogram("span_seconds", name="hop")["count"] == 1
+
+    def test_negative_increment_rejected(self):
+        r = MetricsRegistry()
+        with pytest.raises(ValueError):
+            r.inc("x", -1)
+
+    def test_gauge_and_histogram(self):
+        r = MetricsRegistry()
+        r.set_gauge("depth", 3, link="a")
+        r.set_gauge("depth", 1, link="a")           # last write wins
+        assert r.gauge("depth", link="a") == 1
+        for v in (2.0, 4.0, 1.0):
+            r.observe("lat", v)
+        h = r.histogram("lat")
+        assert (h["count"], h["sum"], h["min"], h["max"]) == (3, 7.0, 1.0, 4.0)
+
+    def test_event_round_trip(self):
+        r = MetricsRegistry()
+        r.inc("a_total", 5, k="x")
+        r.set_gauge("g", 2.5)
+        r.observe("h", 1.0, name="n")
+        r2 = MetricsRegistry.from_events(r.to_events())
+        assert r2.to_events() == r.to_events()
+
+    def test_series_sorted_and_stable(self):
+        r = MetricsRegistry()
+        r.inc("t", 1, b="2")
+        r.inc("t", 1, a="1")
+        assert list(r.series("t")) == sorted(r.series("t"))
+
+
+# ------------------------------------------------------------------ spans
+class TestSpans:
+    def test_tree_shape_and_timing(self):
+        tr = SpanTracer(MetricsRegistry(), fence=False)
+        with tr.span("session"):
+            with tr.span("round", step=0):
+                with tr.span("hop", src="a", dst="b"):
+                    pass
+            with tr.span("round", step=1):
+                pass
+        assert tr.well_formed()
+        spans = tr.spans
+        # recorded in open order
+        assert [s.name for s in spans] == ["session", "round", "hop",
+                                           "round"]
+        by_name = {s.name: s for s in spans}
+        hop = next(s for s in spans if s.name == "hop")
+        parent = next(s for s in spans if s.span_id == hop.parent_id)
+        assert parent.name == "round"
+        assert by_name["session"].parent_id is None
+        for s in spans:
+            assert s.end_s >= s.start_s
+        assert tr.registry.histogram(
+            "span_seconds", name="round")["count"] == 2
+
+    def test_unclosed_span_is_malformed(self):
+        tr = SpanTracer(MetricsRegistry(), fence=False)
+        cm = tr.span("dangling")
+        cm.__enter__()
+        assert not tr.well_formed()
+        cm.__exit__(None, None, None)
+        assert tr.well_formed()
+
+    def test_fence_passthrough_and_disable(self):
+        tr = SpanTracer(MetricsRegistry(), fence=False)
+        x = jnp.arange(3)
+        assert tr.fence(x) is x
+        assert tr.fence(None) is None
+        tr2 = SpanTracer(MetricsRegistry())
+        assert (np.asarray(tr2.fence(jnp.arange(3))) == [0, 1, 2]).all()
+
+
+# -------------------------------------------------- the bit-identity pin
+def _channel(controller=False):
+    t = BudgetedTransport(BudgetSpec(session_bits=600_000),
+                          log=TransportLog(),
+                          privacy=GaussianMechanism(epsilon=1.0),
+                          controller=(AdaptiveController(stat="resid")
+                                      if controller else None))
+    return t
+
+
+def _fit_serve(blob, backend, telemetry, controller=False):
+    Xtr, ctr, Xte, k = blob
+    transport = _channel(controller)
+    proto = Protocol(SessionConfig(num_classes=k, max_rounds=3),
+                     transport=transport, backend=backend,
+                     telemetry=telemetry)
+    eps = endpoints_for([LogisticRegression(steps=40) for _ in Xtr], Xtr)
+    proto.fit(jax.random.key(7), eps, ctr)
+    preds = np.asarray(proto.predict_distributed(Xte))
+    return preds, transport
+
+
+@pytest.mark.parametrize("backend", ["eager", "compiled"])
+@pytest.mark.parametrize("controller", [False, True])
+def test_telemetry_on_off_bit_identical(blob, backend, controller):
+    tele = Telemetry()
+    p_on, t_on = _fit_serve(blob, backend, tele, controller)
+    p_off, t_off = _fit_serve(blob, backend, None, controller)
+    assert (p_on == p_off).all()
+    assert t_on.log.entries == t_off.log.entries
+    assert t_on.accountant.releases == t_off.accountant.releases
+    assert t_on.link_spent == t_off.link_spent
+    # and the registry is a faithful shadow of the ledger it observed
+    assert tele.registry.total("wire_bits_total") == t_on.log.total_bits
+    assert tele.registry.total("messages_total") == t_on.log.hops
+    assert (tele.registry.total("dp_releases_total")
+            == sum(t_on.accountant.releases.values()))
+    assert tele.tracer.well_formed()
+
+
+def test_eager_registry_equals_compiled_registry(blob):
+    regs = {}
+    for backend in ("eager", "compiled"):
+        tele = Telemetry()
+        _fit_serve(blob, backend, tele)
+        regs[backend] = {n: tele.registry.series(n)
+                         for n in tele.registry.counter_names()}
+    assert regs["eager"] == regs["compiled"]
+
+
+def test_span_tree_hop_under_round(blob):
+    tele = Telemetry()
+    _fit_serve(blob, "eager", tele)
+    spans = {s.span_id: s for s in tele.tracer.spans}
+    names = [s.name for s in tele.tracer.spans]
+    assert {"session", "round", "hop", "serve"} <= set(names)
+    for s in tele.tracer.spans:
+        if s.name == "hop":
+            assert spans[s.parent_id].name == "round"
+        if s.name == "round":
+            assert spans[s.parent_id].name == "session"
+            assert "step" in s.attrs
+
+
+# ------------------------------------------------------------- exporters
+def test_trace_round_trip_and_validators(blob, tmp_path):
+    tele = Telemetry()
+    _, transport = _fit_serve(blob, "compiled", tele)
+    trace = tmp_path / "trace.jsonl"
+    mjson = tmp_path / "metrics.json"
+    mprom = tmp_path / "metrics.prom"
+    tele.write_artifacts(trace=str(trace), metrics_out=str(mjson),
+                         transport=transport)
+    tele.write_artifacts(metrics_out=str(mprom), transport=transport)
+    for p in (trace, mjson, mprom):
+        assert tcheck.validate_file(str(p)) == []
+    # JSONL -> registry round-trip reproduces every counter/gauge/histogram
+    r2 = texport.load_registry(str(trace))
+    assert r2.to_events() == tele.registry.to_events()
+    # gauge sync put the budget state in the snapshot
+    snap = json.loads(mjson.read_text())
+    assert snap["schema"] == texport.SCHEMA
+    spent = sum(snap["counters"]["wire_bits_total"].values())
+    assert spent == transport.total_bits
+    assert snap["gauges"]["budget_exhausted"][""] == int(transport.exhausted)
+
+
+def test_check_cli_exit_codes(tmp_path):
+    good = tmp_path / "ok.jsonl"
+    r = MetricsRegistry()
+    r.inc("x_total", 1)
+    texport.write_trace(str(good), registry=r,
+                        tracer=SpanTracer(r, fence=False))
+    assert tcheck.main([str(good)]) == 0
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{"type": "metric"}\n')
+    assert tcheck.main([str(bad)]) == 1
+    assert tcheck.main([]) == 2
+
+
+def test_prometheus_text_shape():
+    r = MetricsRegistry()
+    r.inc("wire_bits_total", 64, src="a0", dst='a"1')
+    r.set_gauge("budget_exhausted", 0)
+    r.observe("span_seconds", 0.25, name="hop")
+    text = texport.prometheus_text(r)
+    assert '# TYPE wire_bits_total counter' in text
+    assert 'wire_bits_total{dst="a\\"1",src="a0"} 64' in text
+    assert "span_seconds_count" in text and "span_seconds_sum" in text
+    assert tcheck.validate_prometheus(text) == []
+
+
+# ------------------------------------------- transport ledger bookkeeping
+def test_transport_log_snapshot_consistency():
+    log = TransportLog()
+    log.send_bits("a", "b", "ignorance", 128)
+    log.send_bits("a", "b", "ignorance", 64)
+    log.send_bits("b", "c", "score_block", 32)
+    snap = log.snapshot()
+    assert snap["total_bits"] == log.total_bits == 224
+    assert snap["hops"] == log.hops == 3
+    assert snap["by_kind_link"][("ignorance", "a", "b")] == 192
+    assert log.bits_by_kind() == {"ignorance": 192, "score_block": 32}
+    assert log.bits_by_src(("ignorance",)) == {"a": 192}
+    # derived views always agree with a cold rebuild from the entry list
+    rebuilt = TransportLog(entries=list(log.entries))
+    assert rebuilt.snapshot() == snap
+
+
+def test_transport_log_registry_emission():
+    r = MetricsRegistry()
+    log = TransportLog(registry=r)
+    log.send_bits("a", "b", "ignorance", 128)
+    log.send_bits("a", "c", "labels", 16)
+    assert r.value("wire_bits_total", kind="ignorance", src="a",
+                   dst="b") == 128
+    assert r.total("messages_total") == 2
+
+
+# ------------------------------------- serve counter surfaces (back-compat)
+def test_serve_surfaces_read_from_shared_registry(blob, tmp_path):
+    Xtr, ctr, Xte, k = blob
+    proto = Protocol(SessionConfig(num_classes=k, max_rounds=2),
+                     transport=MeteredTransport(
+                         privacy=GaussianMechanism(epsilon=1.0),
+                         serve_codec=make_codec("int8")),
+                     backend="compiled")
+    proto.fit(jax.random.key(3),
+              endpoints_for([LogisticRegression(steps=40) for _ in Xtr],
+                            Xtr), ctr)
+    tele = Telemetry()
+    engine = ServeEngine(
+        cache_capacity=1, max_batch=4,
+        admission=AdmissionController(AdmissionPolicy(),
+                                      tenant_bits=10_000_000,
+                                      mechanism=GaussianMechanism(
+                                          epsilon=1.0)),
+        telemetry=tele, spill_dir=str(tmp_path))
+    engine.add_session("s0", proto)
+    engine.add_session("s1", proto)
+    for i in range(4):
+        engine.submit(f"t{i % 2}", f"s{i % 2}", [x[:8] for x in Xte])
+    engine.flush()
+    summary = engine.summary()
+    # one registry feeds every surface; the pre-registry key schemas hold
+    counters = engine.admission.counters()
+    for t in ("t0", "t1"):
+        assert set(counters[t]) == {"served", "degraded", "denied", "bits",
+                                    "released"}
+        assert counters[t]["served"] == tele.registry.value(
+            "admission_outcomes_total", tenant=t, outcome="served") == 2
+    cache_stats = engine.cache.stats()
+    assert set(cache_stats) >= {"capacity", "resident", "hits", "restores",
+                                "spills"}
+    assert cache_stats["spills"] == tele.registry.value(
+        "cache_events_total", event="spill")
+    batch_stats = engine.batcher.stats()
+    assert batch_stats["slots_run"] == tele.registry.value(
+        "batch_events_total", event="slot") == 4
+    assert summary["requests"] == tele.registry.total(
+        "serve_requests_total") == 4
+    assert tele.registry.total("dp_releases_total") > 0
+    assert tele.tracer.well_formed()
+    flush_spans = [s.name for s in tele.tracer.spans]
+    assert {"flush", "flush_wave", "bucket_dispatch"} <= set(flush_spans)
+    engine.close()
+
+
+def test_standalone_cache_private_registry(tmp_path):
+    cache = SessionCache(capacity=1, spill_dir=str(tmp_path))
+    assert cache.stats()["hits"] == 0
+    assert cache.hits == 0
