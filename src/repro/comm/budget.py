@@ -167,6 +167,10 @@ class BudgetedTransport(MeteredTransport):
         self.link_spent: dict = {}      # (src, dst) -> bits
         self.skipped: list = []         # (src, dst) of dropped hops
         self.exhausted = False
+        # rung chosen by the most recent ladder walk, consumed by the next
+        # wire-priced booking (_on_send stamps it onto the ledger entry so a
+        # late-attached registry can backfill hops_by_rung_total)
+        self._pending_rung: int | None = None
         # bits a paused run already spent against the session cap (restored
         # from SessionState.comm on resume; this process's log starts empty)
         self.carryover_bits = 0
@@ -186,8 +190,16 @@ class BudgetedTransport(MeteredTransport):
 
     def record_spend(self, link, cost: int, rung: int) -> None:
         """Book ``cost`` bits of link spend for a hop shipped at ladder
-        index ``rung``."""
+        index ``rung``.  Arms ``_pending_rung`` so the wire-priced booking
+        that follows (eager: the send inside ``super().interchange`` /
+        ``serve_block`` / ``ship``; compiled: the replayed send right after
+        this call) records the rung on its ledger entry.  Also degrades
+        ``codec`` to the chosen rung — the single place both backends set
+        it, so a replayed run ends with the same last-used codec as the
+        eager walk."""
+        self.codec = self.budget.ladder[int(rung)]
         self.link_spent[link] = self.link_spent.get(link, 0) + cost
+        self._pending_rung = int(rung)
         registry = getattr(self.log, "registry", None)
         if registry is not None:
             registry.inc("hops_by_rung_total", 1, rung=int(rung))
@@ -233,8 +245,7 @@ class BudgetedTransport(MeteredTransport):
                 self.exhausted = True
             self.record_skip(link)
             return w, codec_state
-        self.codec = self.budget.ladder[idx]           # degrade precision
-        self.record_spend(link, costs[idx], idx)
+        self.record_spend(link, costs[idx], idx)   # degrades codec too
         return super().interchange(src, dst, w, r, alpha, reweight,
                                    standard, key=key,
                                    codec_state=codec_state, _w_out=w_out)
@@ -267,9 +278,31 @@ class BudgetedTransport(MeteredTransport):
                 self.exhausted = True
             self.record_skip(link)
             return None
-        self.codec = self.budget.ladder[idx]           # degrade precision
-        self.record_spend(link, costs[idx], idx)
+        self.record_spend(link, costs[idx], idx)   # degrades codec too
         return super().serve_block(src, dst, block, key=key)
+
+    def barrier_release(self, head, w_bar, *, key=None, codec_state=None):
+        """Budgeted async-barrier release: one *session-level* ladder walk
+        over the bare payload costs (the per-agent alpha messages book raw
+        before this reads the ledger; link caps don't apply — the barrier
+        is a broadcast, not a directed link).  A skip leaves the published
+        score stale and flips ``exhausted``, ending round scheduling —
+        per-barrier budget metering on the one ledger."""
+        n = int(w_bar.shape[0])
+        costs = self.budget.payload_costs(n)
+        rem_s = (math.inf if self.budget.session_bits is None
+                 else self.budget.session_bits - self.log.total_bits
+                 - self.carryover_bits)
+        idx = self.budget.choose_costs(costs, rem_s, math.inf)
+        link = ("barrier", head.name)
+        if idx is None:
+            if rem_s < min(costs):
+                self.exhausted = True
+            self.record_skip(link)
+            return None, codec_state
+        self.record_spend(link, costs[idx], idx)   # degrades codec too
+        return super().barrier_release(head, w_bar, key=key,
+                                       codec_state=codec_state)
 
     def ship(self, src, dst, payload, wrap, *, key=None):
         """Budgeted protocol-variant hop (GradientMsg / ResidualMsg): the
@@ -293,6 +326,5 @@ class BudgetedTransport(MeteredTransport):
                 self.exhausted = True
             self.record_skip(link)
             return None
-        self.codec = self.budget.ladder[idx]           # degrade precision
-        self.record_spend(link, costs[idx], idx)
+        self.record_spend(link, costs[idx], idx)   # degrades codec too
         return super().ship(src, dst, payload, wrap, key=key)

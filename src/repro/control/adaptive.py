@@ -152,18 +152,28 @@ class AdaptiveController:
         return 1.0 / (n * jnp.maximum(jnp.sum(p * p), 1e-12))
 
     def step(self, w_prev: jnp.ndarray, w_out: jnp.ndarray,
-             ema: jnp.ndarray):
+             ema: jnp.ndarray, cuts=None, beta=None):
         """One controller step: observe, smooth, pick the rung.
 
         Returns ``(rung int32, new_ema f32)``.  The rung computation is
         branchless — ``sum(ema < thresholds)`` counts how many boundaries
         the smoothed statistic has fallen below — so it traces into the
         compiled session scan with no control flow.
+
+        ``cuts``/``beta`` optionally override the static ``thresholds`` /
+        ``beta`` fields with *traced* operands (same shapes): the sweep
+        program (``core.compiled.control_sweep_run``) vmaps one traced
+        session over per-config threshold/beta arrays so N controller
+        hyperparameters compile exactly once.  When traced and static
+        values coincide the arithmetic is identical, so the override path
+        stays bit-compatible with the static one.
         """
         s = self.observe(w_prev, w_out)
-        ema = self.beta * ema + (1.0 - self.beta) * s
-        cuts = jnp.asarray(self.thresholds, jnp.float32)
-        rung = jnp.sum((ema < cuts).astype(jnp.int32))
+        b = self.beta if beta is None else beta
+        ema = b * ema + (1.0 - b) * s
+        c = jnp.asarray(self.thresholds if cuts is None else cuts,
+                        jnp.float32)
+        rung = jnp.sum((ema < c).astype(jnp.int32))
         return rung, ema
 
 

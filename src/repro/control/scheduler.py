@@ -20,17 +20,83 @@ Ordering key, ascending (all components deterministic):
      ties break toward agents whose recent components earned more;
   3. the agent id (stability).
 
-This is a *host-side* scheduler like :class:`~repro.core.engine.
-RandomScheduler`: the round order depends on live transport state, which a
-single lowered ``lax.scan`` over heterogeneous agents cannot re-permute, so
-``backend="compiled"`` rejects it exactly as it rejects the random and
-async schedulers.  Scheduler state (the reward EMAs) checkpoints through
+Both engine backends run it.  Eager, ``Session.step`` asks
+:meth:`BudgetAwareScheduler.round_order` each round; compiled, the same
+rule lowers into the session scan for *homogeneous* fleets (equal cores
+and feature shapes): ``core.compiled.make_session_fn`` carries per-agent
+spent-bit counters and the reward EMAs through the ``lax.scan`` and
+re-permutes each round in-program via :func:`traced_round_order` (a
+``lexsort`` over the identical ``(spent, -ema, id)`` key) plus gathers
+over the stacked agent data — bit-for-bit the order the eager sort picks,
+which the parity tests pin.  The EMA update itself is shared f32
+arithmetic (:func:`reward_ema_update`): the eager path routes through its
+cached jit so a last-ulp difference can never flip a tie-break.
+Scheduler state (the reward EMAs) checkpoints through
 ``SessionState.comm`` (``state_dict``/``load_state_dict``), so a resumed
 budget-aware session replays the exact order the uninterrupted one chose.
 """
 from __future__ import annotations
 
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
 from repro.core.engine import Scheduler
+
+
+def reward_ema_update(beta, prev, acc, fresh):
+    """The observed-reward EMA step, in f32 — the one formula both backends
+    run.  ``fresh`` selects the first-observation branch (seed with the raw
+    accuracy instead of smoothing from the 0 init), branchlessly so the
+    compiled scan can apply it vectorized over the fleet."""
+    b = jnp.asarray(beta, jnp.float32)
+    prev = jnp.asarray(prev, jnp.float32)
+    acc = jnp.asarray(acc, jnp.float32)
+    upd = b * prev + (jnp.float32(1.0) - b) * acc
+    return jnp.where(fresh, acc, upd)
+
+
+@functools.lru_cache(maxsize=16)
+def jitted_reward_ema(beta: float):
+    """Cached jit of one EMA update — the eager scheduler routes through
+    this (the ``jitted_controller`` discipline) so its stored EMAs are the
+    exact f32 values the compiled scan carries; a host-float EMA could
+    differ at the last ulp and flip the ``-ema`` tie-break."""
+    return jax.jit(functools.partial(reward_ema_update, beta))
+
+
+def traced_round_order(spent, ema):
+    """In-scan twin of :meth:`BudgetAwareScheduler.round_order`: the round
+    permutation as a traced ``lexsort`` over the same ascending key
+    ``(spent bits, -reward EMA, agent id)``.  ``lexsort`` is stable and
+    sorts by the *last* key first, so the key order reverses here; pass a
+    zero ``ema`` to disable the tie-break (``use_reward=False``)."""
+    ids = jnp.arange(spent.shape[0], dtype=jnp.int32)
+    return jnp.lexsort((ids, -ema.astype(jnp.float32),
+                        spent)).astype(jnp.int32)
+
+
+@dataclass(frozen=True)
+class BudgetAwarePlan:
+    """Static (hashable) description of a :class:`BudgetAwareScheduler` for
+    the compiled backend — rides ``SessionPlan.scheduler`` as a jit-static
+    argument.  ``spend_signal`` names what the carried per-agent spent-bit
+    counters track: ``"link"`` (budgeted transport: per-link ladder spend),
+    ``"wire"`` (plain metered: interchange wire bits by sender), or
+    ``"none"`` (unmetered transport: all zeros, pure EMA/id ordering)."""
+    reward_smoothing: float = 0.5
+    use_reward: bool = True
+    spend_signal: str = "link"
+
+    def __post_init__(self):
+        if not 0.0 <= self.reward_smoothing < 1.0:
+            raise ValueError(f"need 0 <= reward_smoothing < 1, got "
+                             f"{self.reward_smoothing}")
+        if self.spend_signal not in ("link", "wire", "none"):
+            raise ValueError(f"unknown spend_signal "
+                             f"{self.spend_signal!r}")
 
 
 class BudgetAwareScheduler(Scheduler):
@@ -69,9 +135,26 @@ class BudgetAwareScheduler(Scheduler):
         if not self.use_reward:
             return
         prev = self._reward_ema.get(agent_id)
-        b = self.reward_smoothing
-        self._reward_ema[agent_id] = (float(acc) if prev is None
-                                      else b * prev + (1.0 - b) * float(acc))
+        # shared f32 update (module docstring): the stored value is the
+        # exact f32 the compiled scan would carry, so both backends break
+        # EMA ties identically
+        val = jitted_reward_ema(self.reward_smoothing)(
+            0.0 if prev is None else prev, float(acc), prev is None)
+        self._reward_ema[agent_id] = float(val)
+
+    def plan(self) -> "BudgetAwarePlan":
+        """The static twin the compiled backend lowers — spend signal from
+        the transport this scheduler is bound to."""
+        t = self._transport
+        if hasattr(t, "link_spent"):
+            signal = "link"
+        elif hasattr(t, "log"):
+            signal = "wire"
+        else:
+            signal = "none"
+        return BudgetAwarePlan(reward_smoothing=self.reward_smoothing,
+                               use_reward=self.use_reward,
+                               spend_signal=signal)
 
     # ---- the ordering rule --------------------------------------------------
     def _spent_by_agent(self, active: list[int]) -> dict[int, int]:

@@ -113,6 +113,14 @@ class SessionPlan:
     # policy's rung floors the same ladder walk, mirroring the eager
     # BudgetedTransport.serve_block composition.
     serve_controller: Any = None
+    # Round-ordering policy (repro.control.scheduler.BudgetAwarePlan): the
+    # scan then re-permutes the agents each round by the carried
+    # (spent bits, -reward EMA, id) key — the in-program twin of the eager
+    # BudgetAwareScheduler.  Homogeneous fleets only (the permutation
+    # gathers over stacked agent data).  None = fixed sequential chain.
+    # An AsyncStalePlan here instead selects the stale-read barrier
+    # lowering (make_async_session_fn).
+    scheduler: Any = None
 
     @property
     def num_agents(self) -> int:
@@ -166,6 +174,12 @@ class SessionResult(NamedTuple):
     shipped with (-1 = not sent), and ``exhausted`` whether the session bit
     budget ran dry — together they let ``Protocol._fit_compiled`` replay the
     exact encoded-bit ledger the eager transport would have booked.
+
+    Every per-slot array is *slot*-major: index j is the j-th agent visited
+    that round.  ``order`` [T, M] maps slot back to agent id — identity
+    rows under sequential plans, the in-scan budget-aware permutation
+    otherwise (``agent_major_result`` re-collects a permuted result into
+    agent-major order for the serve path).
     """
     alphas: jnp.ndarray
     accs: jnp.ndarray
@@ -177,6 +191,7 @@ class SessionResult(NamedTuple):
     sent: jnp.ndarray
     codec_idx: jnp.ndarray
     exhausted: jnp.ndarray
+    order: jnp.ndarray = None
 
 
 def plan_for(learners: Sequence, num_classes: int, *, max_rounds: int = 20,
@@ -186,7 +201,7 @@ def plan_for(learners: Sequence, num_classes: int, *, max_rounds: int = 20,
              kernel_interpret: bool | None = None,
              codec=None, privacy=None, budget=None,
              serve_codec=None, controller=None,
-             serve_controller=None) -> SessionPlan:
+             serve_controller=None, scheduler=None) -> SessionPlan:
     """Build a SessionPlan from eager Learners (they must all be
     ``functional`` — have a LearnerCore)."""
     cores = []
@@ -213,7 +228,8 @@ def plan_for(learners: Sequence, num_classes: int, *, max_rounds: int = 20,
                        kernel_interpret=kernel_interpret,
                        codec=codec, privacy=privacy, budget=budget,
                        serve_codec=serve_codec, controller=controller,
-                       serve_controller=serve_controller)
+                       serve_controller=serve_controller,
+                       scheduler=scheduler)
 
 
 # ==================================================================== lowering
@@ -263,7 +279,7 @@ def rung_select(rung, values, default):
 
 
 def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
-                    qmax_arg: bool = False):
+                    qmax_arg: bool = False, control_arg: bool = False):
     """Lower ``plan`` for per-agent feature shapes into a pure callable
 
         session_fn(key, Xs, classes) -> SessionResult
@@ -274,10 +290,20 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
 
     With a wire channel on the plan the scan additionally carries the
     per-link codec residuals and (under a budget) the spent-bit counters,
-    reproducing the eager transports' channel hop for hop.  ``qmax_arg``
-    re-parameterizes a QuantCodec plan's clipping level as a *traced*
-    trailing argument ``session_fn(key, Xs, classes, qmax)`` so codec
-    sweeps vmap into one program (:func:`quant_sweep_run`).
+    reproducing the eager transports' channel hop for hop.  With a
+    budget-aware ``plan.scheduler`` the scan also carries the per-agent
+    spent-bit signal and reward EMAs and re-permutes the agents each round
+    in-program (homogeneous fleets only) — the order the eager
+    ``BudgetAwareScheduler`` would pick, bit for bit.
+
+    ``qmax_arg`` re-parameterizes a QuantCodec plan's clipping level as a
+    *traced* trailing argument ``session_fn(key, Xs, classes, qmax)`` so
+    codec sweeps vmap into one program (:func:`quant_sweep_run`).
+    ``control_arg`` instead re-parameterizes the *control plane* — adaptive
+    controller thresholds/beta and budget session/link caps — as traced
+    trailing arguments ``(cuts, beta, session_cap, link_cap)`` so
+    controller/budget hyperparameter sweeps vmap into one program too
+    (:func:`control_sweep_run`; ``_INT32_MAX`` caps mean "uncapped").
     """
     if len(feature_shapes) != plan.num_agents:
         raise ValueError(f"{plan.num_agents} cores but "
@@ -294,7 +320,32 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
         if budget is not None or controller is not None \
                 or not isinstance(codec, QuantCodec):
             raise ValueError("qmax_arg sweeps need a plain QuantCodec plan")
-    if budget is not None:
+    if control_arg:
+        if qmax_arg:
+            raise ValueError("qmax_arg and control_arg are separate sweep "
+                             "modes; pick one")
+        if budget is None and controller is None:
+            raise ValueError("control_arg sweeps trace controller cuts/beta "
+                             "and budget caps; the plan has neither")
+    scheduler = plan.scheduler
+    if scheduler is not None:
+        from repro.control.scheduler import BudgetAwarePlan
+        if not isinstance(scheduler, BudgetAwarePlan):
+            raise ValueError(
+                f"SessionPlan.scheduler must be a BudgetAwarePlan for the "
+                f"sequential-scan lowering, got {type(scheduler).__name__} "
+                f"(stale/async plans lower via make_async_session_fn)")
+        if len(set(cores)) != 1 or len(set(feature_shapes)) != 1:
+            raise ValueError(
+                "budget-aware scheduling lowers into the scan only for "
+                "homogeneous fleets (equal learner cores and feature "
+                "shapes — the in-program round permutation gathers over "
+                f"stacked agent data); got {len(set(cores))} distinct "
+                f"cores and shapes {sorted(set(feature_shapes))}")
+        if scheduler.spend_signal == "link" and budget is None:
+            raise ValueError("spend_signal='link' orders by budgeted link "
+                             "spend, but the plan has no budget")
+    if budget is not None and not control_arg:
         for cap in (budget.session_bits, budget.link_bits):
             if cap is not None and cap >= _INT32_MAX:
                 raise ValueError(f"budget caps must fit int32 (the scan's "
@@ -302,7 +353,8 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
     num = plan.num_agents
 
     def session_fn(key: jax.Array, Xs: tuple, classes: jnp.ndarray,
-                   qmax=None) -> SessionResult:
+                   qmax=None, cuts=None, beta=None, session_cap=None,
+                   link_cap=None) -> SessionResult:
         from repro.comm.codecs import channel_apply
         classes = classes.astype(jnp.int32)
         n = classes.shape[0]
@@ -310,6 +362,17 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
         reweight = _make_reweight(plan, n)
         w0 = scores.init_ignorance(n)
         ones = jnp.ones((n,), jnp.float32)
+        if scheduler is not None:
+            from repro.control.scheduler import (reward_ema_update,
+                                                 traced_round_order)
+            Xstack = jnp.stack(Xs)
+            if scheduler.spend_signal == "wire":
+                # the plain-metered ordering signal: each shipped hop's
+                # ignorance wire bits plus the 32-bit ModelWeightMsg —
+                # exactly what TransportLog.bits_by_src tallies per sender
+                wire_costs = tuple(
+                    (int(c.wire_bits(n)) if c is not None else n * 32) + 32
+                    for c in ladder)
         if budget is not None:
             costs = tuple(jnp.asarray(c, jnp.int32)
                           for c in budget.hop_costs(n))
@@ -324,16 +387,36 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
             w, key, stopped = carry["w"], carry["key"], carry["stopped"]
             u = ones
             outs = []
+            if scheduler is not None:
+                # the round permutation, from the carried signal — computed
+                # at round entry exactly when the eager scheduler's
+                # round_order reads its live transport state
+                if scheduler.spend_signal == "link":
+                    spent_sig = carry["link"].sum(axis=1, dtype=jnp.int32)
+                elif scheduler.spend_signal == "wire":
+                    spent_sig = carry["wire"]
+                else:
+                    spent_sig = jnp.zeros((num,), jnp.int32)
+                ema_sig = (carry["ema"] if scheduler.use_reward
+                           else jnp.zeros((num,), jnp.float32))
+                perm = traced_round_order(spent_sig, ema_sig)
             # Agents unrolled: heterogeneous feature widths / cores, but a
             # fixed chain shape — exactly Algorithm 1's inner lines 3-11.
             # named_scope tags the HLO so profiler traces group ops by hop
             # (metadata only — the lowered computation is unchanged).
             for j, core in enumerate(cores):
+                if scheduler is None:
+                    src = j                       # slot j == agent j
+                    X_j, shape_j = Xs[j], feature_shapes[j]
+                else:
+                    src = perm[j]                 # slot j's agent this round
+                    dst_agent = perm[(j + 1) % num]
+                    X_j, shape_j = Xstack[src], feature_shapes[0]
                 with jax.named_scope(f"ascii_hop_{j}"):
                     key, sub = jax.random.split(key)
-                    params = core.fit(core.init(sub, feature_shapes[j]), sub,
-                                      Xs[j], onehot, w)
-                    r = (core.predict(params, Xs[j]) == classes
+                    params = core.fit(core.init(sub, shape_j), sub,
+                                      X_j, onehot, w)
+                    r = (core.predict(params, X_j) == classes
                          ).astype(jnp.float32)
                 u_in = ones if (j == 0 or not plan.upstream) else u
                 a, rbar = scores.model_weight(w, r, k, u=u_in,
@@ -344,6 +427,18 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
                 else:
                     trigger = jnp.zeros((), bool)
                 valid = executed & jnp.logical_not(trigger)
+                if scheduler is not None and scheduler.use_reward:
+                    # the observed-reward EMA advances on every slot the
+                    # eager loop reaches (observe runs before the stop
+                    # check), through the shared f32 update
+                    prev = carry["ema"][src]
+                    upd = reward_ema_update(scheduler.reward_smoothing,
+                                            prev, rbar,
+                                            ~carry["seen"][src])
+                    carry["ema"] = carry["ema"].at[src].set(
+                        jnp.where(executed, upd, prev))
+                    carry["seen"] = carry["seen"].at[src].set(
+                        carry["seen"][src] | executed)
                 # Only a component-producing slot advances u and w — the
                 # eager loop breaks before touching them on a stop trigger,
                 # and never reaches them once stopped.
@@ -365,21 +460,32 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
                         # branchless adaptive rung from (receiver's stale
                         # vector, outgoing vector); the EMA advances on
                         # every slot the eager loop reaches an interchange
-                        # for
+                        # for.  cuts/beta are None outside control_arg
+                        # sweeps — the controller then uses its static
+                        # thresholds, unchanged bit for bit.
                         c_rung, ctrl_new = controller.step(w, w_upd,
-                                                           carry["ctrl"])
+                                                           carry["ctrl"],
+                                                           cuts=cuts,
+                                                           beta=beta)
                         carry["ctrl"] = jnp.where(valid, ctrl_new,
                                                   carry["ctrl"])
                     if budget is not None:
+                        cap_session = (session_cap if control_arg
+                                       else budget.session_bits)
+                        cap_link = (link_cap if control_arg
+                                    else budget.link_bits)
                         rem = jnp.asarray(_INT32_MAX, jnp.int32)
-                        if budget.session_bits is not None:
-                            rem_s = (jnp.asarray(budget.session_bits,
+                        if cap_session is not None:
+                            rem_s = (jnp.asarray(cap_session,
                                                  jnp.int32) - carry["spent"])
                             rem = jnp.minimum(rem, rem_s)
-                        if budget.link_bits is not None:
+                        if cap_link is not None:
+                            link_spent_j = (carry["link"][src, dst_agent]
+                                            if scheduler is not None
+                                            else carry["link"][j])
                             rem = jnp.minimum(
-                                rem, jnp.asarray(budget.link_bits, jnp.int32)
-                                - carry["link"][j])
+                                rem, jnp.asarray(cap_link, jnp.int32)
+                                - link_spent_j)
                         # the controller rung is a floor on the walk:
                         # never finer, budget may go coarser
                         rung = ladder_walk(
@@ -392,7 +498,7 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
                     else:
                         rung = jnp.asarray(0, jnp.int32)
                         sendable = jnp.ones((), bool)
-                    state_j = carry["resid"][j] if stateful else None
+                    state_j = carry["resid"][src] if stateful else None
                     # privacy noise is rung-independent (same key, same
                     # input): apply it once, then codec-only roundtrips per
                     # rung — the per-stage key folds inside channel_apply
@@ -406,7 +512,9 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
                     sent = valid & sendable
                     w = jnp.where(sent, w_chan, w)
                     if stateful:
-                        carry["resid"] = carry["resid"].at[j].set(
+                        # error-feedback residuals are per *sender* (the
+                        # eager engine keys codec_state by src name)
+                        carry["resid"] = carry["resid"].at[src].set(
                             jnp.where(sent, pairs[0][1], state_j))
                     if budget is not None:
                         cost = jnp.select(
@@ -414,15 +522,30 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
                             list(costs), jnp.asarray(0, jnp.int32))
                         add = jnp.where(sent, cost, 0)
                         carry["spent"] = carry["spent"] + add
-                        carry["link"] = carry["link"].at[j].add(add)
-                        if budget.session_bits is not None:
+                        if scheduler is not None:
+                            carry["link"] = carry["link"].at[
+                                src, dst_agent].add(add)
+                        else:
+                            carry["link"] = carry["link"].at[j].add(add)
+                        if cap_session is not None:
                             carry["exhausted"] = carry["exhausted"] | (
                                 valid & (rem_s < min_cost))
                     rung = jnp.where(sent, rung, -1)
+                if scheduler is not None \
+                        and scheduler.spend_signal == "wire":
+                    # per-sender metered-ledger tally (ignorance wire bits
+                    # + the 32-bit alpha message) for next round's ordering
+                    wcost = jnp.select(
+                        [rung == i for i in range(len(wire_costs))],
+                        [jnp.asarray(c, jnp.int32) for c in wire_costs],
+                        jnp.asarray(0, jnp.int32))
+                    carry["wire"] = carry["wire"].at[src].add(
+                        jnp.where(sent, wcost, 0))
                 stopped = stopped | trigger
                 outs.append((params, a, rbar, executed, valid, w, sent,
-                             rung))
-            if budget is not None and budget.session_bits is not None:
+                             rung, jnp.asarray(src, jnp.int32)))
+            if budget is not None \
+                    and (control_arg or budget.session_bits is not None):
                 # the eager engine notices exhaustion at the *next* round's
                 # entry: the current round finishes, later ones never start
                 stopped = stopped | carry["exhausted"]
@@ -436,8 +559,18 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
             init["ctrl"] = controller.init_state()
         if budget is not None:
             init["spent"] = jnp.asarray(setup_bits, jnp.int32)
-            init["link"] = jnp.zeros((num,), jnp.int32)
+            # per directed link under a permuting scheduler (any src->dst
+            # pair can carry a hop), per chain slot otherwise
+            init["link"] = (jnp.zeros((num, num), jnp.int32)
+                            if scheduler is not None
+                            else jnp.zeros((num,), jnp.int32))
             init["exhausted"] = jnp.zeros((), bool)
+        if scheduler is not None:
+            if scheduler.use_reward:
+                init["ema"] = jnp.zeros((num,), jnp.float32)
+                init["seen"] = jnp.zeros((num,), bool)
+            if scheduler.spend_signal == "wire":
+                init["wire"] = jnp.zeros((num,), jnp.int32)
         fin, ys = jax.lax.scan(round_body, init, None,
                                length=plan.max_rounds)
         return SessionResult(
@@ -450,8 +583,13 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
             w=fin["w"],
             sent=jnp.stack([y[6] for y in ys], axis=1),
             codec_idx=jnp.stack([y[7] for y in ys], axis=1),
-            exhausted=fin.get("exhausted", jnp.zeros((), bool)))
+            exhausted=fin.get("exhausted", jnp.zeros((), bool)),
+            order=jnp.stack([y[8] for y in ys], axis=1))
 
+    if control_arg:
+        return (lambda key, Xs, classes, cuts, beta, session_cap, link_cap:
+                session_fn(key, Xs, classes, None, cuts, beta, session_cap,
+                           link_cap))
     if not qmax_arg:
         return lambda key, Xs, classes: session_fn(key, Xs, classes)
     return session_fn
@@ -470,6 +608,250 @@ def compiled_session(plan: SessionPlan, key: jax.Array,
     Xs = tuple(jnp.asarray(x) for x in Xs)
     shapes = tuple(x.shape[1:] for x in Xs)
     return _session_program(plan, shapes)(key, Xs, classes)
+
+
+# ================================================================ async barrier
+@dataclass(frozen=True)
+class AsyncStalePlan:
+    """Static (hashable) marker selecting the stale-read asynchronous
+    lowering: rides ``SessionPlan.scheduler`` the way
+    :class:`repro.control.scheduler.BudgetAwarePlan` does, and routes
+    ``make_async_session_fn`` instead of the sequential scan.  Carries no
+    knobs — clock skew comes from scenarios, which the compiled backend
+    rejects."""
+
+
+class AsyncSessionResult(NamedTuple):
+    """Fixed-shape output of one compiled *asynchronous* session.
+
+    ``alphas``/``accs``/``executed``/``valid``/``params`` are the async
+    twins of :class:`SessionResult`'s fields, in agent-id order (the async
+    barrier has no chain order; ``executed`` rows are all-True or
+    all-False).  ``w_trace`` [T, M, n] holds the mid-merge snapshots the
+    channel-less barrier's per-agent IgnoranceMsgs carry; ``w_bar`` [T, n]
+    the per-round barrier release *as published* (post DP noise + codec —
+    what the single barrier IgnoranceMsg ships when the plan has a
+    channel); ``sent`` [T] whether the barrier actually released (budget
+    skips False), ``codec_idx`` [T] the ladder rung it shipped at (-1 =
+    raw / skipped), ``exhausted`` whether the session bit budget ran dry.
+    """
+    alphas: jnp.ndarray
+    accs: jnp.ndarray
+    executed: jnp.ndarray
+    valid: jnp.ndarray
+    params: tuple
+    w_trace: jnp.ndarray
+    w_bar: jnp.ndarray
+    w: jnp.ndarray
+    sent: jnp.ndarray
+    codec_idx: jnp.ndarray
+    exhausted: jnp.ndarray
+
+
+def make_async_session_fn(plan: SessionPlan, feature_shapes: tuple):
+    """Lower the stale-read asynchronous barrier (``AsyncStaleScheduler``)
+    into a pure callable ``session_fn(key, Xs, classes) ->
+    AsyncSessionResult`` — one ``lax.scan`` over barrier rounds.
+
+    Each round replicates ``Session._step_stale`` exactly: every agent
+    fits against the same round-t score (per-agent PRNG splits in id
+    order), positive updates merge multiplicatively with 1/M damping in id
+    order, and the merged score normalizes at the barrier.  With a wire
+    channel the *release* is the channel point: one DP noise draw + codec
+    encode per barrier (key split after the per-agent splits), and under a
+    budget one session-level ladder walk over the bare payload costs —
+    per-barrier metering, one ledger, instead of the per-hop fiction the
+    eager path used to reject.  A skipped release leaves the published
+    score stale, exactly like a skipped sequential hop.
+    """
+    if len(feature_shapes) != plan.num_agents:
+        raise ValueError(f"{plan.num_agents} cores but "
+                         f"{len(feature_shapes)} feature shapes")
+    if plan.controller is not None:
+        raise ValueError("adaptive controllers do not apply to the async "
+                         "barrier (its EMA statistic is defined on per-hop "
+                         "interchange, which the barrier path has none of)")
+    k = plan.num_classes
+    cores = plan.cores
+    codec, privacy, budget = plan.codec, plan.privacy, plan.budget
+    ladder = plan.ladder
+    has_channel = plan.has_channel
+    stateful = codec is not None and codec.stateful
+    if budget is not None:
+        for cap in (budget.session_bits, budget.link_bits):
+            if cap is not None and cap >= _INT32_MAX:
+                raise ValueError(f"budget caps must fit int32 (the scan's "
+                                 f"spent-bit counters), got {cap}")
+    num = plan.num_agents
+
+    def session_fn(key: jax.Array, Xs: tuple,
+                   classes: jnp.ndarray) -> AsyncSessionResult:
+        from repro.comm.codecs import channel_apply
+        classes = classes.astype(jnp.int32)
+        n = classes.shape[0]
+        onehot = jax.nn.one_hot(classes, k)
+        w0 = scores.init_ignorance(n)
+        if budget is not None:
+            costs = tuple(jnp.asarray(c, jnp.int32)
+                          for c in budget.payload_costs(n))
+            min_cost = min(budget.payload_costs(n))
+            from repro.core.engine import LabelsMsg, SampleIdsMsg
+            setup_bits = (num - 1) * (LabelsMsg("", "", n).bits
+                                      + SampleIdsMsg("", "", n).bits)
+
+        def round_body(carry, _):
+            w, key, stopped = carry["w"], carry["key"], carry["stopped"]
+            executed = jnp.logical_not(stopped)
+            fits = []
+            # stale reads: every agent fits against the same round-t score,
+            # per-agent key splits in id order (the eager fits loop)
+            for j, core in enumerate(cores):
+                with jax.named_scope(f"ascii_async_fit_{j}"):
+                    key, sub = jax.random.split(key)
+                    params = core.fit(core.init(sub, feature_shapes[j]),
+                                      sub, Xs[j], onehot, w)
+                    r = (core.predict(params, Xs[j]) == classes
+                         ).astype(jnp.float32)
+                a, rbar = scores.model_weight(w, r, k,
+                                              alpha_cap=plan.alpha_cap)
+                fits.append((params, r, a, rbar))
+            # damped multiplicative merge at the barrier, agent-id order
+            w_next = w
+            any_pos = jnp.zeros((), bool)
+            pos_count = jnp.asarray(0, jnp.int32)
+            snaps = []
+            for params, r, a, rbar in fits:
+                use = executed & (a > 0)
+                any_pos = any_pos | use
+                pos_count = pos_count + jnp.where(use, 1, 0)
+                w_next = jnp.where(use,
+                                   w_next * jnp.exp((a / num) * (1.0 - r)),
+                                   w_next)
+                snaps.append(w_next)
+            w_bar = w_next / jnp.maximum(jnp.sum(w_next), 1e-12)
+            if not has_channel:
+                released = w_bar
+                sent = executed
+                rung = jnp.asarray(-1, jnp.int32)
+                w = jnp.where(executed, w_bar, w)
+            else:
+                # per-barrier release: DP noise + codec encode happen at
+                # merge time, once per round — key split *after* the
+                # per-agent fit splits, like the eager barrier
+                key, kbar = jax.random.split(key)
+                if budget is not None:
+                    # the raw alpha messages book before the walk reads
+                    # the ledger (the eager merge loop sends them first);
+                    # link caps don't apply — the barrier is session-level
+                    carry["spent"] = carry["spent"] + 32 * pos_count
+                    rem_s = jnp.asarray(_INT32_MAX, jnp.int32)
+                    if budget.session_bits is not None:
+                        rem_s = (jnp.asarray(budget.session_bits, jnp.int32)
+                                 - carry["spent"])
+                    rung = ladder_walk(costs, rem_s)
+                    sendable = rung >= 0
+                    if budget.session_bits is not None:
+                        carry["exhausted"] = carry["exhausted"] | (
+                            executed & (rem_s < min_cost))
+                else:
+                    rung = jnp.asarray(0, jnp.int32)
+                    sendable = jnp.ones((), bool)
+                state = carry["resid"] if stateful else None
+                # noise once (rung-independent), then codec-only
+                # roundtrips per rung — bit-identical to the eager fused
+                # channel (see the sequential round_body note)
+                noised, _ = channel_apply(None, privacy, w_bar, kbar, None)
+                pairs = [channel_apply(c, None, noised, kbar, state)
+                         for c in ladder]
+                released = rung_select(rung, [p[0] for p in pairs], w_bar)
+                sent = executed & sendable
+                w = jnp.where(sent, released, w)
+                if stateful:
+                    carry["resid"] = jnp.where(sent, pairs[0][1], state)
+                if budget is not None:
+                    cost = jnp.select(
+                        [rung == i for i in range(len(ladder))],
+                        list(costs), jnp.asarray(0, jnp.int32))
+                    carry["spent"] = carry["spent"] + jnp.where(sent, cost,
+                                                                0)
+                rung = jnp.where(sent, rung, -1)
+            if plan.stop_on_negative_alpha:
+                stopped = stopped | (executed & jnp.logical_not(any_pos))
+            if budget is not None and budget.session_bits is not None:
+                stopped = stopped | carry["exhausted"]
+            carry = dict(carry, w=w, key=key, stopped=stopped)
+            outs = tuple(
+                (params, a, rbar, executed, executed & (a > 0), snaps[j])
+                for j, (params, r, a, rbar) in enumerate(fits))
+            return carry, (outs, released, sent, rung)
+
+        init = {"w": w0, "key": key, "stopped": jnp.zeros((), bool)}
+        if stateful:
+            init["resid"] = jnp.zeros((n,), jnp.float32)
+        if budget is not None:
+            init["spent"] = jnp.asarray(setup_bits, jnp.int32)
+            init["exhausted"] = jnp.zeros((), bool)
+        fin, (ys, w_bars, sents, rungs) = jax.lax.scan(
+            round_body, init, None, length=plan.max_rounds)
+        return AsyncSessionResult(
+            alphas=jnp.stack([y[1] for y in ys], axis=1),
+            accs=jnp.stack([y[2] for y in ys], axis=1),
+            executed=jnp.stack([y[3] for y in ys], axis=1),
+            valid=jnp.stack([y[4] for y in ys], axis=1),
+            params=tuple(y[0] for y in ys),
+            w_trace=jnp.stack([y[5] for y in ys], axis=1),
+            w_bar=w_bars,
+            w=fin["w"],
+            sent=sents,
+            codec_idx=rungs,
+            exhausted=fin.get("exhausted", jnp.zeros((), bool)))
+
+    return session_fn
+
+
+@functools.lru_cache(maxsize=64)
+def _async_session_program(plan: SessionPlan, feature_shapes: tuple):
+    return jax.jit(make_async_session_fn(plan, feature_shapes))
+
+
+def async_session(plan: SessionPlan, key: jax.Array,
+                  Xs: Sequence[jnp.ndarray],
+                  classes: jnp.ndarray) -> AsyncSessionResult:
+    """Run one stale-read asynchronous session as a single compiled program
+    (cached per (plan, feature shapes))."""
+    Xs = tuple(jnp.asarray(x) for x in Xs)
+    shapes = tuple(x.shape[1:] for x in Xs)
+    return _async_session_program(plan, shapes)(key, Xs, classes)
+
+
+def fitted_from_async_result(plan: SessionPlan, result: AsyncSessionResult,
+                             learners: Sequence):
+    """Rebuild the eager engine's result objects from a compiled async run
+    — byte-compatible with the eager ``_step_stale`` session's
+    ``fitted()``.  Agent-major throughout (the barrier has no chain order);
+    every executed round records all M alphas/accs, components come from
+    the positive-alpha subset in id order."""
+    from repro.core.engine import Component, FittedASCII
+
+    alphas = np.asarray(result.alphas)
+    accs = np.asarray(result.accs)
+    executed = np.asarray(result.executed)
+    valid = np.asarray(result.valid)
+    components, history = [], []
+    for t in range(plan.max_rounds):
+        if not executed[t].any():
+            break                        # the eager loop stopped before t
+        rec = {"round": t,
+               "alphas": [float(a) for a in alphas[t]],
+               "accs": [float(a) for a in accs[t]]}
+        for m in range(plan.num_agents):
+            if valid[t, m]:
+                params_tm = jax.tree.map(lambda x, _t=t: x[_t],
+                                         result.params[m])
+                components.append(Component(m, t, float(alphas[t, m]),
+                                            params_tm))
+        history.append(rec)
+    return FittedASCII(components, list(learners), plan.num_classes, history)
 
 
 # ======================================================================== fleet
@@ -837,19 +1219,132 @@ def quant_sweep_run(plan: SessionPlan, keys: jax.Array,
         keys, Xs, classes, jnp.asarray(qmaxes, jnp.float32), serve_Xs)
 
 
+# ============================================================== control sweep
+#: Trace-entry counters keyed by program family — CI's compile-count
+#: assertion reads these: a correctly cached sweep traces exactly once no
+#: matter how many configs it vmaps over.
+TRACE_COUNTS: dict = {}
+
+
+@functools.lru_cache(maxsize=64)
+def _control_sweep_program(plan: SessionPlan, feature_shapes: tuple):
+    fn = make_session_fn(plan, feature_shapes, control_arg=True)
+
+    def counted(key, Xs, classes, cuts, beta, session_cap, link_cap):
+        # runs at trace time only: one increment per compile, not per config
+        TRACE_COUNTS["control_sweep"] = \
+            TRACE_COUNTS.get("control_sweep", 0) + 1
+        return fn(key, Xs, classes, cuts, beta, session_cap, link_cap)
+
+    return jax.jit(jax.vmap(counted, in_axes=(0, None, None, 0, 0, 0, 0)))
+
+
+def control_sweep_run(plan: SessionPlan, keys: jax.Array,
+                      Xs: Sequence[jnp.ndarray], classes: jnp.ndarray, *,
+                      cuts=None, betas=None, session_bits=None,
+                      link_bits=None) -> SessionResult:
+    """Sweep the *control plane* across a session fleet in ONE XLA program.
+
+    The plan's adaptive-controller thresholds (``cuts`` [S, R-1]) and EMA
+    coefficient (``betas`` [S]) and/or its budget caps (``session_bits`` /
+    ``link_bits``, [S] sequences with ``None`` entries = uncapped) become
+    traced per-session operands: config s runs with PRNG key ``keys[s]``
+    under its own controller/budget hyperparameters — the control-plane
+    analogue of :func:`quant_sweep_run`, replacing one re-trace per
+    hyperparameter with a single compile (``TRACE_COUNTS['control_sweep']``
+    counts the traces; CI asserts it stays at one across a sweep).  Any
+    axis left ``None`` is filled from the plan's static values, so a sweep
+    can vary thresholds alone, caps alone, or both.  Returns a
+    :class:`SessionResult` with a leading config axis, each row bit-equal
+    to a static plan compiled with that config's values.
+    """
+    if plan.budget is None and plan.controller is None:
+        raise ValueError("control_sweep_run sweeps controller thresholds "
+                         "and budget caps; the plan has neither")
+    Xs = tuple(jnp.asarray(x) for x in Xs)
+    shapes = tuple(x.shape[1:] for x in Xs)
+    S = int(jnp.shape(keys)[0])
+    if cuts is None:
+        base = (plan.controller.thresholds if plan.controller is not None
+                else ())
+        cuts = jnp.tile(jnp.asarray(base, jnp.float32)[None, :], (S, 1))
+    else:
+        cuts = jnp.asarray(cuts, jnp.float32)
+    if betas is None:
+        b = plan.controller.beta if plan.controller is not None else 0.0
+        betas = jnp.full((S,), b, jnp.float32)
+    else:
+        betas = jnp.asarray(betas, jnp.float32)
+
+    def cap_axis(vals, static):
+        clip = lambda v: min(int(v), _INT32_MAX) if v is not None \
+            else _INT32_MAX
+        if vals is None:
+            return jnp.full((S,), clip(static), jnp.int32)
+        return jnp.asarray([clip(v) for v in vals], jnp.int32)
+
+    sb = cap_axis(session_bits,
+                  plan.budget.session_bits if plan.budget else None)
+    lb = cap_axis(link_bits, plan.budget.link_bits if plan.budget else None)
+    return _control_sweep_program(plan, shapes)(keys, Xs, classes, cuts,
+                                                betas, sb, lb)
+
+
 # ============================================================= host extraction
+def agent_major_result(result: SessionResult) -> SessionResult:
+    """Re-collect a slot-major :class:`SessionResult` to agent-major.
+
+    Under a permuting scheduler, slot ``j`` of round ``t`` holds whichever
+    agent ``result.order[t, j]`` names, so consumers that index per-agent
+    state positionally (the serve paths read ``params[m]``) need the
+    inverse permutation applied first.  Host-side and cheap (numpy gathers
+    plus one params re-stack); identity plans short-circuit.
+    """
+    order = getattr(result, "order", None)
+    if order is None:
+        return result
+    order = np.asarray(order)
+    T, M = order.shape
+    if np.array_equal(order, np.tile(np.arange(M), (T, 1))):
+        return result
+    inv = np.argsort(order, axis=1)      # inv[t, m] = slot agent m ran in
+
+    def collect(a):
+        if a is None:
+            return None
+        return jnp.asarray(np.take_along_axis(np.asarray(a), inv, axis=1))
+
+    params = tuple(
+        jax.tree.map(
+            lambda *xs, _m=m: jnp.stack(
+                [xs[int(inv[t, _m])][t] for t in range(T)]),
+            *result.params)
+        for m in range(M))
+    return result._replace(
+        alphas=collect(result.alphas), accs=collect(result.accs),
+        executed=collect(result.executed), valid=collect(result.valid),
+        params=params,
+        sent=collect(result.sent), codec_idx=collect(result.codec_idx),
+        order=jnp.tile(jnp.arange(M, dtype=jnp.int32), (T, 1)))
+
+
 def fitted_from_result(plan: SessionPlan, result: SessionResult,
                        learners: Sequence):
     """Rebuild the eager engine's result objects from a compiled run: the
     component list (valid slots in chain order), the round history, and a
     :class:`repro.core.engine.FittedASCII` — byte-compatible with what
-    ``Protocol.fit`` returns on the eager path."""
+    ``Protocol.fit`` returns on the eager path.  Slot-major input: under a
+    permuting scheduler the component agent ids come from ``result.order``
+    (slot ``j`` holds agent ``order[t, j]``), matching the eager visit
+    order exactly."""
     from repro.core.engine import Component, FittedASCII
 
     alphas = np.asarray(result.alphas)
     accs = np.asarray(result.accs)
     executed = np.asarray(result.executed)
     valid = np.asarray(result.valid)
+    order = getattr(result, "order", None)
+    order = None if order is None else np.asarray(order)
     components, history = [], []
     for t in range(plan.max_rounds):
         if not executed[t].any():
@@ -861,9 +1356,10 @@ def fitted_from_result(plan: SessionPlan, result: SessionResult,
             rec["alphas"].append(float(alphas[t, j]))
             rec["accs"].append(float(accs[t, j]))
             if valid[t, j]:
+                agent = j if order is None else int(order[t, j])
                 params_tj = jax.tree.map(lambda x, _t=t: x[_t],
                                          result.params[j])
-                components.append(Component(j, t, float(alphas[t, j]),
+                components.append(Component(agent, t, float(alphas[t, j]),
                                             params_tj))
         history.append(rec)
     return FittedASCII(components, list(learners), plan.num_classes, history)

@@ -420,6 +420,37 @@ class Transport(abc.ABC):
         self.send(wrap(src.name, dst.name, payload, wire_bits=wire_bits))
         return payload
 
+    def barrier_release(self, head: "AgentEndpoint", w_bar: jnp.ndarray, *,
+                        key=None, codec_state=None):
+        """One asynchronous-barrier release: the merged, renormalized score
+        crosses the wire channel *once per round* — DP noise, then codec
+        encode/decode, priced at its encoded size — published to the round
+        head as a single IgnoranceMsg from the synthetic ``"barrier"``
+        sender (the merge itself has no single agent source, and per-agent
+        alphas already crossed raw).
+
+        Returns ``(w_released, codec_state)``; a budgeted transport may
+        instead skip the release (``(None, codec_state)``) when the session
+        budget cannot afford even the cheapest rung, leaving the published
+        score stale for one more round.  ``key`` is the per-barrier subkey
+        (split *after* the round's fit splits, so attaching a channel never
+        shifts the fit PRNG stream); ``codec_state`` is the barrier link's
+        error-feedback residual for stateful codecs.
+        """
+        from repro.comm.codecs import jitted_channel
+        if (self.codec is not None and self.codec.stateful
+                and codec_state is None):
+            codec_state = self.codec.init_state(int(w_bar.shape[0]))
+        w_rel, codec_state = jitted_channel(self.codec, self.privacy)(
+            w_bar, key, codec_state)
+        if self.privacy is not None:
+            self.accountant.record("barrier")
+        wire_bits = (self.codec.wire_bits(int(w_bar.shape[0]))
+                     if self.codec is not None else None)
+        self.send(IgnoranceMsg("barrier", head.name, w_rel,
+                               wire_bits=wire_bits))
+        return w_rel, codec_state
+
 
 class InProcessTransport(Transport):
     """Direct in-memory delivery; the plain single-host path."""
@@ -442,7 +473,16 @@ class MeteredTransport(Transport):
 
     def _on_send(self, msg: Message) -> None:
         if msg.wire_bits is not None:
-            self.log.send_bits(msg.src, msg.dst, msg.kind, msg.wire_bits)
+            # a budgeted subclass arms _pending_rung in record_spend; the
+            # wire-priced booking that follows consumes it, stamping the
+            # chosen ladder rung onto the ledger entry so a registry
+            # attached *after* the traffic can still backfill
+            # hops_by_rung_total
+            rung = getattr(self, "_pending_rung", None)
+            self.log.send_bits(msg.src, msg.dst, msg.kind, msg.wire_bits,
+                               rung=rung)
+            if rung is not None:
+                self._pending_rung = None
         else:
             self.log.send(msg.src, msg.dst, msg.kind, msg.num_elements,
                           msg.bits_per_element)
@@ -958,12 +998,13 @@ class Session:
         # closures, one-hot labels, fit-weight tables) — variants stash what
         # bind() computes here so one variant object can drive many sessions
         self.vctx: dict = {}
-        if scheduler.stale and transport.has_channel:
+        if scheduler.stale and transport.controller is not None:
             raise ValueError(
-                "wire channels (codec/privacy) are not supported on the "
-                "stale-read async path: its barrier merge is computed "
-                "host-side, so per-hop channel semantics would be fiction; "
-                "use a sequential or random scheduler")
+                "adaptive controllers do not apply to the stale-read async "
+                "path: their EMA statistic is defined on per-hop "
+                "interchange, and the barrier releases once per round; "
+                "drop controller= (codec/privacy/budget channels release "
+                "per barrier and are supported)")
         if not isinstance(self.variant, ASCIIVariant):
             if scheduler.stale:
                 raise ValueError(
@@ -1106,6 +1147,7 @@ class Session:
         w_next = st.w
         any_pos = False
         total = len(order)
+        channel = self.transport.has_channel
         for j, (m, params, r, a, rbar) in enumerate(fits):
             rec["alphas"].append(float(a))
             rec["accs"].append(float(rbar))
@@ -1119,10 +1161,37 @@ class Session:
             # chance-level at M=20); damping restores the per-round weight
             # movement of the sequential chain.
             w_next = w_next * jnp.exp((a / total) * (1.0 - r))
-            dst = eps[order[(j + 1) % total]]
-            self.transport.send(IgnoranceMsg(eps[m].name, dst.name, w_next))
-            self.transport.send(ModelWeightMsg(eps[m].name, dst.name, float(a)))
-        st.w = w_next / jnp.maximum(jnp.sum(w_next), 1e-12)
+            if channel:
+                # under a wire channel the barrier is the release point:
+                # only the raw scalar alphas cross per agent; the merged
+                # score ships once, below
+                self.transport.send(ModelWeightMsg(eps[m].name, "barrier",
+                                                   float(a)))
+            else:
+                dst = eps[order[(j + 1) % total]]
+                self.transport.send(IgnoranceMsg(eps[m].name, dst.name,
+                                                 w_next))
+                self.transport.send(ModelWeightMsg(eps[m].name, dst.name,
+                                                   float(a)))
+        w_bar = w_next / jnp.maximum(jnp.sum(w_next), 1e-12)
+        if not channel:
+            st.w = w_bar
+        else:
+            # per-barrier release semantics: DP noise + codec encode happen
+            # at merge time, once per round, and a budgeted transport walks
+            # its ladder at the *barrier* granularity — a skipped release
+            # leaves the published score stale for one more round
+            st.key, kbar = jax.random.split(st.key)
+            link_state = (None if st.codec_state is None
+                          else st.codec_state.get("barrier"))
+            released, link_state = self.transport.barrier_release(
+                eps[order[0]], w_bar, key=kbar, codec_state=link_state)
+            if link_state is not None:
+                if st.codec_state is None:
+                    st.codec_state = {}
+                st.codec_state["barrier"] = link_state
+            if released is not None:
+                st.w = released
         self._push_stale_hist()
         return not any_pos and cfg.stop_on_negative_alpha
 
@@ -1391,11 +1460,22 @@ class Protocol:
                 "(churn/subsampling/partitions change the chain per round); "
                 "use backend='eager', or protocol='fedavg' whose lowering "
                 "takes a participation mask")
-        if not (isinstance(self.scheduler, SequentialScheduler)
-                and not self.scheduler.stale):
-            raise ValueError(
-                f"backend='compiled' supports sequential scheduling only, "
-                f"got {type(self.scheduler).__name__}")
+        sched_plan = None
+        if self.scheduler.stale:
+            # the stale-read barrier has its own lowering (one scan over
+            # barrier rounds) — selected by the AsyncStalePlan marker
+            sched_plan = compiled.AsyncStalePlan()
+        elif not isinstance(self.scheduler, SequentialScheduler):
+            plan_fn = getattr(self.scheduler, "plan", None)
+            if plan_fn is None:
+                raise ValueError(
+                    f"backend='compiled' supports sequential, budget-aware "
+                    f"and async-stale scheduling, "
+                    f"got {type(self.scheduler).__name__}")
+            # the scheduler's static twin (spend signal depends on which
+            # transport it will order against)
+            self.scheduler.bind_transport(self.transport)
+            sched_plan = plan_fn()
         if validation is not None:
             raise ValueError("backend='compiled' does not support the CV "
                              "validation stop; use the eager backend")
@@ -1421,7 +1501,19 @@ class Protocol:
             budget=getattr(self.transport, "budget", None),
             serve_codec=self.transport.serve_codec,
             controller=self.transport.controller,
-            serve_controller=self.transport.serve_controller)
+            serve_controller=self.transport.serve_controller,
+            scheduler=sched_plan)
+        if isinstance(sched_plan, compiled.AsyncStalePlan):
+            with self._span("session", backend="compiled",
+                            agents=len(endpoints)):
+                result = self._fence(compiled.async_session(
+                    plan, key, tuple(ep.X for ep in endpoints), classes))
+            fitted = compiled.fitted_from_async_result(
+                plan, result, [ep.learner for ep in endpoints])
+            with self._span("replay", backend="compiled"):
+                self._replay_traffic_async(endpoints, classes, result, plan)
+            self._compiled_ctx = (tuple(endpoints), plan, result)
+            return fitted
         with self._span("session", backend="compiled",
                         agents=len(endpoints)):
             # the fence closes the span at computation-done, not at
@@ -1432,7 +1524,10 @@ class Protocol:
             plan, result, [ep.learner for ep in endpoints])
         with self._span("replay", backend="compiled"):
             self._replay_traffic(endpoints, classes, result, plan)
-        self._compiled_ctx = (tuple(endpoints), plan, result)
+        # the serve path indexes per-agent state positionally: store the
+        # agent-major view (identity re-collection for sequential plans)
+        self._compiled_ctx = (tuple(endpoints), plan,
+                              compiled.agent_major_result(result))
         return fitted
 
     def _replay_traffic(self, endpoints: Sequence[AgentEndpoint],
@@ -1451,36 +1546,113 @@ class Protocol:
             self.transport.send(SampleIdsMsg(head, ep.name, n))
         valid = np.asarray(result.valid)
         alphas = np.asarray(result.alphas)
+        accs = np.asarray(result.accs)
+        executed = np.asarray(result.executed)
         sent = np.asarray(result.sent)
         codec_idx = np.asarray(result.codec_idx)
+        order = getattr(result, "order", None)
+        order = None if order is None else np.asarray(order)
         ladder = plan.ladder if plan is not None and plan.has_channel else None
         budget = plan.budget if plan is not None else None
         budgeted = budget is not None and hasattr(self.transport,
                                                   "link_spent")
+        # a permuting scheduler replays too: round_order reads the live
+        # ledger state at each round entry (telemetry + RNG side effects)
+        # and observe feeds the reward EMAs — so post-run scheduler state
+        # and registry counters match the eager session's exactly
+        permuted = plan is not None and plan.scheduler is not None
         num = len(endpoints)
         for t in range(valid.shape[0]):
+            if permuted and executed[t].any():
+                self.scheduler.round_order(t, list(range(num)))
             for j in range(num):
+                src = j if order is None else int(order[t, j])
+                dst_i = ((j + 1) % num if order is None
+                         else int(order[t, (j + 1) % num]))
+                if permuted and executed[t, j]:
+                    self.scheduler.observe(src, float(accs[t, j]))
                 if not valid[t, j]:
                     continue
-                dst = endpoints[(j + 1) % num]
-                link = (endpoints[j].name, dst.name)
+                dst = endpoints[dst_i]
+                link = (endpoints[src].name, dst.name)
                 if not sent[t, j]:
                     if budgeted:
                         self.transport.record_skip(link)
                     continue
-                codec = ladder[int(codec_idx[t, j])] if ladder else None
-                wire_bits = codec.wire_bits(n) if codec is not None else None
-                self.transport.send(IgnoranceMsg(
-                    endpoints[j].name, dst.name, result.w_trace[t, j],
-                    wire_bits=wire_bits))
-                self.transport.send(ModelWeightMsg(
-                    endpoints[j].name, dst.name, float(alphas[t, j])))
-                if self.transport.privacy is not None:
-                    self.transport.accountant.record(endpoints[j].name)
                 if budgeted:
+                    # spend-first, like the eager ladder walk: record_spend
+                    # arms the rung stamp the wire-priced send consumes
                     rung = int(codec_idx[t, j])
                     self.transport.record_spend(
                         link, budget.hop_costs(n)[rung], rung)
+                codec = ladder[int(codec_idx[t, j])] if ladder else None
+                wire_bits = codec.wire_bits(n) if codec is not None else None
+                self.transport.send(IgnoranceMsg(
+                    endpoints[src].name, dst.name, result.w_trace[t, j],
+                    wire_bits=wire_bits))
+                self.transport.send(ModelWeightMsg(
+                    endpoints[src].name, dst.name, float(alphas[t, j])))
+                if self.transport.privacy is not None:
+                    self.transport.accountant.record(endpoints[src].name)
+        if budgeted:
+            self.transport.exhausted = bool(result.exhausted)
+
+    def _replay_traffic_async(self, endpoints: Sequence[AgentEndpoint],
+                              classes: jnp.ndarray, result, plan) -> None:
+        """Book the ledger an eager async-stale run produces: channel-less,
+        the per-agent mid-merge IgnoranceMsg + ModelWeightMsg pairs; with a
+        wire channel, the raw per-agent alpha messages followed by the one
+        per-barrier release (or its budget skip) — spend-first, rung
+        stamped, DP release tallied, byte-identical to the eager barrier."""
+        self.transport.bind(endpoints)
+        n = int(classes.shape[0])
+        head = endpoints[0].name
+        for ep in endpoints[1:]:
+            self.transport.send(LabelsMsg(head, ep.name, n))
+            self.transport.send(SampleIdsMsg(head, ep.name, n))
+        executed = np.asarray(result.executed)
+        valid = np.asarray(result.valid)
+        alphas = np.asarray(result.alphas)
+        sent = np.asarray(result.sent)
+        rungs = np.asarray(result.codec_idx)
+        num = len(endpoints)
+        channel = plan.has_channel
+        budget = plan.budget
+        budgeted = budget is not None and hasattr(self.transport,
+                                                  "link_spent")
+        for t in range(valid.shape[0]):
+            if not executed[t].any():
+                break
+            if not channel:
+                for m in range(num):
+                    if not valid[t, m]:
+                        continue
+                    dst = endpoints[(m + 1) % num]
+                    self.transport.send(IgnoranceMsg(
+                        endpoints[m].name, dst.name, result.w_trace[t, m]))
+                    self.transport.send(ModelWeightMsg(
+                        endpoints[m].name, dst.name, float(alphas[t, m])))
+                continue
+            for m in range(num):
+                if valid[t, m]:
+                    self.transport.send(ModelWeightMsg(
+                        endpoints[m].name, "barrier", float(alphas[t, m])))
+            link = ("barrier", endpoints[0].name)
+            if not sent[t]:
+                if budgeted:
+                    self.transport.record_skip(link)
+                continue
+            rung = int(rungs[t])
+            codec = plan.ladder[rung] if rung >= 0 else None
+            if budgeted:
+                self.transport.record_spend(
+                    link, budget.payload_costs(n)[rung], rung)
+            wire_bits = codec.wire_bits(n) if codec is not None else None
+            self.transport.send(IgnoranceMsg(
+                "barrier", endpoints[0].name, result.w_bar[t],
+                wire_bits=wire_bits))
+            if self.transport.privacy is not None:
+                self.transport.accountant.record("barrier")
         if budgeted:
             self.transport.exhausted = bool(result.exhausted)
 
@@ -1536,12 +1708,19 @@ class Protocol:
 
     def _evolved_key(self, result):
         """The eager session's post-run ``state.key``, reconstructed from
-        the fit key: the eager loop splits once per fit slot it reaches,
-        and the compiled scan's key chain agrees with it on every executed
-        slot (post-stop splits are masked out), so ``executed.sum()``
-        splits land on the identical key."""
+        the fit key: the eager loop splits once per fit slot it reaches
+        (plus once per executed round for the channelized async barrier's
+        release subkey), and the compiled scan's key chain agrees with it
+        on every executed slot (post-stop splits are masked out), so the
+        same split count lands on the identical key."""
+        executed = np.asarray(result.executed)
+        splits = int(executed.sum())
+        from repro.core import compiled
+        if isinstance(result, compiled.AsyncSessionResult) \
+                and self.transport.has_channel:
+            splits += int(executed.any(axis=1).sum())
         k = self._fit_key
-        for _ in range(int(np.asarray(result.executed).sum())):
+        for _ in range(splits):
             k, _ = jax.random.split(k)
         return k
 
@@ -1584,13 +1763,15 @@ class Protocol:
             codec = ladder[int(rungs[j])] if int(rungs[j]) >= 0 else None
             wire_bits = (int(codec.wire_bits(shape))
                          if codec is not None else None)
+            if budgeted:
+                # spend-first, like the eager ladder walk: record_spend arms
+                # _pending_rung so the booking below stamps the rung
+                self.transport.record_spend(link, wire_bits, int(rungs[j]))
             self.transport.send(ScoreBlockMsg(
                 endpoints[j].name, head.name, serve.blocks[j],
                 wire_bits=wire_bits))
             if self.transport.privacy is not None:
                 self.transport.accountant.record(endpoints[j].name)
-            if budgeted:
-                self.transport.record_spend(link, wire_bits, int(rungs[j]))
         if budgeted:
             self.transport.exhausted = bool(self.transport.exhausted
                                             or bool(serve.exhausted))

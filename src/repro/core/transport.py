@@ -65,17 +65,25 @@ class TransportLog:
             raise ValueError(f"num_elements must be >= 0, got {num_elements}")
         self.send_bits(src, dst, kind, int(num_elements) * bits_per_element)
 
-    def send_bits(self, src: str, dst: str, kind: str, bits: int) -> None:
+    def send_bits(self, src: str, dst: str, kind: str, bits: int,
+                  rung: int | None = None) -> None:
         """Book an exact encoded size (codec wire formats — int8 values plus
-        fp32 tile scales, top-k pairs — aren't a clean elements x width)."""
+        fp32 tile scales, top-k pairs — aren't a clean elements x width).
+
+        ``rung`` records which codec-ladder rung priced this payload (budget
+        walks only); it rides the entry so a registry attached *after*
+        traffic can still backfill ``hops_by_rung_total`` — unbudgeted
+        entries carry no rung key and stay byte-identical to before."""
         if isinstance(bits, bool) or not isinstance(bits, (int, np.integer)):
             raise TypeError(f"bits must be an integer, got "
                             f"{type(bits).__name__} ({bits!r})")
         if bits < 0:
             raise ValueError(f"bits must be >= 0, got {bits}")
         bits = int(bits)
-        self.entries.append({"src": src, "dst": dst, "kind": kind,
-                             "bits": bits})
+        entry = {"src": src, "dst": dst, "kind": kind, "bits": bits}
+        if rung is not None:
+            entry["rung"] = int(rung)
+        self.entries.append(entry)
         self._accumulate(src, dst, kind, bits)
         if self.registry is not None:
             self.registry.inc("wire_bits_total", bits,

@@ -166,7 +166,8 @@ def main():
     ap.add_argument("--backend", default="eager",
                     choices=["eager", "compiled"],
                     help="compiled lowers the whole run into one lax.scan "
-                         "program (sequential variants, functional learners)")
+                         "program (ascii/simple/async variants, functional "
+                         "learners; budget-aware scheduling lowers too)")
     ap.add_argument("--codec", default="",
                     choices=["", "fp32", "fp16", "int8", "int4", "topk"],
                     help="wire codec for outgoing ignorance scores "
@@ -221,8 +222,9 @@ def main():
                     help="round-order override (repro.control.scheduler): "
                          "budget-aware reorders agents each round by "
                          "remaining link budget so degradation rotates "
-                         "instead of starving a fixed tail (eager backend, "
-                         "sequential variants)")
+                         "instead of starving a fixed tail (sequential "
+                         "variants; both backends — compiled lowers the "
+                         "permutation into the scan)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="",
                     help="checkpoint SessionState here after the run "
@@ -233,9 +235,12 @@ def main():
     ap.add_argument("--resume", action="store_true",
                     help="resume from --ckpt-dir instead of starting fresh")
     ap.add_argument("--trace", default="",
-                    help="write a JSONL telemetry trace (spans + final "
-                         "metric values, repro.telemetry schema) here "
-                         "after the run")
+                    help="stream a JSONL telemetry trace (repro.telemetry "
+                         "schema) here: spans append as they close, final "
+                         "metric values seal the file after the run — a "
+                         "killed session leaves a truncated prefix "
+                         "`python -m repro.telemetry.check --allow-partial` "
+                         "accepts")
     ap.add_argument("--metrics-out", default="",
                     help="write the final metrics registry here after the "
                          "run (.prom = Prometheus text exposition, "
@@ -262,16 +267,15 @@ def main():
         if args.learner == "tree":
             ap.error("--backend compiled needs a functional learner "
                      "(--learner logistic|mlp); tree is eager-only")
-        if args.variant not in ("ascii", "simple"):
-            ap.error("--backend compiled supports sequential scheduling "
-                     "only (--variant ascii|simple)")
-    if args.variant == "async" and (args.codec or args.byte_budget
-                                    or args.dp_epsilon > 0
-                                    or args.controller):
-        ap.error("--variant async has no per-hop wire semantics (its "
-                 "barrier merge is host-side); --codec/--byte-budget/"
-                 "--dp-epsilon/--controller need a sequential or random "
-                 "variant")
+        if args.variant not in ("ascii", "simple", "async"):
+            ap.error("--backend compiled supports sequential, budget-aware "
+                     "and async-stale scheduling (--variant ascii|simple|"
+                     "async)")
+    if args.variant == "async" and args.controller:
+        ap.error("adaptive controllers are per-hop rung policies with no "
+                 "async analogue; --variant async releases its barrier "
+                 "merge once per round (--codec/--byte-budget/--dp-epsilon "
+                 "apply per barrier and are supported)")
     if args.byte_budget > 0:
         if args.codec:
             ap.error("--byte-budget drives codec choice through its "
@@ -291,13 +295,10 @@ def main():
     if args.accountant != "basic" and args.dp_epsilon <= 0:
         ap.error(f"--accountant {args.accountant} accounts --dp-epsilon "
                  f"releases; set --dp-epsilon too")
-    if args.scheduler == "budget-aware":
-        if args.backend == "compiled":
-            ap.error("--scheduler budget-aware reorders rounds from live "
-                     "transport state; that needs the eager backend")
-        if args.variant not in ("ascii", "simple"):
-            ap.error("--scheduler budget-aware replaces the round order; "
-                     "use a sequential variant (ascii|simple)")
+    if args.scheduler == "budget-aware" \
+            and args.variant not in ("ascii", "simple"):
+        ap.error("--scheduler budget-aware replaces the round order; "
+                 "use a sequential variant (ascii|simple)")
     if args.protocol != "ascii":
         if args.variant in ("simple", "async"):
             ap.error(f"--variant {args.variant} is an ASCII scheduling "
@@ -319,6 +320,11 @@ def main():
         ap.error("--scenario presets fix the scenario knobs; drop the "
                  "individual --subsample/--dropout/--straggle/--partition/"
                  "--clock-skew flags (or drop --scenario)")
+    if args.clock_skew and args.variant != "async":
+        # hoisted from Scenario.validate so the explicit flag path errors
+        # at argparse time with a message that names the flags
+        ap.error("--clock-skew lags agents behind the stale-read barrier; "
+                 "it needs --variant async")
     if args.scenario:
         scenario = PRESETS[args.scenario]
     else:
@@ -379,6 +385,10 @@ def main():
     telemetry = (Telemetry(profile=bool(args.profile_dir))
                  if (args.trace or args.metrics_out or args.profile_dir)
                  else None)
+    if telemetry is not None and args.trace:
+        # crash-durable: spans stream to the trace file as they close;
+        # _finish_telemetry seals it with the final metric events
+        telemetry.stream_trace(args.trace)
     engine = Protocol(SessionConfig(num_classes=ds.num_classes,
                                     max_rounds=args.rounds,
                                     upstream=upstream),

@@ -392,13 +392,16 @@ class FedAvgVariant(ProtocolVariant):
                     codec = plan.codec
                 wire_bits = (int(codec.wire_bits((d,)))
                              if codec is not None else None)
+                if budgeted:
+                    # spend-first, like the eager ladder walk: record_spend
+                    # arms _pending_rung so the booking below stamps the
+                    # chosen rung onto the ledger entry
+                    rung = int(rungs[t, j])
+                    transport.record_spend(link, costs[rung], rung)
                 transport.send(GradientMsg(endpoints[j].name, head.name,
                                            flat, wire_bits=wire_bits))
                 if transport.privacy is not None:
                     transport.accountant.record(endpoints[j].name)
-                if budgeted:
-                    rung = int(rungs[t, j])
-                    transport.record_spend(link, costs[rung], rung)
             for j in range(1, len(endpoints)):
                 if mask[t, j]:
                     transport.send(GradientMsg(head.name, endpoints[j].name,

@@ -27,8 +27,8 @@ already agree (which the backend-parity tests pin).
 """
 from __future__ import annotations
 
-from repro.telemetry.export import (snapshot, write_metrics,  # noqa: F401
-                                    write_trace)
+from repro.telemetry.export import (StreamingTraceWriter,  # noqa: F401
+                                    snapshot, write_metrics, write_trace)
 from repro.telemetry.registry import MetricsRegistry
 from repro.telemetry.spans import Span, SpanTracer  # noqa: F401
 
@@ -47,6 +47,18 @@ class Telemetry:
         self.registry = MetricsRegistry()
         self.tracer = SpanTracer(self.registry, profile=profile,
                                  fence=fence)
+        self._stream: StreamingTraceWriter | None = None
+
+    def stream_trace(self, path: str) -> StreamingTraceWriter:
+        """Open a crash-durable JSONL trace at ``path``: the meta line
+        lands now, every span appends as it closes, and
+        :meth:`write_artifacts` (or :meth:`StreamingTraceWriter.close`)
+        seals it with the metric events.  A run killed in between leaves
+        a truncated-but-well-formed prefix ``repro.telemetry.check
+        --allow-partial`` accepts — instead of no trace at all."""
+        self._stream = StreamingTraceWriter(path, registry=self.registry,
+                                            tracer=self.tracer)
+        return self._stream
 
     def span(self, name: str, step: int | None = None, **attrs):
         return self.tracer.span(name, step, **attrs)
@@ -60,9 +72,10 @@ class Telemetry:
 
         Idempotent (re-attaching the same transport is a no-op) and
         backfilling: entries and DP releases booked *before* attach are
-        folded in once, so attach order doesn't skew totals.  Attach before
-        traffic flows when per-rung hop counts matter — ``hops_by_rung``
-        has no backfill source (shipped entries don't record their rung).
+        folded in once, so attach order doesn't skew totals.  Budgeted
+        entries carry the codec rung that priced them, so ``hops_by_rung``
+        backfills too — a registry attached after traffic agrees with one
+        attached before.
         """
         log = getattr(transport, "log", None)
         if log is None and hasattr(transport, "send_bits"):
@@ -74,6 +87,9 @@ class Telemetry:
                                   kind=e["kind"], src=e["src"],
                                   dst=e["dst"])
                 self.registry.inc("messages_total", 1, kind=e["kind"])
+                if "rung" in e:
+                    self.registry.inc("hops_by_rung_total", 1,
+                                      rung=e["rung"])
             for link in getattr(transport, "skipped", ()):
                 self.registry.inc("budget_skips_total", 1,
                                   src=link[0], dst=link[1])
@@ -105,6 +121,12 @@ class Telemetry:
         if transport is not None:
             self.sync_gauges(transport)
         if trace:
-            write_trace(trace, registry=self.registry, tracer=self.tracer)
+            if self._stream is not None and self._stream.path == trace:
+                # the run streamed here all along: seal with the metric
+                # events rather than rewriting from scratch
+                self._stream.close()
+            else:
+                write_trace(trace, registry=self.registry,
+                            tracer=self.tracer)
         if metrics_out:
             write_metrics(metrics_out, self.registry, self.tracer)

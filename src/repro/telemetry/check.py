@@ -1,7 +1,9 @@
 """Schema validation for telemetry artifacts — the reusable ``--check``.
 
-``python -m repro.telemetry.check FILE [FILE ...]`` validates each file by
-suffix and exits nonzero on the first violation:
+``python -m repro.telemetry.check [--allow-partial] FILE [FILE ...]``
+validates each file by suffix and exits nonzero on the first violation
+(``--allow-partial`` accepts the truncated prefix a killed streaming
+trace writer leaves — ``.jsonl`` only):
 
   * ``.jsonl`` — JSONL event trace: leading meta line with the right
     schema/version, every event one of meta/span/counter/gauge/histogram
@@ -33,12 +35,20 @@ _PROM_LINE = re.compile(
     r'^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{.*\})?\s+(-?[0-9.eE+infa]+)$')
 
 
-def validate_events(events: list[dict]) -> list[str]:
+def validate_events(events: list[dict],
+                    allow_partial: bool = False) -> list[str]:
     """Validate a JSONL trace's event list; return human-readable errors
-    (empty list == valid)."""
+    (empty list == valid).
+
+    ``allow_partial`` accepts the truncated-but-well-formed *prefix* a
+    killed :class:`~repro.telemetry.export.StreamingTraceWriter` leaves
+    behind: spans stream to disk in close order, so a prefix may reference
+    a parent span that had not closed (and hence landed) yet, and a stream
+    killed before any event flushed may be empty.  Every event that *is*
+    present is still held to the full schema."""
     errors: list[str] = []
     if not events:
-        return ["empty trace: no events"]
+        return [] if allow_partial else ["empty trace: no events"]
     head = events[0]
     if head.get("type") != "meta":
         errors.append("first event must be type=meta")
@@ -67,9 +77,11 @@ def validate_events(events: list[dict]) -> list[str]:
                 errors.append(f"event {i}: labels must be an object")
         else:
             errors.append(f"event {i}: unknown type {kind!r}")
-    for e in spans.values():
-        if e["parent"] is not None and e["parent"] not in spans:
-            errors.append(f"span {e['id']}: dangling parent {e['parent']}")
+    if not allow_partial:
+        for e in spans.values():
+            if e["parent"] is not None and e["parent"] not in spans:
+                errors.append(f"span {e['id']}: dangling parent "
+                              f"{e['parent']}")
     return errors
 
 
@@ -125,9 +137,11 @@ def validate_prometheus(text: str) -> list[str]:
     return errors
 
 
-def validate_file(path: str) -> list[str]:
+def validate_file(path: str, allow_partial: bool = False) -> list[str]:
     if path.endswith(".jsonl"):
-        return validate_events(load_events(path))
+        return validate_events(load_events(path,
+                                           allow_partial=allow_partial),
+                               allow_partial=allow_partial)
     if path.endswith(".prom"):
         with open(path) as f:
             return validate_prometheus(f.read())
@@ -137,13 +151,15 @@ def validate_file(path: str) -> list[str]:
 
 def main(argv: list[str] | None = None) -> int:
     paths = sys.argv[1:] if argv is None else argv
+    allow_partial = "--allow-partial" in paths
+    paths = [p for p in paths if p != "--allow-partial"]
     if not paths:
-        print("usage: python -m repro.telemetry.check FILE [FILE ...]",
-              file=sys.stderr)
+        print("usage: python -m repro.telemetry.check [--allow-partial] "
+              "FILE [FILE ...]", file=sys.stderr)
         return 2
     bad = 0
     for path in paths:
-        errors = validate_file(path)
+        errors = validate_file(path, allow_partial=allow_partial)
         if errors:
             bad += 1
             for err in errors:

@@ -50,13 +50,79 @@ def write_trace(path: str, *, registry: MetricsRegistry | None = None,
     return len(events)
 
 
-def load_events(path: str) -> list[dict]:
+class StreamingTraceWriter:
+    """Incremental JSONL trace export: the meta line lands on disk at open,
+    every span is appended (and flushed) the moment it closes, and the
+    registry's metric events are appended at :meth:`close`.
+
+    This is the crash-durable twin of :func:`write_trace`: a session that
+    dies mid-run leaves a truncated-but-well-formed *prefix* on disk —
+    every span that finished survives — which ``repro.telemetry.check
+    --allow-partial`` accepts (a prefix may reference a parent span that
+    had not closed yet, and its final line may be torn mid-write).  A run
+    that reaches :meth:`close` produces a trace
+    :func:`~repro.telemetry.check.validate_events` accepts un-relaxed;
+    spans appear in *close* order rather than :func:`write_trace`'s open
+    order, which no consumer distinguishes (:func:`load_registry` reads
+    only metric events, the validator is order-blind past the meta line).
+    """
+
+    def __init__(self, path: str, *, registry: MetricsRegistry | None = None,
+                 tracer=None) -> None:
+        self.path = path
+        self.registry = registry
+        self.tracer = tracer
+        self.events_written = 0
+        self._f = open(path, "w")
+        self._emit(meta_event())
+        if tracer is not None:
+            tracer.on_close = self._on_span
+
+    def _emit(self, event: dict) -> None:
+        self._f.write(json.dumps(event, sort_keys=True) + "\n")
+        self._f.flush()
+        self.events_written += 1
+
+    def _on_span(self, span) -> None:
+        if not self._f.closed:
+            self._emit(span.to_event())
+
+    def close(self) -> int:
+        """Append the metric events and seal the file; returns the total
+        event count.  Idempotent (a second close is a no-op)."""
+        if self._f.closed:
+            return self.events_written
+        if self.registry is not None:
+            for e in self.registry.to_events():
+                self._emit(e)
+        self._f.close()
+        if self.tracer is not None and self.tracer.on_close == self._on_span:
+            self.tracer.on_close = None
+        return self.events_written
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def load_events(path: str, *, allow_partial: bool = False) -> list[dict]:
+    """Parse a JSONL trace.  ``allow_partial`` tolerates a torn final line
+    (a streaming writer killed mid-``write``): the un-parseable tail line
+    is dropped instead of raising; a torn line anywhere *else* still
+    raises — truncation only ever eats the end of a stream."""
     events = []
     with open(path) as f:
-        for line in f:
-            line = line.strip()
-            if line:
-                events.append(json.loads(line))
+        lines = [ln.strip() for ln in f]
+    lines = [ln for ln in lines if ln]
+    for i, line in enumerate(lines):
+        try:
+            events.append(json.loads(line))
+        except json.JSONDecodeError:
+            if allow_partial and i == len(lines) - 1:
+                break
+            raise
     return events
 
 

@@ -66,6 +66,10 @@ class SpanTracer:
         self.spans: list[Span] = []
         self._stack: list[Span] = []
         self._next_id = 0
+        # close hook: called with each span as it closes (streaming trace
+        # export appends it to disk there, so a killed run keeps every
+        # span that finished).  Observation only — never touches the span.
+        self.on_close = None
 
     @property
     def current(self) -> Span | None:
@@ -98,6 +102,8 @@ class SpanTracer:
             if self.registry is not None:
                 self.registry.observe("span_seconds", sp.duration_s,
                                       name=name)
+            if self.on_close is not None:
+                self.on_close(sp)
 
     def fence(self, value):
         """Wall-clock fence at a dispatch boundary: block until ``value``'s

@@ -266,15 +266,73 @@ def test_budget_and_privacy_survive_resume(blob, tmp_path):
     assert t_res.accountant.releases == t_full.accountant.releases
 
 
-def test_stale_scheduler_rejects_channel(blob):
+def test_stale_scheduler_rejects_controller(blob):
+    """Per-barrier release narrowed the async rejection (PR 9): codec/DP/
+    budget channels are legal on the stale path now — only adaptive
+    controllers (a per-hop rung policy with no barrier analogue) stay
+    rejected."""
+    from repro.control import AdaptiveController
     Xtr, ctr, _, _, k = blob
     eng = Protocol(SessionConfig(num_classes=k, max_rounds=2),
                    scheduler=AsyncStaleScheduler(),
-                   transport=MeteredTransport(codec=make_codec("int8")))
+                   transport=MeteredTransport(controller=AdaptiveController()))
     with pytest.raises(ValueError, match="stale"):
         eng.start(jax.random.key(0),
                   endpoints_for([DecisionTree(depth=2) for _ in Xtr], Xtr),
                   ctr)
+    # the previously-rejected codec channel now runs: one encoded barrier
+    # release per executed round, booked from the synthetic "barrier" sender
+    t = MeteredTransport(codec=make_codec("int8"))
+    eng = Protocol(SessionConfig(num_classes=k, max_rounds=2),
+                   scheduler=AsyncStaleScheduler(), transport=t)
+    sess = eng.start(jax.random.key(0),
+                     endpoints_for([DecisionTree(depth=2) for _ in Xtr],
+                                   Xtr), ctr)
+    sess.run()
+    assert any(e["src"] == "barrier" and e["kind"] == "ignorance"
+               for e in t.log.entries)
+
+
+ASYNC_CHANNELS = {
+    "plain": lambda: MeteredTransport(),
+    "codec": lambda: MeteredTransport(codec=make_codec("int8")),
+    "dp": lambda: MeteredTransport(
+        privacy=GaussianMechanism(epsilon=2.0, clip=0.1)),
+    "budget": lambda: BudgetedTransport(
+        BudgetSpec(session_bits=40_000,
+                   ladder=(QuantCodec(bits=8), QuantCodec(bits=4)))),
+    # tight cap: the barrier walk runs out mid-session, skipping releases
+    # (published score stays stale) and flipping exhausted
+    "budget-tight": lambda: BudgetedTransport(
+        BudgetSpec(session_bits=12_000,
+                   ladder=(QuantCodec(bits=8), QuantCodec(bits=4)))),
+}
+
+
+@pytest.mark.parametrize("name", sorted(ASYNC_CHANNELS))
+def test_async_compiled_matches_eager(blob, name):
+    """PR 9 acceptance pin: channelized async fleets run on both backends
+    with one ledger — per-barrier DP/codec/budget releases bit-identical to
+    eager, including the skip path and the serve round-trip."""
+    Xtr, ctr, Xte, _, k = blob
+    te_, tc = ASYNC_CHANNELS[name](), ASYNC_CHANNELS[name]()
+    cfg = SessionConfig(num_classes=k, max_rounds=4)
+    learners = [LogisticRegression(steps=40) for _ in Xtr]
+    pe = Protocol(cfg, scheduler=AsyncStaleScheduler(), transport=te_)
+    pc = Protocol(cfg, scheduler=AsyncStaleScheduler(), transport=tc,
+                  backend="compiled")
+    fe = pe.fit(jax.random.key(11), endpoints_for(learners, Xtr), ctr)
+    fc = pc.fit(jax.random.key(11), endpoints_for(learners, Xtr), ctr)
+    _assert_identical(fe, fc, Xte)
+    assert te_.log.entries == tc.log.entries
+    if hasattr(te_, "link_spent"):
+        assert te_.link_spent == tc.link_spent
+        assert te_.skipped == tc.skipped
+        assert te_.exhausted == tc.exhausted
+    if te_.accountant is not None:
+        assert te_.accountant.releases == tc.accountant.releases
+    np.testing.assert_array_equal(np.asarray(pe.predict_distributed(Xte)),
+                                  np.asarray(pc.predict_distributed(Xte)))
 
 
 def test_quant_sweep_matches_per_config_runs(blob):

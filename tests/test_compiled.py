@@ -215,3 +215,74 @@ def test_unknown_backend_rejected(blob):
     _, _, _, _, k = blob
     with pytest.raises(ValueError, match="backend"):
         Protocol(SessionConfig(num_classes=k), backend="turbo")
+
+
+# ============================================================= control sweeps
+def test_control_sweep_controller_matches_static(blob):
+    """PR 9: controller thresholds/beta become traced operands — one vmapped
+    program sweeps N (cuts, beta) configs, each row bit-equal to a static
+    per-config compile, and the whole sweep traces exactly once."""
+    from repro.comm.codecs import Fp16Codec, QuantCodec
+    from repro.control import AdaptiveController
+    from repro.core import compiled
+    Xtr, ctr, _, _, k = blob
+    learners = [LogisticRegression(steps=30) for _ in Xtr]
+    ladder = (Fp16Codec(), QuantCodec(bits=4))
+    configs = [((0.5,), 0.0), ((0.1,), 0.0), ((0.9,), 0.5), ((0.3,), 0.9)]
+    mk = lambda cut, beta: plan_for(
+        learners, k, max_rounds=2,
+        controller=AdaptiveController(ladder=ladder, thresholds=cut,
+                                      beta=beta))
+    plan = mk(*configs[0])
+    key = jax.random.key(0)
+    compiled.TRACE_COUNTS.clear()
+    sweep = compiled.control_sweep_run(
+        plan, jnp.stack([key] * len(configs)), Xtr, ctr,
+        cuts=[c for c, _ in configs], betas=[b for _, b in configs])
+    assert compiled.TRACE_COUNTS == {"control_sweep": 1}
+    for row, (cut, beta) in enumerate(configs):
+        single = compiled_session(mk(cut, beta), key, Xtr, ctr)
+        np.testing.assert_array_equal(np.asarray(sweep.alphas[row]),
+                                      np.asarray(single.alphas))
+        np.testing.assert_array_equal(np.asarray(sweep.w[row]),
+                                      np.asarray(single.w))
+        np.testing.assert_array_equal(np.asarray(sweep.codec_idx[row]),
+                                      np.asarray(single.codec_idx))
+
+
+def test_control_sweep_budget_caps_match_static(blob):
+    """Budget caps sweep as traced operands too — including a ``None``
+    (uncapped) entry, lowered as the int32 sentinel — each row bit-equal to
+    the statically-capped compile, one trace for the lot."""
+    from repro.comm import BudgetSpec
+    from repro.comm.codecs import QuantCodec
+    from repro.core import compiled
+    Xtr, ctr, _, _, k = blob
+    learners = [LogisticRegression(steps=30) for _ in Xtr]
+    ladder = (QuantCodec(bits=8), QuantCodec(bits=4))
+    caps = [40_000, 20_000, 12_000, None]
+    mk = lambda cap: plan_for(learners, k, max_rounds=3,
+                              budget=BudgetSpec(session_bits=cap,
+                                                ladder=ladder))
+    plan = mk(caps[0])
+    key = jax.random.key(0)
+    compiled.TRACE_COUNTS.clear()
+    sweep = compiled.control_sweep_run(plan, jnp.stack([key] * len(caps)),
+                                       Xtr, ctr, session_bits=caps)
+    assert compiled.TRACE_COUNTS == {"control_sweep": 1}
+    for row, cap in enumerate(caps):
+        single = compiled_session(mk(cap), key, Xtr, ctr)
+        for field in ("alphas", "w", "sent", "codec_idx", "exhausted"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(sweep, field)[row]),
+                np.asarray(getattr(single, field)))
+
+
+def test_control_sweep_needs_a_control_plane(blob):
+    Xtr, ctr, _, _, k = blob
+    from repro.core import compiled
+    plan = plan_for([LogisticRegression(steps=10) for _ in Xtr], k,
+                    max_rounds=2)
+    with pytest.raises(ValueError, match="neither"):
+        compiled.control_sweep_run(plan, jnp.stack([jax.random.key(0)]),
+                                   Xtr, ctr)

@@ -525,10 +525,56 @@ def test_scheduler_resume_on_plain_metered_transport(blob, tmp_path):
                                   np.asarray(full.state.w))
 
 
-def test_scheduler_rejected_by_compiled_backend(blob):
-    with pytest.raises(ValueError, match="sequential"):
-        _fit(blob, MeteredTransport(), "compiled",
-             scheduler=BudgetAwareScheduler())
+def test_scheduler_compiled_matches_eager_metered(blob):
+    """PR 9: the budget-aware permutation lowers into the scan for
+    homogeneous fleets — the compiled backend runs it bit-identically
+    instead of rejecting (wire-bit spend signal, EMA tie-break).  The
+    remaining RandomScheduler rejection pin lives in test_compiled."""
+    Xtr, ctr, Xte, _, k = blob
+    te_, tc = MeteredTransport(), MeteredTransport()
+    eager = _fit(blob, te_, "eager", rounds=4,
+                 scheduler=BudgetAwareScheduler())
+    comp = _fit(blob, tc, "compiled", rounds=4,
+                scheduler=BudgetAwareScheduler())
+    _assert_identical(eager, comp, Xte)
+    assert te_.log.entries == tc.log.entries
+
+
+def test_scheduler_compiled_matches_eager_budgeted(blob):
+    """The full acceptance pin: budget-aware + budgeted transport compiled
+    == eager — components, params, history, predictions, ledger entries
+    (rung stamps included), link spend, skips, exhaustion, and the serve
+    round-trip; and budget pressure genuinely permutes the round order."""
+    Xtr, ctr, Xte, cte, k = blob
+    spec = lambda: BudgetSpec(session_bits=40_000, link_bits=9_000,
+                              ladder=(QuantCodec(bits=8),
+                                      QuantCodec(bits=4)))
+    te_, tc = BudgetedTransport(spec()), BudgetedTransport(spec())
+    cfg = SessionConfig(num_classes=k, max_rounds=4)
+    mk = lambda: [LogisticRegression(steps=40) for _ in Xtr]
+    pe = Protocol(cfg, scheduler=BudgetAwareScheduler(), transport=te_)
+    pc = Protocol(cfg, scheduler=BudgetAwareScheduler(), transport=tc,
+                  backend="compiled")
+    fe = pe.fit(jax.random.key(11), endpoints_for(mk(), Xtr), ctr)
+    fc = pc.fit(jax.random.key(11), endpoints_for(mk(), Xtr), ctr)
+    _assert_identical(fe, fc, Xte)
+    for ce, cc in zip(fe.components, fc.components):
+        for le, lc in zip(jax.tree.leaves(ce.params),
+                          jax.tree.leaves(cc.params)):
+            np.testing.assert_array_equal(np.asarray(le), np.asarray(lc))
+    assert te_.log.entries == tc.log.entries
+    assert te_.link_spent == tc.link_spent
+    assert te_.skipped == tc.skipped
+    assert te_.exhausted == tc.exhausted
+    # the chosen rung rides the ledger entries on both backends
+    assert any("rung" in e for e in te_.log.entries)
+    # budget pressure reordered at least one round away from id order
+    per_round: dict[int, list[int]] = {}
+    for c in fe.components:
+        per_round.setdefault(c.round, []).append(c.agent)
+    assert any(agents != sorted(agents) for agents in per_round.values())
+    np.testing.assert_array_equal(np.asarray(pe.predict_distributed(Xte)),
+                                  np.asarray(pc.predict_distributed(Xte)))
 
 
 def test_scheduler_validation():

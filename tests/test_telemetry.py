@@ -235,6 +235,61 @@ def test_check_cli_exit_codes(tmp_path):
     assert tcheck.main([]) == 2
 
 
+# ---------------------------------------------------- streaming trace export
+def test_streaming_trace_spans_land_before_seal(tmp_path):
+    """Crash durability: every closed span is on disk *before* the writer
+    seals, and the sealed file is a fully valid trace whose metric events
+    rebuild the registry."""
+    tele = Telemetry()
+    path = tmp_path / "stream.jsonl"
+    tele.stream_trace(str(path))
+    with tele.span("session"):
+        with tele.span("round", step=0):
+            pass
+    tele.registry.inc("x_total", 3)
+    pre = texport.load_events(str(path))
+    # close order: round sealed first, then session — both already durable
+    assert [e["type"] for e in pre] == ["meta", "span", "span"]
+    assert [e["name"] for e in pre[1:]] == ["round", "session"]
+    tele.write_artifacts(trace=str(path))       # seals the live stream
+    assert tcheck.validate_file(str(path)) == []
+    r2 = texport.load_registry(str(path))
+    assert r2.to_events() == tele.registry.to_events()
+
+
+def test_streaming_trace_killed_prefix(tmp_path):
+    """A stream killed mid-run — open parent span never landed, final line
+    torn mid-write — is rejected by the strict validator but accepted via
+    --allow-partial, keeping every span that finished."""
+    tele = Telemetry()
+    path = tmp_path / "killed.jsonl"
+    tele.stream_trace(str(path))
+    with tele.span("session"):
+        with tele.span("round", step=0):
+            pass
+    # simulate SIGKILL: the still-open session span's close line and the
+    # metric events never land; the last write is torn mid-line
+    lines = path.read_text().splitlines()
+    path.write_text("\n".join(lines[:-1]) + '\n{"type": "span", "id"')
+    with pytest.raises(json.JSONDecodeError):
+        tcheck.validate_file(str(path))
+    assert tcheck.validate_file(str(path), allow_partial=True) == []
+    assert tcheck.main(["--allow-partial", str(path)]) == 0
+    # the surviving events alone still fail strict validation: the round
+    # span's parent never closed, so its id is dangling in the prefix
+    events = texport.load_events(str(path), allow_partial=True)
+    assert any("dangling" in e for e in tcheck.validate_events(events))
+
+
+def test_streaming_trace_empty_prefix(tmp_path):
+    """Killed before the meta line flushed: an empty file is a valid
+    partial trace and an invalid complete one."""
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    assert tcheck.validate_file(str(empty), allow_partial=True) == []
+    assert tcheck.validate_file(str(empty)) == ["empty trace: no events"]
+
+
 def test_prometheus_text_shape():
     r = MetricsRegistry()
     r.inc("wire_bits_total", 64, src="a0", dst='a"1')
