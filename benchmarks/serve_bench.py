@@ -36,6 +36,7 @@ from repro.core.engine import (MeteredTransport, Protocol, SessionConfig,
                                endpoints_for)
 from repro.learners.logistic import LogisticRegression
 from repro.serve import ServeEngine
+from repro.telemetry.registry import MetricsRegistry
 
 
 def _fit_sessions(sessions, Xs, classes, *, num_classes, rounds, steps,
@@ -53,10 +54,12 @@ def _fit_sessions(sessions, Xs, classes, *, num_classes, rounds, steps,
     return protos
 
 
-def _pcts(lat_s):
-    lat_ms = np.asarray(sorted(lat_s)) * 1e3
-    return (float(np.percentile(lat_ms, 50)),
-            float(np.percentile(lat_ms, 99)))
+def _pcts(reg):
+    """p50/p99 request latency (ms) off the ``request_seconds`` bucketed
+    histogram — the same estimator the live dashboard and the SLO layer
+    read, exercised here instead of a hand-rolled percentile."""
+    return (reg.quantile_all("request_seconds", 0.5) * 1e3,
+            reg.quantile_all("request_seconds", 0.99) * 1e3)
 
 
 def run(*, sessions: int = 8, requests: int = 64, agents: int = 3,
@@ -89,43 +92,37 @@ def run(*, sessions: int = 8, requests: int = 64, agents: int = 3,
                                       serve_key(evolved[sid], rid), Xblk)
 
     serve_one(0, *reqs[0]).preds.block_until_ready()      # warm compile
+    seq_reg = MetricsRegistry()
     t0 = time.perf_counter()
-    seq_lat = []
     for rid, (sid, Xblk) in enumerate(reqs):
         t1 = time.perf_counter()
         serve_one(rid, sid, Xblk).preds.block_until_ready()
-        seq_lat.append(time.perf_counter() - t1)
+        seq_reg.observe("request_seconds", time.perf_counter() - t1,
+                        tenant="seq")
     seq_s = time.perf_counter() - t0
-    p50_seq, p99_seq = _pcts(seq_lat)
+    p50_seq, p99_seq = _pcts(seq_reg)
 
-    # --- batched: the full serve engine, one flush per max_batch submits
+    # --- batched: the full serve engine, one flush per max_batch submits;
+    # latency comes from the engine's own submit -> settle histogram
     def run_engine(record):
         engine = ServeEngine(cache_capacity=sessions, max_batch=max_batch)
         for sid, proto in protos.items():
             engine.add_session(sid, proto)
-        submit_t, done_t = {}, {}
         t0 = time.perf_counter()
         for rid, (sid, Xblk) in enumerate(reqs):
-            submit_t[rid] = time.perf_counter()
             engine.submit(f"t{rid % 2}", sid, Xblk, request=rid)
             if (rid + 1) % max_batch == 0:
-                now_done = engine.flush()
-                t_end = time.perf_counter()
-                done_t.update({r: t_end for r in now_done})
+                engine.flush()
         engine.flush()
-        t_end = time.perf_counter()
-        for rid in range(len(reqs)):
-            done_t.setdefault(rid, t_end)
-        total = t_end - t0
-        lat = [done_t[r] - submit_t[r] for r in submit_t]
+        total = time.perf_counter() - t0
         if record:
-            return engine, total, lat
+            return engine, total
         engine.close()
         return None
 
     run_engine(record=False)                              # warm compile
-    engine, bat_s, bat_lat = run_engine(record=True)
-    p50_bat, p99_bat = _pcts(bat_lat)
+    engine, bat_s = run_engine(record=True)
+    p50_bat, p99_bat = _pcts(engine.registry)
 
     verified = None
     if verify:

@@ -279,7 +279,8 @@ def rung_select(rung, values, default):
 
 
 def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
-                    qmax_arg: bool = False, control_arg: bool = False):
+                    qmax_arg: bool = False, control_arg: bool = False,
+                    live: bool = False):
     """Lower ``plan`` for per-agent feature shapes into a pure callable
 
         session_fn(key, Xs, classes) -> SessionResult
@@ -304,6 +305,14 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
     trailing arguments ``(cuts, beta, session_cap, link_cap)`` so
     controller/budget hyperparameter sweeps vmap into one program too
     (:func:`control_sweep_run`; ``_INT32_MAX`` caps mean "uncapped").
+
+    ``live`` adds one :func:`repro.telemetry.live.emit_round` tap per scan
+    step — round index, per-round priced bits (the same formulas the
+    post-run replay books), sent/skipped hop counts, an exhaustion edge —
+    with an ``active`` flag the host sink uses to drop post-stop rounds
+    (`lax.cond` gating would break under vmap).  The tap has no data flow
+    back into the program, so live programs stay bit-identical to dark
+    ones; dark programs are byte-unchanged (the flag is a cache key).
     """
     if len(feature_shapes) != plan.num_agents:
         raise ValueError(f"{plan.num_agents} cores but "
@@ -382,11 +391,35 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
             from repro.core.engine import LabelsMsg, SampleIdsMsg
             setup_bits = (num - 1) * (LabelsMsg("", "", n).bits
                                       + SampleIdsMsg("", "", n).bits)
+        if live:
+            from repro.core.engine import LabelsMsg, SampleIdsMsg
+            from repro.telemetry.live import emit_round, key_salt
+            live_setup = (num - 1) * (LabelsMsg("", "", n).bits
+                                      + SampleIdsMsg("", "", n).bits)
+            # per-hop priced bits by final rung (-1 = unsent -> 0): the
+            # replay's IgnoranceMsg wire/raw bits plus the 32-bit alpha
+            # message — identical formulas, so the live counters land
+            # exactly on the replay-booked ledger
+            if budget is not None:
+                live_hop_costs = tuple(int(c) for c in budget.hop_costs(n))
+            elif has_channel:
+                live_hop_costs = tuple(
+                    (int(c.wire_bits(n)) if c is not None else n * 32) + 32
+                    for c in ladder)
+            else:
+                live_hop_costs = (n * 32 + 32,)
 
-        def round_body(carry, _):
+        def round_body(carry, t_idx):
             w, key, stopped = carry["w"], carry["key"], carry["stopped"]
             u = ones
             outs = []
+            if live:
+                live_active = jnp.logical_not(stopped)
+                live_entry_exh = carry.get("exhausted",
+                                           jnp.zeros((), bool))
+                live_bits = jnp.asarray(0, jnp.int32)
+                live_sent = jnp.asarray(0, jnp.int32)
+                live_skip = jnp.asarray(0, jnp.int32)
             if scheduler is not None:
                 # the round permutation, from the carried signal — computed
                 # at round entry exactly when the eager scheduler's
@@ -541,6 +574,15 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
                         jnp.asarray(0, jnp.int32))
                     carry["wire"] = carry["wire"].at[src].add(
                         jnp.where(sent, wcost, 0))
+                if live:
+                    live_sent = live_sent + jnp.where(sent, 1, 0)
+                    live_skip = live_skip + jnp.where(
+                        valid & jnp.logical_not(sent), 1, 0)
+                    live_bits = live_bits + jnp.select(
+                        [rung == i for i in range(len(live_hop_costs))],
+                        [jnp.asarray(c, jnp.int32)
+                         for c in live_hop_costs],
+                        jnp.asarray(0, jnp.int32))
                 stopped = stopped | trigger
                 outs.append((params, a, rbar, executed, valid, w, sent,
                              rung, jnp.asarray(src, jnp.int32)))
@@ -549,6 +591,15 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
                 # the eager engine notices exhaustion at the *next* round's
                 # entry: the current round finishes, later ones never start
                 stopped = stopped | carry["exhausted"]
+            if live:
+                new_exh = jnp.where(
+                    carry.get("exhausted", jnp.zeros((), bool))
+                    & jnp.logical_not(live_entry_exh), 1, 0)
+                emit_round(t_idx, live_active,
+                           live_bits + jnp.where(t_idx == 0,
+                                                 live_setup, 0)
+                           + key_salt(key),
+                           live_sent, live_skip, new_exh)
             carry = dict(carry, w=w, key=key, stopped=stopped)
             return carry, tuple(outs)
 
@@ -571,8 +622,14 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
                 init["seen"] = jnp.zeros((num,), bool)
             if scheduler.spend_signal == "wire":
                 init["wire"] = jnp.zeros((num,), jnp.int32)
-        fin, ys = jax.lax.scan(round_body, init, None,
-                               length=plan.max_rounds)
+        if live:
+            # round indices as scan xs feed the taps; the dark program
+            # keeps its byte-identical no-xs scan
+            fin, ys = jax.lax.scan(round_body, init,
+                                   jnp.arange(plan.max_rounds))
+        else:
+            fin, ys = jax.lax.scan(round_body, init, None,
+                                   length=plan.max_rounds)
         return SessionResult(
             alphas=jnp.stack([y[1] for y in ys], axis=1),
             accs=jnp.stack([y[2] for y in ys], axis=1),
@@ -596,18 +653,20 @@ def make_session_fn(plan: SessionPlan, feature_shapes: tuple,
 
 
 @functools.lru_cache(maxsize=64)
-def _session_program(plan: SessionPlan, feature_shapes: tuple):
-    return jax.jit(make_session_fn(plan, feature_shapes))
+def _session_program(plan: SessionPlan, feature_shapes: tuple,
+                     live: bool = False):
+    return jax.jit(make_session_fn(plan, feature_shapes, live=live))
 
 
 def compiled_session(plan: SessionPlan, key: jax.Array,
                      Xs: Sequence[jnp.ndarray],
-                     classes: jnp.ndarray) -> SessionResult:
+                     classes: jnp.ndarray, *,
+                     live: bool = False) -> SessionResult:
     """Run one ASCII session as a single compiled program (cached per
-    (plan, feature shapes))."""
+    (plan, feature shapes, live))."""
     Xs = tuple(jnp.asarray(x) for x in Xs)
     shapes = tuple(x.shape[1:] for x in Xs)
-    return _session_program(plan, shapes)(key, Xs, classes)
+    return _session_program(plan, shapes, live)(key, Xs, classes)
 
 
 # ================================================================ async barrier
@@ -648,7 +707,8 @@ class AsyncSessionResult(NamedTuple):
     exhausted: jnp.ndarray
 
 
-def make_async_session_fn(plan: SessionPlan, feature_shapes: tuple):
+def make_async_session_fn(plan: SessionPlan, feature_shapes: tuple,
+                          live: bool = False):
     """Lower the stale-read asynchronous barrier (``AsyncStaleScheduler``)
     into a pure callable ``session_fn(key, Xs, classes) ->
     AsyncSessionResult`` — one ``lax.scan`` over barrier rounds.
@@ -698,10 +758,27 @@ def make_async_session_fn(plan: SessionPlan, feature_shapes: tuple):
             from repro.core.engine import LabelsMsg, SampleIdsMsg
             setup_bits = (num - 1) * (LabelsMsg("", "", n).bits
                                       + SampleIdsMsg("", "", n).bits)
+        if live:
+            from repro.core.engine import LabelsMsg, SampleIdsMsg
+            from repro.telemetry.live import emit_round, key_salt
+            live_setup = (num - 1) * (LabelsMsg("", "", n).bits
+                                      + SampleIdsMsg("", "", n).bits)
+            if has_channel:
+                # the barrier release's priced bits per rung: what the
+                # async replay books for the single barrier IgnoranceMsg
+                live_bar_costs = (tuple(int(c) for c
+                                        in budget.payload_costs(n))
+                                  if budget is not None else
+                                  tuple(int(c.wire_bits(n))
+                                        if c is not None else n * 32
+                                        for c in ladder))
 
-        def round_body(carry, _):
+        def round_body(carry, t_idx):
             w, key, stopped = carry["w"], carry["key"], carry["stopped"]
             executed = jnp.logical_not(stopped)
+            if live:
+                live_entry_exh = carry.get("exhausted",
+                                           jnp.zeros((), bool))
             fits = []
             # stale reads: every agent fits against the same round-t score,
             # per-agent key splits in id order (the eager fits loop)
@@ -779,6 +856,34 @@ def make_async_session_fn(plan: SessionPlan, feature_shapes: tuple):
                 stopped = stopped | (executed & jnp.logical_not(any_pos))
             if budget is not None and budget.session_bits is not None:
                 stopped = stopped | carry["exhausted"]
+            if live:
+                if not has_channel:
+                    # per positive agent: raw IgnoranceMsg + alpha message
+                    live_bits = pos_count * jnp.asarray(n * 32 + 32,
+                                                        jnp.int32)
+                    live_ign = pos_count
+                    live_skip = jnp.asarray(0, jnp.int32)
+                else:
+                    # raw alpha messages per positive agent + the single
+                    # barrier release at its priced rung
+                    live_bits = 32 * pos_count + jnp.select(
+                        [rung == i for i in range(len(live_bar_costs))],
+                        [jnp.asarray(c, jnp.int32)
+                         for c in live_bar_costs],
+                        jnp.asarray(0, jnp.int32))
+                    live_ign = jnp.where(sent, 1, 0)
+                    live_skip = (jnp.where(executed
+                                           & jnp.logical_not(sent), 1, 0)
+                                 if budget is not None
+                                 else jnp.asarray(0, jnp.int32))
+                new_exh = jnp.where(
+                    carry.get("exhausted", jnp.zeros((), bool))
+                    & jnp.logical_not(live_entry_exh), 1, 0)
+                emit_round(t_idx, executed,
+                           live_bits + jnp.where(t_idx == 0,
+                                                 live_setup, 0)
+                           + key_salt(key),
+                           live_ign, live_skip, new_exh)
             carry = dict(carry, w=w, key=key, stopped=stopped)
             outs = tuple(
                 (params, a, rbar, executed, executed & (a > 0), snaps[j])
@@ -791,8 +896,12 @@ def make_async_session_fn(plan: SessionPlan, feature_shapes: tuple):
         if budget is not None:
             init["spent"] = jnp.asarray(setup_bits, jnp.int32)
             init["exhausted"] = jnp.zeros((), bool)
-        fin, (ys, w_bars, sents, rungs) = jax.lax.scan(
-            round_body, init, None, length=plan.max_rounds)
+        if live:
+            fin, (ys, w_bars, sents, rungs) = jax.lax.scan(
+                round_body, init, jnp.arange(plan.max_rounds))
+        else:
+            fin, (ys, w_bars, sents, rungs) = jax.lax.scan(
+                round_body, init, None, length=plan.max_rounds)
         return AsyncSessionResult(
             alphas=jnp.stack([y[1] for y in ys], axis=1),
             accs=jnp.stack([y[2] for y in ys], axis=1),
@@ -810,18 +919,20 @@ def make_async_session_fn(plan: SessionPlan, feature_shapes: tuple):
 
 
 @functools.lru_cache(maxsize=64)
-def _async_session_program(plan: SessionPlan, feature_shapes: tuple):
-    return jax.jit(make_async_session_fn(plan, feature_shapes))
+def _async_session_program(plan: SessionPlan, feature_shapes: tuple,
+                           live: bool = False):
+    return jax.jit(make_async_session_fn(plan, feature_shapes, live=live))
 
 
 def async_session(plan: SessionPlan, key: jax.Array,
                   Xs: Sequence[jnp.ndarray],
-                  classes: jnp.ndarray) -> AsyncSessionResult:
+                  classes: jnp.ndarray, *,
+                  live: bool = False) -> AsyncSessionResult:
     """Run one stale-read asynchronous session as a single compiled program
-    (cached per (plan, feature shapes))."""
+    (cached per (plan, feature shapes, live))."""
     Xs = tuple(jnp.asarray(x) for x in Xs)
     shapes = tuple(x.shape[1:] for x in Xs)
-    return _async_session_program(plan, shapes)(key, Xs, classes)
+    return _async_session_program(plan, shapes, live)(key, Xs, classes)
 
 
 def fitted_from_async_result(plan: SessionPlan, result: AsyncSessionResult,
@@ -857,8 +968,9 @@ def fitted_from_async_result(plan: SessionPlan, result: AsyncSessionResult,
 # ======================================================================== fleet
 @functools.lru_cache(maxsize=64)
 def _fleet_program(plan: SessionPlan, feature_shapes: tuple,
-                   data_batched: bool, axis_name: str | None):
-    fn = make_session_fn(plan, feature_shapes)
+                   data_batched: bool, axis_name: str | None,
+                   live: bool = False):
+    fn = make_session_fn(plan, feature_shapes, live=live)
     data_ax = 0 if data_batched else None
     vf = jax.vmap(fn, in_axes=(0, data_ax, data_ax))
     if axis_name is None:
@@ -882,7 +994,8 @@ def _fleet_program(plan: SessionPlan, feature_shapes: tuple,
 
 def fleet_run(plan: SessionPlan, keys: jax.Array, Xs: Sequence[jnp.ndarray],
               classes: jnp.ndarray, *, data_batched: bool = False,
-              shard_axis: str | None = None) -> SessionResult:
+              shard_axis: str | None = None,
+              live: bool = False) -> SessionResult:
     """Run a whole fleet of sessions as one vmapped compiled program.
 
     ``keys`` is [S] session PRNG keys.  With ``data_batched=False`` every
@@ -892,10 +1005,19 @@ def fleet_run(plan: SessionPlan, keys: jax.Array, Xs: Sequence[jnp.ndarray],
     the session axis across all local devices (the engine mesh's data axis)
     so fleets scale past one chip; the device count must then divide S
     evenly.  Returns a SessionResult with a leading session axis.
+
+    ``live`` streams one progress tap per (session, round) to the
+    installed :class:`~repro.telemetry.live.LiveSink` while the fleet
+    executes — the vmap unrolls the callback per session, each tap
+    carrying that session's unbatched scalars.  Local fleets only
+    (``shard_axis`` callbacks are not supported).
     """
+    if live and shard_axis is not None:
+        raise ValueError("live emission does not compose with shard_map "
+                         "fleets — run --watch fleets unsharded")
     Xs = tuple(jnp.asarray(x) for x in Xs)
     shapes = tuple(x.shape[2:] if data_batched else x.shape[1:] for x in Xs)
-    return _fleet_program(plan, shapes, data_batched, shard_axis)(
+    return _fleet_program(plan, shapes, data_batched, shard_axis, live)(
         keys, Xs, classes)
 
 
@@ -920,7 +1042,7 @@ class ServeResult(NamedTuple):
 
 
 def make_serve_fn(plan: SessionPlan, feature_shapes: tuple,
-                  qmax_arg: bool = False):
+                  qmax_arg: bool = False, live: bool = False):
     """Lower ``plan``'s serve path into a pure callable
 
         serve_fn(key, Xs, params, alphas, valid, rem_session, rem_link,
@@ -970,6 +1092,18 @@ def make_serve_fn(plan: SessionPlan, feature_shapes: tuple,
             min_cost = min(costs)
             rem_s = jnp.asarray(rem_session, jnp.int32)
         deliver = jnp.asarray(deliver, bool)
+        if live:
+            from repro.telemetry.live import emit_serve, key_salt
+            # per-block priced bits: what _replay_serve books for each
+            # shipped ScoreBlockMsg (encoded wire bits, raw 32*n*K when
+            # the serve rung is the identity)
+            live_costs = (tuple(int(c) for c in budget.serve_costs(shape))
+                          if budget is not None else
+                          tuple(int(c.wire_bits(shape)) if c is not None
+                                else 32 * n * k for c in ladder))
+            live_bits = jnp.asarray(0, jnp.int32)
+            live_sent = jnp.asarray(0, jnp.int32)
+            live_skip = jnp.asarray(0, jnp.int32)
         total = None
         blocks, sent_l, rung_l = [], [], []
         exhausted = jnp.zeros((), bool)
@@ -1047,10 +1181,30 @@ def make_serve_fn(plan: SessionPlan, feature_shapes: tuple,
                 rung = jnp.asarray(0 if ladder[0] is not None else -1,
                                    jnp.int32)
                 contrib = jnp.where(d_j, blk, jnp.zeros_like(blk))
+            if live:
+                live_sent = live_sent + jnp.where(sendable, 1, 0)
+                if budget is not None:
+                    # only budgeted serves record skips, and only for
+                    # blocks admission actually asked to deliver
+                    live_skip = live_skip + jnp.where(
+                        d_j & jnp.logical_not(sendable), 1, 0)
+                if budget is None and serve_controller is None:
+                    hop_cost = jnp.asarray(live_costs[0], jnp.int32)
+                else:
+                    hop_cost = jnp.select(
+                        [rung == i for i in range(len(live_costs))],
+                        [jnp.asarray(c, jnp.int32) for c in live_costs],
+                        jnp.asarray(0, jnp.int32))
+                live_bits = live_bits + jnp.where(sendable, hop_cost, 0)
             blocks.append(blk)
             sent_l.append(sendable)
             rung_l.append(jnp.where(sendable, rung, -1))
             total = total + contrib
+        if live:
+            # one tap per request; batch-pad filler slots carry deliver
+            # all-False, so active == deliver[0] drops them host-side
+            emit_serve(deliver[0], live_bits + key_salt(key),
+                       live_sent, live_skip)
         return ServeResult(preds=jnp.argmax(total, axis=-1),
                            blocks=jnp.stack(blocks, axis=0),
                            sent=jnp.stack(sent_l),
@@ -1065,14 +1219,15 @@ def make_serve_fn(plan: SessionPlan, feature_shapes: tuple,
 
 
 @functools.lru_cache(maxsize=64)
-def _serve_program(plan: SessionPlan, feature_shapes: tuple):
-    return jax.jit(make_serve_fn(plan, feature_shapes))
+def _serve_program(plan: SessionPlan, feature_shapes: tuple,
+                   live: bool = False):
+    return jax.jit(make_serve_fn(plan, feature_shapes, live=live))
 
 
 def serve_session(plan: SessionPlan, result: SessionResult, key,
                   Xs: Sequence[jnp.ndarray], *, valid=None,
                   rem_session=None, rem_link=None,
-                  deliver=None) -> ServeResult:
+                  deliver=None, live: bool = False) -> ServeResult:
     """Run the traced serve step for one completed compiled session: the
     one-program distributed prediction over ``Xs`` (per-agent serve-time
     feature blocks).  ``valid`` optionally overrides ``result.valid`` (e.g.
@@ -1094,7 +1249,7 @@ def serve_session(plan: SessionPlan, result: SessionResult, key,
                         jnp.int32)
     if deliver is None:
         deliver = jnp.ones((num,), bool)
-    return _serve_program(plan, shapes)(
+    return _serve_program(plan, shapes, live)(
         key, Xs, result.params, result.alphas, jnp.asarray(valid),
         rem_s, rem_l, jnp.asarray(deliver, bool))
 
@@ -1102,8 +1257,8 @@ def serve_session(plan: SessionPlan, result: SessionResult, key,
 # ================================================================ batched serve
 @functools.lru_cache(maxsize=64)
 def _serve_batch_program(plan: SessionPlan, feature_shapes: tuple,
-                         width: int):
-    fn = make_serve_fn(plan, feature_shapes)
+                         width: int, live: bool = False):
+    fn = make_serve_fn(plan, feature_shapes, live=live)
     num = plan.num_agents
 
     from repro.comm.codecs import serve_key
@@ -1138,7 +1293,8 @@ def _serve_batch_program(plan: SessionPlan, feature_shapes: tuple,
     return jax.jit(run)
 
 
-def serve_batch(plan: SessionPlan, slots) -> ServeResult:
+def serve_batch(plan: SessionPlan, slots, *,
+                live: bool = False) -> ServeResult:
     """Run one traced serve step for a whole *batch* of slots in ONE XLA
     program — the continuous-batching primitive behind
     :mod:`repro.serve.batcher`.
@@ -1159,7 +1315,7 @@ def serve_batch(plan: SessionPlan, slots) -> ServeResult:
     """
     slots = tuple(dict(s) for s in slots)
     shapes = tuple(tuple(np.shape(x)[1:]) for x in slots[0]["Xs"])
-    return _serve_batch_program(plan, shapes, len(slots))(slots)
+    return _serve_batch_program(plan, shapes, len(slots), live)(slots)
 
 
 # ================================================================= codec sweep
@@ -1227,8 +1383,9 @@ TRACE_COUNTS: dict = {}
 
 
 @functools.lru_cache(maxsize=64)
-def _control_sweep_program(plan: SessionPlan, feature_shapes: tuple):
-    fn = make_session_fn(plan, feature_shapes, control_arg=True)
+def _control_sweep_program(plan: SessionPlan, feature_shapes: tuple,
+                           live: bool = False):
+    fn = make_session_fn(plan, feature_shapes, control_arg=True, live=live)
 
     def counted(key, Xs, classes, cuts, beta, session_cap, link_cap):
         # runs at trace time only: one increment per compile, not per config
@@ -1242,7 +1399,7 @@ def _control_sweep_program(plan: SessionPlan, feature_shapes: tuple):
 def control_sweep_run(plan: SessionPlan, keys: jax.Array,
                       Xs: Sequence[jnp.ndarray], classes: jnp.ndarray, *,
                       cuts=None, betas=None, session_bits=None,
-                      link_bits=None) -> SessionResult:
+                      link_bits=None, live: bool = False) -> SessionResult:
     """Sweep the *control plane* across a session fleet in ONE XLA program.
 
     The plan's adaptive-controller thresholds (``cuts`` [S, R-1]) and EMA
@@ -1286,8 +1443,8 @@ def control_sweep_run(plan: SessionPlan, keys: jax.Array,
     sb = cap_axis(session_bits,
                   plan.budget.session_bits if plan.budget else None)
     lb = cap_axis(link_bits, plan.budget.link_bits if plan.budget else None)
-    return _control_sweep_program(plan, shapes)(keys, Xs, classes, cuts,
-                                                betas, sb, lb)
+    return _control_sweep_program(plan, shapes, live)(keys, Xs, classes,
+                                                      cuts, betas, sb, lb)
 
 
 # ============================================================= host extraction

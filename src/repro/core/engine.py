@@ -61,6 +61,7 @@ from repro.core import scores
 from repro.core.encoding import encode_labels
 from repro.core.transport import TransportLog
 from repro.learners.base import Learner
+from repro.telemetry.live import installed as live_installed
 
 PyTree = Any
 
@@ -1029,8 +1030,40 @@ class Session:
         transport.bind(self.endpoints)
         scheduler.bind_transport(transport)
         self.variant.bind(self)
+        # live in-flight emission (telemetry.live): eager rounds tap the
+        # sink directly with per-round registry deltas.  Metered transports
+        # only — an unmetered run books nothing, so its taps would read
+        # all-zero and break the eager==compiled live-series pin.  The prev
+        # counters snapshot *before* the collation setup so the setup bits
+        # land in round 0's delta, matching the compiled t==0 tap.
+        self._live = None
+        if telemetry is not None \
+                and getattr(telemetry, "live", None) is not None \
+                and getattr(transport, "log", None) is not None:
+            self._live = telemetry.live
+            self._live_prev = self._live_counters()
         if _send_setup:
             self._send_setup()
+
+    # ---- live emission ------------------------------------------------------
+    def _live_counters(self) -> tuple:
+        """The replay-equal counters the eager round taps difference: total
+        wire bits, ignorance messages, budget skips, the exhausted flag."""
+        reg = self.telemetry.registry
+        return (reg.total("wire_bits_total"),
+                reg.value("messages_total", kind="ignorance"),
+                reg.total("budget_skips_total"),
+                bool(getattr(self.transport, "exhausted", False)))
+
+    def _emit_live_round(self, t: int) -> None:
+        """One eager round tap: the same (round, bits, sent, skipped,
+        exhaustion-edge) payload the compiled scan's emit_round stages, so
+        the two backends fold identical live series."""
+        bits, ign, skips, exh = cur = self._live_counters()
+        p_bits, p_ign, p_skips, p_exh = self._live_prev
+        self._live_prev = cur
+        self._live.round_tap(t, int(bits - p_bits), int(ign - p_ign),
+                             int(skips - p_skips), int(exh and not p_exh))
 
     # ---- wiring -------------------------------------------------------------
     def _span(self, name: str, step: int | None = None, **attrs):
@@ -1126,6 +1159,8 @@ class Session:
         st.round += 1
         if stop:
             st.stopped = True
+        if self._live is not None:
+            self._emit_live_round(t)
         return not st.stopped and st.round < cfg.max_rounds
 
     def _step_stale(self, order: list[int], eps: dict, rec: dict) -> bool:
@@ -1260,6 +1295,11 @@ class Session:
         if key is None and self.transport.has_serve_channel:
             from repro.comm.codecs import serve_key
             key = serve_key(self.state.key, request)
+        if self._live is not None:
+            reg = self.telemetry.registry
+            p_bits = reg.total("wire_bits_total")
+            p_blk = reg.value("messages_total", kind="score_block")
+            p_skips = reg.total("budget_skips_total")
         total = None
         with self._span("serve", backend="eager",
                         agents=len(self.endpoints)):
@@ -1277,6 +1317,14 @@ class Session:
                     if contrib is None:
                         continue       # budget skip: head-only fallback
                 total = contrib if total is None else total + contrib
+        if self._live is not None:
+            # one serve tap per request — the eager twin of the traced
+            # emit_serve, differencing the same booked counters
+            self._live.serve_tap(
+                int(reg.total("wire_bits_total") - p_bits),
+                int(reg.value("messages_total", kind="score_block")
+                    - p_blk),
+                int(reg.total("budget_skips_total") - p_skips))
         return jnp.argmax(total, axis=-1)
 
     # ---- checkpointing ------------------------------------------------------
@@ -1435,6 +1483,17 @@ class Protocol:
         return value if self.telemetry is None else \
             self.telemetry.fence(value)
 
+    def _live_sink(self):
+        """The live sink when in-flight emission applies to this run:
+        telemetry opened the live plane AND the transport is metered (an
+        unmetered run books no wire bits on either backend, so live taps
+        would have nothing to mirror)."""
+        if self.telemetry is not None \
+                and getattr(self.telemetry, "live", None) is not None \
+                and getattr(self.transport, "log", None) is not None:
+            return self.telemetry.live
+        return None
+
     def _fit_compiled(self, key, endpoints: Sequence[AgentEndpoint],
                       classes: jnp.ndarray, validation) -> FittedASCII:
         """One-program execution of the whole run (core/compiled.py), with
@@ -1503,11 +1562,15 @@ class Protocol:
             controller=self.transport.controller,
             serve_controller=self.transport.serve_controller,
             scheduler=sched_plan)
+        live_sink = self._live_sink()
+        live = live_sink is not None
         if isinstance(sched_plan, compiled.AsyncStalePlan):
             with self._span("session", backend="compiled",
                             agents=len(endpoints)):
-                result = self._fence(compiled.async_session(
-                    plan, key, tuple(ep.X for ep in endpoints), classes))
+                with live_installed(live_sink):
+                    result = self._fence(compiled.async_session(
+                        plan, key, tuple(ep.X for ep in endpoints),
+                        classes, live=live))
             fitted = compiled.fitted_from_async_result(
                 plan, result, [ep.learner for ep in endpoints])
             with self._span("replay", backend="compiled"):
@@ -1518,8 +1581,10 @@ class Protocol:
                         agents=len(endpoints)):
             # the fence closes the span at computation-done, not at
             # async-dispatch enqueue — timing only, values untouched
-            result = self._fence(compiled.compiled_session(
-                plan, key, tuple(ep.X for ep in endpoints), classes))
+            with live_installed(live_sink):
+                result = self._fence(compiled.compiled_session(
+                    plan, key, tuple(ep.X for ep in endpoints), classes,
+                    live=live))
         fitted = compiled.fitted_from_result(
             plan, result, [ep.learner for ep in endpoints])
         with self._span("replay", backend="compiled"):
@@ -1697,11 +1762,14 @@ class Protocol:
             valid = jnp.logical_and(valid, mask)
         shape = (int(Xs_serve[0].shape[0]), self.cfg.num_classes)
         rem_session, rem_link = self._serve_remaining(endpoints, shape, plan)
+        live_sink = self._live_sink()
         with self._span("serve", backend="compiled",
                         agents=len(endpoints)):
-            serve = self._fence(compiled.serve_session(
-                plan, result, key, Xs_serve, valid=valid,
-                rem_session=rem_session, rem_link=rem_link))
+            with live_installed(live_sink):
+                serve = self._fence(compiled.serve_session(
+                    plan, result, key, Xs_serve, valid=valid,
+                    rem_session=rem_session, rem_link=rem_link,
+                    live=live_sink is not None))
         with self._span("replay", backend="compiled"):
             self._replay_serve(endpoints, serve, shape, plan)
         return serve.preds

@@ -100,11 +100,23 @@ def main():
     ap.add_argument("--no-degrade", action="store_true",
                     help="deny over-budget requests instead of degrading "
                          "them to head-only")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="per-tenant latency SLO threshold in ms (0 = no "
+                         "SLO tracking); admission denials count as "
+                         "violations")
+    ap.add_argument("--slo-objective", type=float, default=0.99,
+                    help="fraction of a tenant's requests that must land "
+                         "under --slo-ms")
+    ap.add_argument("--watch", action="store_true",
+                    help="render the live fleet dashboard (stderr) while "
+                         "the workload runs: per-round wire taps, tenant "
+                         "p50/p99, SLO burn, admission/cache counters")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace", default="",
                     help="write a JSONL telemetry trace (flush/flush_wave/"
                          "bucket_dispatch spans + final metric values) "
-                         "here after the workload")
+                         "here after the workload; with --watch the live "
+                         "events stream into it as they happen")
     ap.add_argument("--metrics-out", default="",
                     help="write the fleet metrics registry here (.prom = "
                          "Prometheus text exposition, else JSON snapshot)")
@@ -121,8 +133,16 @@ def main():
     Xtr, Xte = [x[tr] for x in Xs], [x[te] for x in Xs]
     ctr = ds.classes[tr]
 
-    telemetry = (Telemetry() if (args.trace or args.metrics_out)
+    telemetry = (Telemetry(live=args.watch)
+                 if (args.trace or args.metrics_out or args.watch)
                  else None)
+    if args.trace and telemetry is not None:
+        telemetry.stream_trace(args.trace)
+    dash = None
+    if args.watch:
+        from repro.telemetry.dash import Dashboard
+        dash = Dashboard(telemetry.registry,
+                         title="serve fleet").attach(telemetry.live)
     t0 = time.time()
     protos = fit_fleet(args, jax.random.fold_in(key, 1), Xtr, ctr,
                        ds.num_classes, telemetry=telemetry)
@@ -130,6 +150,11 @@ def main():
 
     mechanism = (GaussianMechanism(epsilon=args.dp_epsilon)
                  if args.dp_epsilon > 0 else None)
+    slo = None
+    if args.slo_ms > 0:
+        from repro.telemetry.slo import SLOConfig
+        slo = SLOConfig(threshold_s=args.slo_ms / 1e3,
+                        objective=args.slo_objective)
     engine = ServeEngine(
         cache_capacity=args.cache_capacity, max_batch=args.max_batch,
         admission=AdmissionController(
@@ -137,7 +162,7 @@ def main():
                             epsilon_cap=args.epsilon_cap or None),
             tenant_bits=args.tenant_kb * 8 * 1024 or None,
             mechanism=mechanism),
-        telemetry=telemetry)
+        telemetry=telemetry, slo=slo)
     for sid, proto in protos.items():
         engine.add_session(sid, proto)
 
@@ -158,6 +183,8 @@ def main():
     summary = engine.summary()
     summary["elapsed_s"] = round(dt, 4)
     summary["qps"] = round(args.requests / max(dt, 1e-9), 2)
+    if dash is not None:
+        dash.final()
     print(json.dumps(summary, indent=2))
     if telemetry is not None:
         # fleet-wide: link gauges are per-transport, so skip the gauge

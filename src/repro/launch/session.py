@@ -100,12 +100,15 @@ def _print_serve(transport, preds, cte, before_bits):
     print(line)
 
 
-def _finish_telemetry(args, telemetry, transport):
-    """Stop the profiler (if running) and write the trace/metrics
-    artifacts; called at both backends' exits, after all traffic."""
+def _finish_telemetry(args, telemetry, transport, dash=None):
+    """Stop the profiler (if running), settle the dashboard's last frame,
+    and write the trace/metrics artifacts; called at both backends'
+    exits, after all traffic."""
     if args.profile_dir:
         jax.profiler.stop_trace()
         print(f"profile: wrote {args.profile_dir}")
+    if dash is not None:
+        dash.final()
     if telemetry is not None:
         telemetry.write_artifacts(trace=args.trace or None,
                                   metrics_out=args.metrics_out or None,
@@ -250,6 +253,13 @@ def main():
                          "this directory (view in TensorBoard/Perfetto); "
                          "session/round/hop spans show up as trace "
                          "annotations on the profiler timeline")
+    ap.add_argument("--watch", action="store_true",
+                    help="render the live dashboard (stderr) while the "
+                         "session runs: per-round wire bits, budget "
+                         "skips, exhaustion — streamed from inside the "
+                         "compiled program via in-flight taps (eager "
+                         "rounds tap at round end); metered transports "
+                         "only")
     args = ap.parse_args()
 
     key = jax.random.key(args.seed)
@@ -382,13 +392,22 @@ def main():
                                                controller=controller,
                                                accountant=accountant,
                                                serve_controller=serve_controller)
-    telemetry = (Telemetry(profile=bool(args.profile_dir))
-                 if (args.trace or args.metrics_out or args.profile_dir)
+    telemetry = (Telemetry(profile=bool(args.profile_dir),
+                           live=args.watch)
+                 if (args.trace or args.metrics_out or args.profile_dir
+                     or args.watch)
                  else None)
     if telemetry is not None and args.trace:
         # crash-durable: spans stream to the trace file as they close;
-        # _finish_telemetry seals it with the final metric events
+        # _finish_telemetry seals it with the final metric events (with
+        # --watch, live round taps stream into it too, as they fire)
         telemetry.stream_trace(args.trace)
+    dash = None
+    if args.watch:
+        from repro.telemetry.dash import Dashboard
+        dash = Dashboard(telemetry.registry,
+                         title=f"session:{args.dataset}"
+                         ).attach(telemetry.live)
     engine = Protocol(SessionConfig(num_classes=ds.num_classes,
                                     max_rounds=args.rounds,
                                     upstream=upstream),
@@ -426,7 +445,7 @@ def main():
             preds = engine.predict_distributed(Xte)
             _print_serve(transport, preds, cte, before)
         _print_comm(transport, show_ema=False)
-        _finish_telemetry(args, telemetry, transport)
+        _finish_telemetry(args, telemetry, transport, dash)
         return
 
     # the run config that must match across pause/resume: a different
@@ -496,7 +515,7 @@ def main():
         preds = session.predict_distributed(Xte)
         _print_serve(transport, preds, cte, before)
     _print_comm(transport)
-    _finish_telemetry(args, telemetry, transport)
+    _finish_telemetry(args, telemetry, transport, dash)
     if paused:
         if args.ckpt_dir:
             print(f"paused after {session.state.round} rounds; rerun with "

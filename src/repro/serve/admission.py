@@ -115,6 +115,10 @@ class AdmissionController:
         # outcome counters live here (a private registry when the serve
         # engine doesn't share its own) — one sink for every serve counter
         self.registry = registry if registry is not None else MetricsRegistry()
+        # optional repro.telemetry.slo.SLOTracker: a denial is an SLO
+        # violation (the tenant never got an answer), booked at the same
+        # settle point as the outcome counter (the serve engine wires this)
+        self.slo = None
 
     def account(self, tenant: str) -> TenantAccount:
         if tenant not in self.accounts:
@@ -163,6 +167,8 @@ class AdmissionController:
         if decision.outcome == DENY:
             self.registry.inc("admission_outcomes_total", 1, tenant=tenant,
                               outcome="denied")
+            if self.slo is not None:
+                self.slo.record_denial(tenant)
             return
         acct.budget.charge(int(bits))
         acct.released += int(releases)

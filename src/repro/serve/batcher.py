@@ -76,6 +76,9 @@ class Batcher:
     pending: list = field(default_factory=list)
     registry: Any = None            # telemetry MetricsRegistry
     tracer: Any = None              # telemetry SpanTracer
+    live: bool = False              # stage in-flight serve taps (the pad
+    #                                 slots' all-False deliver masks make
+    #                                 the sink drop them host-side)
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -149,7 +152,7 @@ class Batcher:
                           deliver=np.zeros_like(np.asarray(args[0]["deliver"])))
             args.extend([filler] * pad)
         with self._span("bucket_dispatch", slots=len(chunk), pad=pad):
-            res = compiled.serve_batch(plan, args)
+            res = compiled.serve_batch(plan, args, live=self.live)
             if self.tracer is not None:
                 # fence so the span times the computation, not the enqueue
                 self.tracer.fence(res)

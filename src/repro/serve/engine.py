@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field
+from time import perf_counter
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +40,8 @@ from repro.comm.privacy import PrivacyAccountant
 from repro.serve.admission import DENY, AdmissionController, Decision
 from repro.serve.batcher import Batcher, Slot
 from repro.serve.cache import ServeSessionState, SessionCache
+from repro.telemetry.live import installed as live_installed
+from repro.telemetry.slo import SLOConfig, SLOTracker
 
 _INT32_MAX = int(np.iinfo(np.int32).max)
 
@@ -93,20 +96,29 @@ class ServeEngine:
     def __init__(self, *, cache_capacity: int = 8, max_batch: int = 8,
                  spill_dir: str | None = None,
                  admission: AdmissionController | None = None,
-                 telemetry=None) -> None:
+                 telemetry=None, slo: SLOConfig | None = None) -> None:
         from repro.telemetry.registry import MetricsRegistry
         self.telemetry = telemetry
         self.registry = (telemetry.registry if telemetry is not None
                          else MetricsRegistry())
+        # the live plane: batch programs stage in-flight serve taps, and
+        # flush() installs this sink around the dispatch so they land here
+        self.live = (telemetry.live if telemetry is not None else None)
         self.cache = SessionCache(cache_capacity, spill_dir,
                                   registry=self.registry)
         self.batcher = Batcher(
             max_batch=max_batch,
             resolve=lambda slot: self.cache.get(slot.session_id),
             registry=self.registry,
-            tracer=telemetry.tracer if telemetry is not None else None)
+            tracer=telemetry.tracer if telemetry is not None else None,
+            live=self.live is not None)
         self.admission = (admission if admission is not None
                           else AdmissionController())
+        self.slo = (SLOTracker(slo, self.registry)
+                    if slo is not None else None)
+        # denials book their SLO violation at the admission settle point
+        self.admission.slo = self.slo
+        self._submitted: dict[int, float] = {}
         # a caller-supplied controller keeps its history: fold what it
         # already counted into the shared registry, then rebind
         if self.admission.registry is not self.registry:
@@ -207,6 +219,7 @@ class ServeEngine:
             key, request = state.key, rid
         else:
             key, request = _zero_key(), None
+        self._submitted[rid] = perf_counter()
         self.batcher.add(Slot(
             request_id=rid, session_id=session_id, tenant=tenant,
             plan=meta.plan, key=key, Xs=Xs, deliver=deliver,
@@ -270,6 +283,15 @@ class ServeEngine:
         self.registry.inc("serve_requests_total", 1, session=sid)
         self.admission.book(slot.tenant, slot.decision, bits=bits_total,
                             releases=releases)
+        # the single submit -> flush-complete latency stamp: one histogram
+        # observation per settled request, at settle time
+        t0 = self._submitted.pop(slot.request_id, None)
+        if t0 is not None:
+            seconds = perf_counter() - t0
+            self.registry.observe("request_seconds", seconds,
+                                  tenant=slot.tenant)
+            if self.slo is not None:
+                self.slo.observe(slot.tenant, seconds)
         return ServeOutcome(slot.request_id, sid, slot.tenant,
                             slot.decision, preds=np.asarray(res.preds),
                             bits=bits_total, releases=releases)
@@ -290,7 +312,8 @@ class ServeEngine:
 
         if self.telemetry is not None:
             with self.telemetry.span("flush", queued=len(self.batcher)):
-                self.batcher.flush(settle=settle)
+                with live_installed(self.live):
+                    self.batcher.flush(settle=settle)
         else:
             self.batcher.flush(settle=settle)
         return done
@@ -300,7 +323,7 @@ class ServeEngine:
         """Fleet-level accounting: per-tenant counters, cache and batcher
         stats, per-session serve ledgers."""
         total_bits = self.log.total_bits if self.log is not None else 0
-        return {
+        out = {
             "tenants": self.admission.counters(),
             "cache": self.cache.stats(),
             "batcher": self.batcher.stats(),
@@ -312,6 +335,9 @@ class ServeEngine:
             "total_bits": total_bits,
             "requests": len(self.outcomes),
         }
+        if self.slo is not None:
+            out["slo"] = self.slo.report()
+        return out
 
     def close(self) -> None:
         self.cache.close()

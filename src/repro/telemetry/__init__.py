@@ -29,6 +29,7 @@ from __future__ import annotations
 
 from repro.telemetry.export import (StreamingTraceWriter,  # noqa: F401
                                     snapshot, write_metrics, write_trace)
+from repro.telemetry.live import LiveSink  # noqa: F401
 from repro.telemetry.registry import MetricsRegistry
 from repro.telemetry.spans import Span, SpanTracer  # noqa: F401
 
@@ -40,13 +41,19 @@ class Telemetry:
     span (pair with ``jax.profiler.trace(dir)`` around the run); ``fence``
     controls the ``block_until_ready`` fences at dispatch boundaries
     (timing-only — on by default so span durations measure computation,
-    not async-dispatch enqueue).
+    not async-dispatch enqueue); ``live`` opens the in-flight emission
+    plane (:mod:`repro.telemetry.live`): compiled programs stream
+    per-round taps into this registry *while executing* instead of going
+    dark until the post-run replay.
     """
 
-    def __init__(self, *, profile: bool = False, fence: bool = True):
+    def __init__(self, *, profile: bool = False, fence: bool = True,
+                 live: bool = False):
         self.registry = MetricsRegistry()
         self.tracer = SpanTracer(self.registry, profile=profile,
                                  fence=fence)
+        self.live: LiveSink | None = (LiveSink(self.registry)
+                                      if live else None)
         self._stream: StreamingTraceWriter | None = None
 
     def stream_trace(self, path: str) -> StreamingTraceWriter:
@@ -58,6 +65,8 @@ class Telemetry:
         --allow-partial`` accepts — instead of no trace at all."""
         self._stream = StreamingTraceWriter(path, registry=self.registry,
                                             tracer=self.tracer)
+        if self.live is not None:
+            self.live.writer = self._stream
         return self._stream
 
     def span(self, name: str, step: int | None = None, **attrs):

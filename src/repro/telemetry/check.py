@@ -6,8 +6,9 @@ validates each file by suffix and exits nonzero on the first violation
 trace writer leaves — ``.jsonl`` only):
 
   * ``.jsonl`` — JSONL event trace: leading meta line with the right
-    schema/version, every event one of meta/span/counter/gauge/histogram
-    with the required fields, every span closed with a resolvable parent.
+    schema/version, every event one of meta/span/counter/gauge/histogram/
+    live with the required fields, every span closed with a resolvable
+    parent, histogram bucket counts (v2) consistent with their totals.
   * ``.json``  — metrics snapshot: schema/version plus the
     counters/gauges/histograms maps with numeric leaves.
   * ``.prom``  — Prometheus text: every non-comment line parses as
@@ -23,7 +24,9 @@ import json
 import re
 import sys
 
-from repro.telemetry.export import SCHEMA, SCHEMA_VERSION, load_events
+from repro.telemetry.export import (ACCEPTED_VERSIONS, SCHEMA,
+                                    SCHEMA_VERSION, load_events)
+from repro.telemetry.registry import NUM_BUCKETS
 
 _METRIC_FIELDS = {
     "counter": ("name", "labels", "value"),
@@ -31,8 +34,11 @@ _METRIC_FIELDS = {
     "histogram": ("name", "labels", "count", "sum", "min", "max"),
 }
 _SPAN_FIELDS = ("id", "parent", "name", "start_s", "end_s", "attrs")
+#: In-flight progress events streamed by the live taps (schema v2+):
+#: a tag naming the tap plus whatever scalars it carries.
+_LIVE_FIELDS = ("tag",)
 _PROM_LINE = re.compile(
-    r'^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{.*\})?\s+(-?[0-9.eE+infa]+)$')
+    r'^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{.*\})?\s+(-?[0-9.eE+\-infa]+)$')
 
 
 def validate_events(events: list[dict],
@@ -50,10 +56,11 @@ def validate_events(events: list[dict],
     if not events:
         return [] if allow_partial else ["empty trace: no events"]
     head = events[0]
+    version = head.get("version")
     if head.get("type") != "meta":
         errors.append("first event must be type=meta")
-    elif (head.get("schema"), head.get("version")) != (SCHEMA,
-                                                       SCHEMA_VERSION):
+    elif (head.get("schema") != SCHEMA or
+          version not in ACCEPTED_VERSIONS):
         errors.append(f"meta schema/version mismatch: {head}")
     spans: dict = {}
     for i, e in enumerate(events):
@@ -75,6 +82,16 @@ def validate_events(events: list[dict],
                 errors.append(f"event {i}: {kind} missing {missing}")
             elif not isinstance(e["labels"], dict):
                 errors.append(f"event {i}: labels must be an object")
+            elif kind == "histogram":
+                errors.extend(f"event {i}: {msg}"
+                              for msg in _check_buckets(e))
+        elif kind == "live":
+            if version == 1:
+                errors.append(f"event {i}: live events are schema v2+ "
+                              f"but trace declares v1")
+            missing = [f for f in _LIVE_FIELDS if f not in e]
+            if missing:
+                errors.append(f"event {i}: live missing {missing}")
         else:
             errors.append(f"event {i}: unknown type {kind!r}")
     if not allow_partial:
@@ -85,9 +102,27 @@ def validate_events(events: list[dict],
     return errors
 
 
+def _check_buckets(agg: dict) -> list[str]:
+    """Validate the optional bucket counts on one histogram aggregate —
+    absent is fine (v1), present must be NUM_BUCKETS non-negative ints
+    summing to the aggregate's count."""
+    buckets = agg.get("buckets")
+    if buckets is None:
+        return []
+    if (not isinstance(buckets, list) or len(buckets) != NUM_BUCKETS or
+            not all(isinstance(c, int) and c >= 0 for c in buckets)):
+        return [f"histogram {agg.get('name', '?')}: buckets must be "
+                f"{NUM_BUCKETS} non-negative ints"]
+    if sum(buckets) != agg.get("count"):
+        return [f"histogram {agg.get('name', '?')}: bucket counts sum to "
+                f"{sum(buckets)}, count says {agg.get('count')}"]
+    return []
+
+
 def validate_snapshot(doc: dict) -> list[str]:
     errors: list[str] = []
-    if (doc.get("schema"), doc.get("version")) != (SCHEMA, SCHEMA_VERSION):
+    if (doc.get("schema") != SCHEMA or
+            doc.get("version") not in ACCEPTED_VERSIONS):
         errors.append(f"snapshot schema/version mismatch: "
                       f"{doc.get('schema')!r} v{doc.get('version')!r}")
     for section in ("counters", "gauges", "histograms"):
@@ -104,6 +139,8 @@ def validate_snapshot(doc: dict) -> list[str]:
                     ok = (isinstance(value, dict) and
                           all(isinstance(value.get(f), (int, float))
                               for f in ("count", "sum", "min", "max")))
+                    if ok and _check_buckets({**value, "name": name}):
+                        ok = False
                 else:
                     ok = isinstance(value, (int, float))
                 if not ok:
@@ -129,7 +166,15 @@ def validate_prometheus(text: str) -> list[str]:
             continue
         name = m.group(1)
         if name not in typed:
-            errors.append(f"line {lineno}: {name} sample before # TYPE")
+            # Histogram families type the base name; their samples carry
+            # the standard suffixes (plus our _min/_max companion gauges,
+            # which get their own TYPE lines — checked here as a fallback
+            # so a suffixed sample never needs a second family).
+            base = next((name[:-len(s)] for s in
+                         ("_bucket", "_sum", "_count", "_min", "_max")
+                         if name.endswith(s)), None)
+            if base is None or base not in typed:
+                errors.append(f"line {lineno}: {name} sample before # TYPE")
         try:
             float(m.group(3))
         except ValueError:
@@ -139,9 +184,13 @@ def validate_prometheus(text: str) -> list[str]:
 
 def validate_file(path: str, allow_partial: bool = False) -> list[str]:
     if path.endswith(".jsonl"):
-        return validate_events(load_events(path,
-                                           allow_partial=allow_partial),
-                               allow_partial=allow_partial)
+        try:
+            events = load_events(path, allow_partial=allow_partial)
+        except json.JSONDecodeError as e:
+            # a torn line is a validation failure in strict mode (a
+            # killed writer leaves one; --allow-partial tolerates it)
+            return [f"unparseable line: {e}"]
+        return validate_events(events, allow_partial=allow_partial)
     if path.endswith(".prom"):
         with open(path) as f:
             return validate_prometheus(f.read())

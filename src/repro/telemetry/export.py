@@ -22,7 +22,12 @@ import json
 from repro.telemetry.registry import MetricsRegistry
 
 SCHEMA = "repro-telemetry"
-SCHEMA_VERSION = 1
+#: v2 added bucketed histograms ("buckets" on histogram events /
+#: snapshot leaves, ``_bucket{le=...}`` Prometheus exposition) and the
+#: in-flight "live" event kind the streaming taps emit.  v1 traces
+#: (bucketless histograms, no live events) still validate and reload.
+SCHEMA_VERSION = 2
+ACCEPTED_VERSIONS = (1, 2)
 
 
 def meta_event() -> dict:
@@ -86,6 +91,14 @@ class StreamingTraceWriter:
     def _on_span(self, span) -> None:
         if not self._f.closed:
             self._emit(span.to_event())
+
+    def write_event(self, event: dict) -> None:
+        """Append one extra event mid-stream (the live-emission taps push
+        their per-round progress events here while the compiled program is
+        still executing).  Dropped silently after :meth:`close` — a tap
+        that outlives the trace has nowhere durable to land anyway."""
+        if not self._f.closed:
+            self._emit(event)
 
     def close(self) -> int:
         """Append the metric events and seal the file; returns the total
@@ -154,7 +167,9 @@ def snapshot(registry: MetricsRegistry, tracer=None) -> dict:
                        lambda e: e["value"]),
         "histograms": nest(
             (e for e in events if e["type"] == "histogram"),
-            lambda e: {k: e[k] for k in ("count", "sum", "min", "max")}),
+            lambda e: {k: e[k] for k in
+                       ("count", "sum", "min", "max", "buckets")
+                       if k in e}),
     }
     if tracer is not None:
         doc["spans"] = len(tracer.spans)
@@ -173,10 +188,20 @@ def _prom_series(name: str, key: tuple, value) -> str:
     return f"{name}{{{labels}}} {value}"
 
 
+def _prom_bound(bound: float) -> str:
+    """A bucket bound as Prometheus renders it: integral bounds without a
+    trailing ``.0`` so ``le="1"`` not ``le="1.0"``."""
+    return str(int(bound)) if float(bound).is_integer() else repr(bound)
+
+
 def prometheus_text(registry: MetricsRegistry) -> str:
     """One scrape in the Prometheus text exposition format.  Histograms
-    export as summary-style ``_count``/``_sum`` plus ``_min``/``_max``
-    gauges (fixed bucket bounds would drift across workloads)."""
+    export natively — cumulative ``_bucket{le=...}`` samples over the
+    global :data:`~repro.telemetry.registry.BUCKET_BOUNDS` plus
+    ``_sum``/``_count`` — with ``_min``/``_max`` kept as companion gauges
+    (Prometheus histograms don't carry extrema).  A bucketless aggregate
+    (reloaded from a v1 trace) falls back to the summary-style export."""
+    from repro.telemetry.registry import BUCKET_BOUNDS
     lines: list[str] = []
     for name in sorted(registry._counters):
         lines.append(f"# TYPE {name} counter")
@@ -187,9 +212,28 @@ def prometheus_text(registry: MetricsRegistry) -> str:
         for key, value in sorted(registry._gauges[name].items()):
             lines.append(_prom_series(name, key, value))
     for name in sorted(registry._hists):
-        for suffix in ("count", "sum", "min", "max"):
+        series = sorted(registry._hists[name].items())
+        if all(agg.get("buckets") for _, agg in series):
+            lines.append(f"# TYPE {name} histogram")
+            for key, agg in series:
+                cum = 0
+                for i, bound in enumerate(BUCKET_BOUNDS):
+                    cum += agg["buckets"][i]
+                    lines.append(_prom_series(
+                        f"{name}_bucket",
+                        key + (("le", _prom_bound(bound)),), cum))
+                lines.append(_prom_series(f"{name}_bucket",
+                                          key + (("le", "+Inf"),),
+                                          agg["count"]))
+                lines.append(_prom_series(f"{name}_sum", key, agg["sum"]))
+                lines.append(_prom_series(f"{name}_count", key,
+                                          agg["count"]))
+            extrema = ("min", "max")
+        else:
+            extrema = ("count", "sum", "min", "max")
+        for suffix in extrema:
             lines.append(f"# TYPE {name}_{suffix} gauge")
-            for key, agg in sorted(registry._hists[name].items()):
+            for key, agg in series:
                 lines.append(_prom_series(f"{name}_{suffix}", key,
                                           agg[suffix]))
     return "\n".join(lines) + "\n"

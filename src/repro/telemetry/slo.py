@@ -1,0 +1,104 @@
+"""Per-tenant latency SLOs and error-budget burn.
+
+An SLO here is the classic serving objective: "fraction ``objective`` of a
+tenant's requests complete within ``threshold_s`` seconds".  The error
+budget is the allowed violation fraction ``1 - objective``; **burn** is the
+share of that budget consumed so far::
+
+    burn = violations / (requests * (1 - objective))
+
+burn < 1.0 means the tenant is inside its objective, burn >= 1.0 means the
+objective is blown for the window observed.  Admission denials count as
+violations — a tenant turned away at the door did not get an answer within
+threshold, and hiding denials from the SLO would let an over-aggressive
+admission policy look "fast".
+
+The tracker is registry-backed (``slo_requests_total{tenant}``,
+``slo_violations_total{tenant}`` counters and a ``slo_burn{tenant}``
+gauge), so SLO state travels in the same traces/snapshots as everything
+else and the dashboard reads it with the stock accessors.  Wired in by
+:class:`~repro.serve.engine.ServeEngine`: request latency is observed at
+the single submit -> flush-complete settle point, denials at admission.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.telemetry.registry import MetricsRegistry
+
+
+@dataclass(frozen=True)
+class SLOConfig:
+    """One latency objective applied to every tenant: requests should
+    complete within ``threshold_s`` seconds at least ``objective`` of the
+    time (e.g. threshold_s=0.25, objective=0.99 == "p99 under 250ms")."""
+    threshold_s: float = 0.25
+    objective: float = 0.99
+
+    def __post_init__(self):
+        if self.threshold_s <= 0:
+            raise ValueError(f"threshold_s must be > 0, "
+                             f"got {self.threshold_s}")
+        if not 0.0 < self.objective < 1.0:
+            raise ValueError(f"objective must be in (0, 1), "
+                             f"got {self.objective}")
+
+
+class SLOTracker:
+    """Folds per-request outcomes into per-tenant SLO counters and keeps
+    the burn gauge current.  All state lives in the registry, so a
+    reloaded trace reconstructs the same report."""
+
+    def __init__(self, config: SLOConfig,
+                 registry: MetricsRegistry) -> None:
+        self.config = config
+        self.registry = registry
+
+    # -------------------------------------------------------------- folds
+    def observe(self, tenant: str, seconds: float) -> None:
+        """One completed request: latency against the threshold."""
+        self.registry.inc("slo_requests_total", 1, tenant=tenant)
+        if seconds > self.config.threshold_s:
+            self.registry.inc("slo_violations_total", 1, tenant=tenant)
+        self._update_burn(tenant)
+
+    def record_denial(self, tenant: str) -> None:
+        """One admission denial: a request that never completed, booked
+        as a violation against the tenant's error budget."""
+        self.registry.inc("slo_requests_total", 1, tenant=tenant)
+        self.registry.inc("slo_violations_total", 1, tenant=tenant)
+        self._update_burn(tenant)
+
+    def _update_burn(self, tenant: str) -> None:
+        self.registry.set_gauge("slo_burn", self.burn(tenant),
+                                tenant=tenant)
+
+    # -------------------------------------------------------------- reads
+    def burn(self, tenant: str) -> float:
+        """Error-budget burn for one tenant (0.0 before any request)."""
+        requests = self.registry.value("slo_requests_total", tenant=tenant)
+        if not requests:
+            return 0.0
+        violations = self.registry.value("slo_violations_total",
+                                         tenant=tenant)
+        return violations / (requests * (1.0 - self.config.objective))
+
+    def report(self) -> dict:
+        """{tenant: {requests, violations, burn, ok}} for every tenant
+        seen, plus the config — the fleet-summary / dashboard block."""
+        tenants = self.registry.label_values("slo_requests_total", "tenant")
+        return {
+            "threshold_s": self.config.threshold_s,
+            "objective": self.config.objective,
+            "tenants": {
+                t: {
+                    "requests": self.registry.value("slo_requests_total",
+                                                    tenant=t),
+                    "violations": self.registry.value(
+                        "slo_violations_total", tenant=t),
+                    "burn": self.burn(t),
+                    "ok": self.burn(t) < 1.0,
+                }
+                for t in tenants
+            },
+        }

@@ -271,8 +271,8 @@ def test_streaming_trace_killed_prefix(tmp_path):
     # metric events never land; the last write is torn mid-line
     lines = path.read_text().splitlines()
     path.write_text("\n".join(lines[:-1]) + '\n{"type": "span", "id"')
-    with pytest.raises(json.JSONDecodeError):
-        tcheck.validate_file(str(path))
+    assert any("unparseable" in e
+               for e in tcheck.validate_file(str(path)))
     assert tcheck.validate_file(str(path), allow_partial=True) == []
     assert tcheck.main(["--allow-partial", str(path)]) == 0
     # the surviving events alone still fail strict validation: the round

@@ -1,0 +1,386 @@
+"""Live in-flight telemetry: streaming taps, SLOs, and the dashboard.
+
+The live plane's contract (PR: live-run telemetry) extends the
+observation-only invariant of tests/test_telemetry.py to emission that
+happens *while the compiled program runs*:
+
+  * **live-on == live-off** — enabling the in-flight taps changes no
+    prediction, ledger entry, or accountant release, on either backend,
+    loose or tight budget;
+  * **live == replay** — when the program exits, the tap-fed ``live_*``
+    counters equal the replay-booked ones (wire bits, messages, skips),
+    so the stream was a faithful preview, not an estimate;
+  * **eager == compiled** — both backends produce the same live series
+    (the sink is commutative, compiled tap order is unordered);
+  * fleets and control sweeps stream per-(session, round) taps that sum
+    to the single-session series; shard_map fleets refuse live emission;
+  * a killed run's streamed trace prefix validates under
+    ``--allow-partial`` and still renders a dashboard frame;
+  * bucketed quantile estimates land within one bucket of the true order
+    statistic; per-tenant SLO burn does the error-budget arithmetic.
+"""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import BudgetSpec, BudgetedTransport, GaussianMechanism
+from repro.core import compiled
+from repro.core.compiled import (compiled_session, control_sweep_run,
+                                 fleet_run, plan_for)
+from repro.core.engine import (MeteredTransport, Protocol, SessionConfig,
+                               endpoints_for)
+from repro.core.transport import TransportLog
+from repro.data.partition import train_test_split, vertical_split
+from repro.data.synthetic import blob_fig3
+from repro.learners.logistic import LogisticRegression
+from repro.serve import ServeEngine
+from repro.telemetry import MetricsRegistry, Telemetry
+from repro.telemetry import check as tcheck
+from repro.telemetry import dash as tdash
+from repro.telemetry.export import SCHEMA, load_events
+from repro.telemetry.live import LiveSink, installed
+from repro.telemetry.registry import BUCKET_BOUNDS, bucket_index
+from repro.telemetry.slo import SLOConfig, SLOTracker
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:          # no install allowed: seeded sweep fallback
+    given = None
+
+N_EXAMPLES = 60
+
+
+def property_seeds(n=N_EXAMPLES):
+    """Drive a property from one integer seed: Hypothesis draws (and
+    shrinks) it when available, else a fixed seeded sweep."""
+    if given is not None:
+        def deco(f):
+            return settings(max_examples=n, deadline=None)(
+                given(seed=st.integers(min_value=0,
+                                       max_value=2**63 - 1))(f))
+        return deco
+    return pytest.mark.parametrize("seed", [2_654_435_761 * i % (2**31)
+                                            for i in range(n)])
+
+
+@pytest.fixture(scope="module")
+def blob():
+    ds = blob_fig3(jax.random.key(0), n=240)
+    tr, te = train_test_split(0, 240)
+    Xs = vertical_split(ds.X, ds.splits)
+    return ([x[tr] for x in Xs], ds.classes[tr], [x[te] for x in Xs],
+            ds.num_classes)
+
+
+LOOSE, TIGHT = 600_000, 20_000
+
+
+def _fit_serve(blob, backend, telemetry, session_bits=LOOSE):
+    Xtr, ctr, Xte, k = blob
+    transport = BudgetedTransport(BudgetSpec(session_bits=session_bits),
+                                  log=TransportLog(),
+                                  privacy=GaussianMechanism(epsilon=1.0))
+    proto = Protocol(SessionConfig(num_classes=k, max_rounds=3),
+                     transport=transport, backend=backend,
+                     telemetry=telemetry)
+    eps = endpoints_for([LogisticRegression(steps=40) for _ in Xtr], Xtr)
+    proto.fit(jax.random.key(7), eps, ctr)
+    preds = np.asarray(proto.predict_distributed(Xte))
+    return preds, transport
+
+
+def _live_series(reg):
+    return {name: reg.series(name) for name in reg.counter_names()
+            if name.startswith("live_")}
+
+
+# ----------------------------------------------------- train/serve parity
+@pytest.mark.parametrize("backend", ["eager", "compiled"])
+@pytest.mark.parametrize("session_bits", [LOOSE, TIGHT])
+def test_live_on_off_identical_and_matches_replay(blob, backend,
+                                                  session_bits):
+    tele = Telemetry(live=True)
+    p_on, t_on = _fit_serve(blob, backend, tele, session_bits)
+    p_off, t_off = _fit_serve(blob, backend, None, session_bits)
+    assert (p_on == p_off).all()
+    assert t_on.log.entries == t_off.log.entries
+    assert t_on.accountant.releases == t_off.accountant.releases
+
+    reg = tele.registry
+    assert (reg.total("live_wire_bits_total")
+            == reg.total("wire_bits_total"))
+    assert (reg.value("live_messages_total", kind="ignorance")
+            == reg.value("messages_total", kind="ignorance"))
+    assert (reg.value("live_messages_total", kind="score_block")
+            == reg.value("messages_total", kind="score_block"))
+    assert (reg.total("live_budget_skips_total")
+            == reg.total("budget_skips_total"))
+    if session_bits == TIGHT:      # the tight channel must actually skip
+        assert reg.total("budget_skips_total") > 0
+        assert reg.total("live_exhausted_total") >= 1
+
+
+@pytest.mark.parametrize("session_bits", [LOOSE, TIGHT])
+def test_live_eager_equals_compiled(blob, session_bits):
+    series = {}
+    for backend in ("eager", "compiled"):
+        tele = Telemetry(live=True)
+        _fit_serve(blob, backend, tele, session_bits)
+        series[backend] = _live_series(tele.registry)
+    assert series["eager"] == series["compiled"]
+    assert series["eager"]            # and they actually streamed
+
+
+def test_live_off_emits_nothing(blob):
+    tele = Telemetry()
+    _fit_serve(blob, "compiled", tele)
+    assert _live_series(tele.registry) == {}
+
+
+# ------------------------------------------------------- fleets and sweeps
+def test_fleet_live_matches_dark_and_sums(blob):
+    Xtr, ctr, _, k = blob
+    plan = plan_for([LogisticRegression(steps=30) for _ in Xtr], k,
+                    max_rounds=2)
+    keys = jax.random.split(jax.random.key(3), 3)
+    dark = fleet_run(plan, keys, Xtr, ctr)
+
+    reg = MetricsRegistry()
+    with installed(LiveSink(reg)):
+        live = fleet_run(plan, keys, Xtr, ctr, live=True)
+    np.testing.assert_array_equal(np.asarray(dark.alphas),
+                                  np.asarray(live.alphas))
+    np.testing.assert_array_equal(np.asarray(dark.w), np.asarray(live.w))
+
+    singles = 0
+    for s in range(3):
+        r = MetricsRegistry()
+        with installed(LiveSink(r)):
+            compiled_session(plan, keys[s], Xtr, ctr, live=True)
+        singles += r.total("live_wire_bits_total")
+    assert reg.total("live_wire_bits_total") == singles
+    assert reg.total("live_rounds_total") == 3 * 2
+
+
+def test_fleet_live_refuses_shard_map(blob):
+    Xtr, ctr, _, k = blob
+    plan = plan_for([LogisticRegression(steps=30) for _ in Xtr], k,
+                    max_rounds=2)
+    keys = jax.random.split(jax.random.key(3), 2)
+    with pytest.raises(ValueError, match="shard_map"):
+        fleet_run(plan, keys, Xtr, ctr, shard_axis="data", live=True)
+
+
+def test_control_sweep_live_matches_dark(blob):
+    Xtr, ctr, _, k = blob
+    plan = plan_for([LogisticRegression(steps=30) for _ in Xtr], k,
+                    max_rounds=2, budget=BudgetSpec(session_bits=LOOSE))
+    keys = jax.random.split(jax.random.key(5), 2)
+    bits = [TIGHT, LOOSE]
+    dark = control_sweep_run(plan, keys, Xtr, ctr, session_bits=bits)
+    reg = MetricsRegistry()
+    with installed(LiveSink(reg)):
+        live = control_sweep_run(plan, keys, Xtr, ctr, session_bits=bits,
+                                 live=True)
+    np.testing.assert_array_equal(np.asarray(dark.alphas),
+                                  np.asarray(live.alphas))
+    # one tap per (config, executed round): the tight config's post-
+    # exhaustion rounds stream as inactive and the sink drops them
+    assert (reg.total("live_rounds_total")
+            == int(np.asarray(dark.executed).any(-1).sum()))
+
+
+# ------------------------------------------------------------- serve + SLO
+def test_serve_engine_live_taps_and_slo(blob):
+    Xtr, ctr, Xte, k = blob
+    protos = {}
+    for s in range(2):
+        proto = Protocol(SessionConfig(num_classes=k, max_rounds=2),
+                         transport=MeteredTransport(), backend="compiled")
+        proto.fit(jax.random.key(100 + s),
+                  endpoints_for([LogisticRegression(steps=30)
+                                 for _ in Xtr], Xtr), ctr)
+        protos[f"s{s}"] = proto
+
+    tele = Telemetry(live=True)
+    engine = ServeEngine(cache_capacity=2, max_batch=4, telemetry=tele,
+                         slo=SLOConfig(threshold_s=60.0, objective=0.9))
+    for sid, proto in protos.items():
+        engine.add_session(sid, proto)
+    for rid in range(6):
+        engine.submit(f"t{rid % 2}", f"s{rid % 2}",
+                      [x[:16] for x in Xte], request=rid)
+    engine.flush()
+
+    reg = tele.registry
+    assert reg.total("live_serve_requests_total") == 6
+    assert reg.total("serve_requests_total") == 6
+    for t in ("t0", "t1"):
+        hist = reg.histogram("request_seconds", tenant=t)
+        assert hist is not None and hist["count"] == 3
+        # nothing takes a minute: the generous SLO must be clean
+        assert reg.value("slo_requests_total", tenant=t) == 3
+        assert reg.value("slo_violations_total", tenant=t) == 0
+    slo = engine.summary()["slo"]
+    assert slo["objective"] == 0.9
+    assert all(v["ok"] for v in slo["tenants"].values())
+    engine.close()
+
+
+class TestSLOTracker:
+    def test_burn_arithmetic(self):
+        tr = SLOTracker(SLOConfig(threshold_s=0.1, objective=0.9),
+                        MetricsRegistry())
+        for s in (0.01, 0.01, 0.25, 0.01, 0.01):   # 1 violation / 5
+            tr.observe("a", s)
+        # budget fraction is 0.1, so 1/5 violations == burn 2.0
+        assert tr.burn("a") == pytest.approx(2.0)
+        assert tr.report()["tenants"]["a"]["ok"] is False
+        assert tr.registry.gauge("slo_burn", tenant="a") == \
+            pytest.approx(2.0)
+
+    def test_denial_counts_as_violation(self):
+        tr = SLOTracker(SLOConfig(threshold_s=0.1, objective=0.5),
+                        MetricsRegistry())
+        tr.observe("a", 0.01)
+        tr.record_denial("a")
+        assert tr.registry.value("slo_requests_total", tenant="a") == 2
+        assert tr.registry.value("slo_violations_total", tenant="a") == 1
+        assert tr.burn("a") == pytest.approx(1.0)
+
+    def test_unseen_tenant_burns_nothing(self):
+        tr = SLOTracker(SLOConfig(), MetricsRegistry())
+        assert tr.burn("ghost") == 0.0
+        assert tr.report()["tenants"] == {}
+
+    @pytest.mark.parametrize("kw", [{"threshold_s": 0.0},
+                                    {"threshold_s": -1.0},
+                                    {"objective": 0.0},
+                                    {"objective": 1.0}])
+    def test_config_validation(self, kw):
+        with pytest.raises(ValueError):
+            SLOConfig(**kw)
+
+
+# ----------------------------------------------------- quantile estimation
+@property_seeds()
+def test_quantile_within_one_bucket(seed):
+    """The bucketed estimate of any quantile lands in the true order
+    statistic's bucket or an adjacent one — the histogram's resolution
+    bound, for arbitrary positive samples across the bucket range."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 200))
+    xs = np.exp(rng.uniform(np.log(BUCKET_BOUNDS[0]),
+                            np.log(BUCKET_BOUNDS[-1]), size=n))
+    reg = MetricsRegistry()
+    for x in xs:
+        reg.observe("lat", float(x))
+    for q in (0.5, 0.9, 0.99):
+        est = reg.quantile("lat", q)
+        true = float(np.sort(xs)[min(n - 1, int(np.ceil(q * n)) - 1)])
+        assert est is not None
+        assert abs(bucket_index(est) - bucket_index(true)) <= 1, \
+            f"q={q}: estimate {est} vs order statistic {true}"
+
+
+# ------------------------------------------- killed runs and the dashboard
+def _streamed_live_trace(blob, path):
+    tele = Telemetry(live=True)
+    tele.stream_trace(str(path))
+    _fit_serve(blob, "compiled", tele, TIGHT)
+    return tele
+
+
+def test_killed_live_trace_validates_and_renders(blob, tmp_path, capsys):
+    path = tmp_path / "trace.jsonl"
+    _streamed_live_trace(blob, path)        # never sealed == killed run
+    lines = path.read_text().splitlines()
+    live_lines = [ln for ln in lines if '"type": "live"' in ln]
+    assert live_lines, "live events must stream before the seal"
+    # tear the final line mid-write, as a kill would
+    torn = tmp_path / "torn.jsonl"
+    torn.write_text("\n".join(lines[:-1]) + "\n" + lines[-1][:10])
+
+    assert tcheck.validate_file(str(torn), allow_partial=True) == []
+    assert tcheck.main([str(torn), "--allow-partial"]) == 0
+    assert tcheck.main([str(torn)]) == 1
+    capsys.readouterr()
+
+    # the dashboard CLI renders a frame from the prefix and exits clean
+    assert tdash.main([str(torn)]) == 0
+    out = capsys.readouterr()
+    frame = out.out + out.err
+    assert "live events" in frame
+    assert "round" in frame
+
+
+def test_dashboard_render_sections(blob):
+    tele = Telemetry(live=True)
+    _fit_serve(blob, "compiled", tele, TIGHT)
+    tele.registry.observe("request_seconds", 0.003, tenant="t0")
+    sink = tele.live
+    frame = tdash.render(tele.registry, sink=sink, title="unit")
+    assert "unit" in frame
+    assert "wire" in frame
+    assert "p50" in frame and "p99" in frame
+    assert "skips" in frame
+
+
+def test_dashboard_events_drive_draw(tmp_path):
+    import io
+    reg = MetricsRegistry()
+    stream = io.StringIO()
+    dash = tdash.Dashboard(reg, title="t", min_interval=0.0,
+                           stream=stream)
+    sink = LiveSink(reg)
+    dash.attach(sink)
+    sink.round_tap(0, 128, 2, 0, 0)
+    sink.serve_tap(64, 1, 0)
+    dash.final()
+    text = stream.getvalue()
+    assert "t" in text and "wire" in text
+    assert reg.total("live_rounds_total") == 1
+
+
+# ------------------------------------------------------------ trace schema
+def _meta(version):
+    return {"type": "meta", "schema": SCHEMA, "version": version}
+
+
+def test_v1_traces_still_validate():
+    events = [_meta(1),
+              {"type": "counter", "name": "wire_bits_total",
+               "labels": {}, "value": 10}]
+    assert tcheck.validate_events(events) == []
+
+
+def test_live_events_rejected_in_v1_accepted_in_v2():
+    live = {"type": "live", "tag": "round", "t": 0, "bits": 1,
+            "sent": 1, "skipped": 0, "exhausted": 0, "t_s": 0.0}
+    assert any("v1" in e
+               for e in tcheck.validate_events([_meta(1), live]))
+    assert tcheck.validate_events([_meta(2), live]) == []
+
+
+def test_live_event_requires_tag():
+    bad = {"type": "live", "bits": 1}
+    errs = tcheck.validate_events([_meta(2), bad])
+    assert any("tag" in e for e in errs)
+
+
+def test_streamed_trace_reloads_equal_registry(blob, tmp_path):
+    path = tmp_path / "trace.jsonl"
+    tele = _streamed_live_trace(blob, path)
+    tele.write_artifacts(trace=str(path))    # seal: registry + spans
+    events = load_events(str(path))
+    assert events[0]["version"] == 2
+    reloaded = MetricsRegistry.from_events(
+        [e for e in events if e["type"] in
+         ("counter", "gauge", "histogram")])
+    for name in tele.registry.counter_names():
+        assert reloaded.series(name) == tele.registry.series(name)
